@@ -1,0 +1,86 @@
+//! Long-context decode with the §6.2 sparse static KV cache: prefill a
+//! 16K-token context once, prune it (30% K / 50% V), then decode with
+//! the sparse attention kernel and compare modeled latency against the
+//! dense cache.
+//!
+//! ```sh
+//! cargo run --release --offline --example long_context_kv
+//! ```
+
+use sparamx::amx::EventCounters;
+use sparamx::kvcache::attention::{attend_dense_ref, attend_sparse};
+use sparamx::kvcache::cache::HeadCache;
+use sparamx::perf::{cost::KernelCost, Machine};
+use sparamx::util::XorShift;
+
+fn main() {
+    // one kv-head of a Llama-scale model at 16K context, scaled-down
+    // functional check at 2K (the full 16K runs through the analytic
+    // model; the numerics are context-length independent)
+    let (ctx, hd) = (2048usize, 128usize);
+    let mut g = XorShift::new(11);
+    let k = g.normal_vec(ctx * hd, 1.0);
+    let v = g.normal_vec(ctx * hd, 1.0);
+    let q = g.normal_vec(hd, 1.0);
+
+    println!("prefilling {ctx}-token context, pruning K 30% / V 50% ...");
+    let mut hc = HeadCache::from_prefill(&k, &v, ctx, hd, 0.3, 0.5);
+    println!(
+        "static cache: {} B sparse (dense would be {} B)",
+        hc.bytes(),
+        2 * ctx * hd * 2
+    );
+
+    // decode 4 tokens into the dynamic tail
+    let mut ctr = EventCounters::default();
+    let mut out = Vec::new();
+    for _ in 0..4 {
+        out = attend_sparse(&hc, &q, &mut ctr);
+        let new_k = g.normal_vec(hd, 1.0);
+        let new_v = g.normal_vec(hd, 1.0);
+        hc.append(&new_k, &new_v);
+    }
+    println!(
+        "decoded 4 tokens; cache now {} static + {} dynamic positions",
+        hc.n_static,
+        hc.dyn_len()
+    );
+
+    // sanity: output close to the dense reference over the same cache
+    let dense = attend_dense_ref(&k, &v, ctx, hd, &q);
+    let rms: f32 = (out
+        .iter()
+        .zip(dense.iter())
+        .map(|(a, b)| (a - b) * (a - b))
+        .sum::<f32>()
+        / hd as f32)
+        .sqrt();
+    println!("attention output RMS deviation from unpruned dense: {rms:.4}");
+
+    // modeled 16K-context step on the target machine
+    let m = Machine::sapphire_rapids(32);
+    let big_ctx = 16_384;
+    let layers_heads = 32 * 8; // Llama 3 8B layers × kv heads
+    let nnz_k = (0.7 * (hd * big_ctx) as f64) as usize;
+    let nnz_v = (0.5 * (big_ctx * hd) as f64) as usize;
+    let sparse_t = (KernelCost::from_counters(
+        &sparamx::perf::analytic::sparse_bf16(1, hd, big_ctx, nnz_k),
+        &m,
+    )
+    .time
+        + KernelCost::from_counters(
+            &sparamx::perf::analytic::sparse_bf16(1, big_ctx, hd, nnz_v),
+            &m,
+        )
+        .time)
+        * layers_heads as f64;
+    let dense_t = (KernelCost::from_counters(&sparamx::perf::analytic::dense_bf16(1, hd, big_ctx), &m).time
+        + KernelCost::from_counters(&sparamx::perf::analytic::dense_bf16(1, big_ctx, hd), &m).time)
+        * layers_heads as f64;
+    println!(
+        "modeled 16K-ctx attention / decode step on 32-core SPR: dense {:.2} ms, sparse {:.2} ms → {:.2}x (paper: 1.14x end-to-end)",
+        dense_t * 1e3,
+        sparse_t * 1e3,
+        dense_t / sparse_t
+    );
+}

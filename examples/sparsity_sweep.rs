@@ -1,0 +1,48 @@
+//! Reproduce-your-own Fig 11: sweep sparsity × cores for any model
+//! config from the CLI.
+//!
+//! ```sh
+//! cargo run --release --offline --example sparsity_sweep -- \
+//!     --model llama3-8b --cores 8,16,32 --sparsities 0.3,0.5,0.7,0.9
+//! ```
+
+use sparamx::baselines::systems::{decode_step_cost, Baseline, Precision};
+use sparamx::bench::harness::{report_header, report_row};
+use sparamx::models::ModelConfig;
+use sparamx::perf::Machine;
+use sparamx::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let model_name = args.get("model", "llama3-8b");
+    let Some(cfg) = ModelConfig::by_name(&model_name) else {
+        eprintln!("unknown model {model_name}; options: llama3-8b, llama3.2-3b, llama3.2-1b, llama2-7b, tiny");
+        std::process::exit(2);
+    };
+    let cores = args.get_list("cores", &[8usize, 16, 32]);
+    let sparsities = args.get_list("sparsities", &[0.0, 0.3, 0.5, 0.7, 0.9]);
+    let ctx: usize = args.get_parse("ctx", 512);
+    let batch: usize = args.get_parse("batch", 1);
+
+    for &c in &cores {
+        let m = Machine::sapphire_rapids(c);
+        let py = decode_step_cost(&cfg, Baseline::PyTorch, Precision::Bf16, batch, ctx, 0.0, &m);
+        report_header(
+            &format!("{model_name} — {c} cores, ctx {ctx}, batch {batch}"),
+            &["sparsity", "pytorch ms/tok", "AMX sparse ms/tok", "AVX sparse ms/tok", "AMX speedup"],
+        );
+        for &s in &sparsities {
+            let amx =
+                decode_step_cost(&cfg, Baseline::SparAmxSparse, Precision::Bf16, batch, ctx, s, &m);
+            let avx =
+                decode_step_cost(&cfg, Baseline::SparAvxSparse, Precision::Bf16, batch, ctx, s, &m);
+            report_row(&[
+                format!("{:.0}%", s * 100.0),
+                format!("{:.2}", py * 1e3 / batch as f64),
+                format!("{:.2}", amx * 1e3 / batch as f64),
+                format!("{:.2}", avx * 1e3 / batch as f64),
+                format!("{:.2}x", py / amx),
+            ]);
+        }
+    }
+}

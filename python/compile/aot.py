@@ -1,0 +1,167 @@
+"""AOT export: lower the Layer-2 model (with its Layer-1 Pallas kernels)
+to HLO **text** and write the artifact bundle Rust serves from.
+
+HLO text — not ``.serialize()`` — is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids which the image's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids (see /opt/xla-example/README.md).
+
+Artifacts written to ``--out`` (default ``../artifacts``):
+
+| file | computation |
+|---|---|
+| ``decode_step.hlo.txt``  | one batched decode step (params as inputs) |
+| ``prefill.hlo.txt``      | fixed-length prompt prefill |
+| ``eval_logits.hlo.txt``  | per-position logits for perplexity |
+| ``sparse_gemm.hlo.txt``  | standalone L1 sparse kernel (fixed shape) |
+| ``int8_gemm.hlo.txt``    | standalone L1 INT8 sparse kernel |
+| ``weights.bin``          | trained parameters (see io.py) |
+| ``eval_tokens.bin``      | held-out eval tokens |
+| ``manifest.json``        | shapes + input orders for the Rust runtime |
+
+Run: ``python -m compile.aot --out ../artifacts [--steps N]``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import io, model, trainer
+from .kernels.int8_gemm import int8_sparse_gemm
+from .kernels.sparse_gemm import sparse_gemm
+
+# Fixed shapes for the serving artifacts (recorded in the manifest).
+DECODE_BATCH = 4
+GEMM_SHAPE = dict(batch=2, k=128, n=352, vmax=None)  # vmax filled at export
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def export(out_dir: str, train_steps: int) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    cfg = model.TINY_CONFIG
+    layers, kvh, hd = cfg["layers"], cfg["kv_heads"], cfg["head_dim"]
+    maxc, vocab = cfg["max_ctx"], cfg["vocab"]
+    b = DECODE_BATCH
+
+    # ---- train the tiny checkpoint -----------------------------------
+    params, loss_log, eval_tokens = trainer.train(steps=train_steps)
+    io.write_weights(f"{out_dir}/weights.bin", trainer.flatten_params(params))
+    io.write_tokens(f"{out_dir}/eval_tokens.bin", eval_tokens)
+    with open(f"{out_dir}/train_log.txt", "w") as f:
+        for step, loss in loss_log:
+            f.write(f"{step}\t{loss:.6f}\n")
+
+    param_specs = jax.tree.map(lambda x: spec(x.shape), params)
+    manifest: dict = {
+        "config": cfg,
+        "decode_batch": b,
+        "prefill_len": model.PREFILL_LEN,
+        "eval_len": model.EVAL_LEN,
+        "params": [
+            {"name": n, "shape": list(s)} for n, s in model.param_manifest(params)
+        ],
+        "train_loss": [[s, l] for s, l in loss_log],
+        "artifacts": {},
+    }
+
+    # ---- decode_step --------------------------------------------------
+    lowered = jax.jit(model.decode_step).lower(
+        param_specs,
+        spec((b,), jnp.int32),
+        spec((b,), jnp.int32),
+        spec((layers, b, kvh, maxc, hd)),
+        spec((layers, b, kvh, maxc, hd)),
+        spec((b,), jnp.int32),
+    )
+    _write(out_dir, "decode_step", lowered, manifest,
+           inputs="params..., token[i32 B], pos[i32 B], k_cache, v_cache, cache_len[i32 B]",
+           outputs="logits[B,V], k_cache', v_cache'")
+
+    # ---- prefill -------------------------------------------------------
+    lowered = jax.jit(model.prefill).lower(
+        param_specs, spec((b, model.PREFILL_LEN), jnp.int32)
+    )
+    _write(out_dir, "prefill", lowered, manifest,
+           inputs="params..., tokens[i32 B,S]",
+           outputs="logits[B,V], k[L,B,kvh,S,hd], v[L,B,kvh,S,hd]")
+
+    # ---- eval_logits ----------------------------------------------------
+    lowered = jax.jit(model.eval_logits).lower(
+        param_specs, spec((1, model.EVAL_LEN), jnp.int32)
+    )
+    _write(out_dir, "eval_logits", lowered, manifest,
+           inputs="params..., tokens[i32 1,S]", outputs="logits[1,S,V]")
+
+    # ---- standalone L1 kernels ------------------------------------------
+    k_dim, n = GEMM_SHAPE["k"], GEMM_SHAPE["n"]
+    cb = -(-n // 16)
+    vmax = k_dim * 16  # worst case: fully dense block
+    GEMM_SHAPE["vmax"] = vmax
+    lowered = jax.jit(sparse_gemm, static_argnames=("n_logical",)).lower(
+        spec((GEMM_SHAPE["batch"], k_dim)),
+        spec((cb, k_dim), jnp.uint32),
+        spec((cb, vmax)),
+        n_logical=n,
+    )
+    _write(out_dir, "sparse_gemm", lowered, manifest,
+           inputs=f"x[{GEMM_SHAPE['batch']},{k_dim}], mask[{cb},{k_dim}]u32, vals[{cb},{vmax}]",
+           outputs=f"out[{GEMM_SHAPE['batch']},{n}]")
+
+    lowered = jax.jit(int8_sparse_gemm, static_argnames=("n_logical",)).lower(
+        spec((GEMM_SHAPE["batch"], k_dim), jnp.int8),
+        spec((cb, k_dim), jnp.uint32),
+        spec((cb, vmax), jnp.int8),
+        n_logical=n,
+    )
+    _write(out_dir, "int8_gemm", lowered, manifest,
+           inputs="x[i8], mask[u32], vals[i8]", outputs="out[i32]")
+
+    manifest["gemm_shape"] = GEMM_SHAPE
+    with open(f"{out_dir}/manifest.json", "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"artifacts complete in {out_dir}")
+
+
+def _write(out_dir, name, lowered, manifest, inputs, outputs):
+    text = to_hlo_text(lowered)
+    path = f"{out_dir}/{name}.hlo.txt"
+    with open(path, "w") as f:
+        f.write(text)
+    manifest["artifacts"][name] = {
+        "file": f"{name}.hlo.txt",
+        "inputs": inputs,
+        "outputs": outputs,
+        "hlo_bytes": len(text),
+    }
+    print(f"wrote {path} ({len(text)} chars)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=300,
+                    help="training steps for the tiny checkpoint")
+    args = ap.parse_args()
+    export(args.out, args.steps)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Binary weight/token interchange between the build (Python) and serve
+(Rust) layers.
+
+``weights.bin`` format (little-endian):
+  magic  b"SPX1"
+  u32    tensor count
+  per tensor:
+    u16   name length, name bytes (utf-8)
+    u8    ndim
+    u32×n dims
+    f32×∏ data (row-major)
+
+``eval_tokens.bin``: magic b"SPT1", u32 count, u8×count token bytes.
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+WEIGHTS_MAGIC = b"SPX1"
+TOKENS_MAGIC = b"SPT1"
+
+
+def write_weights(path: str, named: list[tuple[str, np.ndarray]]) -> None:
+    with open(path, "wb") as f:
+        f.write(WEIGHTS_MAGIC)
+        f.write(struct.pack("<I", len(named)))
+        for name, arr in named:
+            arr = np.ascontiguousarray(arr, dtype=np.float32)
+            nb = name.encode()
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<B", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.tobytes())
+
+
+def read_weights(path: str) -> list[tuple[str, np.ndarray]]:
+    with open(path, "rb") as f:
+        assert f.read(4) == WEIGHTS_MAGIC, "bad magic"
+        (count,) = struct.unpack("<I", f.read(4))
+        out = []
+        for _ in range(count):
+            (nlen,) = struct.unpack("<H", f.read(2))
+            name = f.read(nlen).decode()
+            (ndim,) = struct.unpack("<B", f.read(1))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim))
+            n = int(np.prod(dims)) if ndim else 1
+            data = np.frombuffer(f.read(4 * n), dtype="<f4").reshape(dims)
+            out.append((name, data.copy()))
+        return out
+
+
+def write_tokens(path: str, tokens: np.ndarray) -> None:
+    tokens = np.asarray(tokens, dtype=np.uint8)
+    with open(path, "wb") as f:
+        f.write(TOKENS_MAGIC)
+        f.write(struct.pack("<I", tokens.size))
+        f.write(tokens.tobytes())
+
+
+def read_tokens(path: str) -> np.ndarray:
+    with open(path, "rb") as f:
+        assert f.read(4) == TOKENS_MAGIC, "bad magic"
+        (count,) = struct.unpack("<I", f.read(4))
+        return np.frombuffer(f.read(count), dtype=np.uint8).copy()

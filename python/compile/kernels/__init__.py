@@ -1,0 +1,7 @@
+"""Layer-1 Pallas kernels (build-time only; lowered into the AOT HLO)."""
+
+from . import packing, ref  # noqa: F401
+from .dense_gemm import dense_gemm, dense_gemm_bf16  # noqa: F401
+from .int8_gemm import int8_sparse_gemm  # noqa: F401
+from .sparse_gemm import sparse_gemm  # noqa: F401
+from .attention import sparse_kv_attention  # noqa: F401

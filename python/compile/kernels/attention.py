@@ -1,0 +1,93 @@
+"""Layer-1 Pallas kernel: decode attention over a sparse static KV cache
+(§6.2), fused QKᵀ → softmax → R·V per kv-head.
+
+The prefilled cache arrives compressed (bitmap + values for Kᵀ and V,
+per kv-head); the dynamic tail (tokens generated since prefill) arrives
+dense. One program per kv-head:
+
+1. decompress Kᵀ ``[hd, ctx]`` and V ``[ctx, hd]`` into VMEM,
+2. ``scores = q · Kᵀ / sqrt(hd)`` over [static ‖ dynamic] positions,
+3. masked softmax (positions ≥ ``dyn_len`` in the tail are padding),
+4. ``out = probs · V``.
+
+GQA is folded in: the ``group`` query heads that share this kv-head are
+the leading axis of ``q`` — no `repeat_kv` materialization (the §6.2
+6×-faster cache-management claim).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import decompress_all
+
+
+def _kernel(q_ref, kt_mask_ref, kt_vals_ref, v_mask_ref, v_vals_ref,
+            k_dyn_ref, v_dyn_ref, dyn_len_ref, o_ref):
+    q = q_ref[0]  # [group, hd]
+    hd = q.shape[-1]
+    kt_static = decompress_all(kt_mask_ref[0], kt_vals_ref[0], q.dtype)  # [hd, ctx_s]
+    # V's packed columns are head_dim, padded to a multiple of 16 — slice back
+    v_static = decompress_all(v_mask_ref[0], v_vals_ref[0], q.dtype)[:, :hd]
+    ctx_s = kt_static.shape[1]
+    k_dyn = k_dyn_ref[0]  # [max_dyn, hd]
+    v_dyn = v_dyn_ref[0]
+    dyn_len = dyn_len_ref[0]
+
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, q.dtype))
+    s_static = jnp.dot(q, kt_static, preferred_element_type=jnp.float32)
+    s_dyn = jnp.dot(q, k_dyn.T, preferred_element_type=jnp.float32)
+    scores = jnp.concatenate([s_static, s_dyn], axis=1) * scale  # [group, ctx_s+max_dyn]
+    pos = jnp.arange(scores.shape[1])
+    valid = pos < (ctx_s + dyn_len)
+    scores = jnp.where(valid, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.dot(probs[:, :ctx_s], v_static, preferred_element_type=jnp.float32)
+    out = out + jnp.dot(probs[:, ctx_s:], v_dyn, preferred_element_type=jnp.float32)
+    o_ref[0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def sparse_kv_attention(q, kt_mask, kt_vals, v_mask, v_vals, k_dyn, v_dyn, dyn_len):
+    """Fused decode attention over the split cache.
+
+    Args:
+      q: ``f32[kv_heads, group, hd]`` — query heads grouped by kv-head.
+      kt_mask/kt_vals: packed Kᵀ per head (``[kv_heads, cb_ctx, hd]`` /
+        ``[kv_heads, cb_ctx, Vmax]``), ctx padded to a multiple of 16.
+      v_mask/v_vals: packed V per head (``[kv_heads, cb_hd, ctx_s]`` /
+        ``[kv_heads, cb_hd, Vmax2]``).
+      k_dyn/v_dyn: dense dynamic tail ``f32[kv_heads, max_dyn, hd]``.
+      dyn_len: ``int32[kv_heads]`` — live rows in the tail.
+
+    Returns:
+      ``f32[kv_heads, group, hd]`` attention outputs.
+    """
+    kv_heads, group, hd = q.shape
+    cb_ctx, _ = kt_mask.shape[1:]
+    # the kernel cannot mask Kᵀ column padding, so the static context
+    # length must be exact (prefill lengths are multiples of 16)
+    assert kt_mask.shape[2] == hd, "kt_mask must be [kv_heads, cb_ctx, hd]"
+    assert cb_ctx * 16 == v_mask.shape[2], "static ctx must be a multiple of 16"
+    max_dyn = k_dyn.shape[1]
+    return pl.pallas_call(
+        _kernel,
+        grid=(kv_heads,),
+        in_specs=[
+            pl.BlockSpec((1, group, hd), lambda h: (h, 0, 0)),
+            pl.BlockSpec((1,) + kt_mask.shape[1:], lambda h: (h, 0, 0)),
+            pl.BlockSpec((1,) + kt_vals.shape[1:], lambda h: (h, 0, 0)),
+            pl.BlockSpec((1,) + v_mask.shape[1:], lambda h: (h, 0, 0)),
+            pl.BlockSpec((1,) + v_vals.shape[1:], lambda h: (h, 0, 0)),
+            pl.BlockSpec((1, max_dyn, hd), lambda h: (h, 0, 0)),
+            pl.BlockSpec((1, max_dyn, hd), lambda h: (h, 0, 0)),
+            pl.BlockSpec((1,), lambda h: (h,)),
+        ],
+        out_specs=pl.BlockSpec((1, group, hd), lambda h: (h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((kv_heads, group, hd), q.dtype),
+        interpret=True,
+    )(q, kt_mask, kt_vals, v_mask, v_vals, k_dyn, v_dyn, dyn_len)

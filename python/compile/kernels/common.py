@@ -1,0 +1,56 @@
+"""Shared in-kernel decompression for the Pallas kernels.
+
+The TPU re-think of the paper's AVX-512 decompression (DESIGN.md
+§Hardware-Adaptation): the `vpexpandw` + `vpopcntd` + prefix-sum sequence
+becomes a vectorized *bit-rank gather* —
+
+1. per inner-dim row ``k``: ``counts[k] = popcount(mask[k])``
+   (`vpopcntd`),
+2. exclusive prefix-sum of ``counts`` → ``row_start`` (Algorithm 1),
+3. per (row, column) lane: rank = popcount of the mask bits *below* the
+   lane → ``vals[row_start + rank]`` (`vpexpandw`'s scatter, expressed as
+   a gather so it vectorizes on the VPU),
+
+producing the dense 16-column weight block in VMEM scratch that the MXU
+then consumes — HBM only ever sees the compressed stream.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+COLS_PER_BLOCK = 16
+
+
+def decompress_block(mask, vals, out_dtype):
+    """Expand one column block.
+
+    Args:
+      mask: ``uint32[K]`` — 16-bit column bitmaps per inner-dim row.
+      vals: ``[Vmax]`` packed non-zeros (k-major, column order).
+      out_dtype: element type of the dense block.
+
+    Returns:
+      ``[K, 16]`` dense weight block.
+    """
+    k_dim = mask.shape[0]
+    counts = jnp.bitwise_count(mask).astype(jnp.int32)  # vpopcntd
+    row_start = jnp.cumsum(counts) - counts  # exclusive prefix sum
+    lanes = jnp.arange(COLS_PER_BLOCK, dtype=jnp.uint32)
+    below = (jnp.uint32(1) << lanes) - jnp.uint32(1)  # bits strictly below lane
+    m = mask.reshape(k_dim, 1)
+    bit = (m >> lanes) & jnp.uint32(1)  # [K, 16]
+    rank = jnp.bitwise_count(m & below).astype(jnp.int32)  # [K, 16]
+    idx = row_start.reshape(k_dim, 1) + rank
+    gathered = jnp.take(vals, jnp.clip(idx, 0, vals.shape[0] - 1), axis=0)
+    return jnp.where(bit == 1, gathered.astype(out_dtype), jnp.zeros((), out_dtype))
+
+
+def decompress_all(mask, vals, out_dtype):
+    """Expand every column block: ``mask[cb, K]``, ``vals[cb, Vmax]`` →
+    dense ``[K, cb*16]`` (used by the fused attention kernel)."""
+    import jax
+
+    blocks = jax.vmap(lambda m, v: decompress_block(m, v, out_dtype))(mask, vals)
+    # blocks: [cb, K, 16] → [K, cb*16]
+    return blocks.transpose(1, 0, 2).reshape(mask.shape[1], -1)

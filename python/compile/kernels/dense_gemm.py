@@ -1,0 +1,67 @@
+"""Layer-1 Pallas kernel: dense blocked GEMM (§4.1's 8-tile schedule,
+re-thought for TPU).
+
+The AMX schedule's essence — accumulators stay resident while input and
+weight tiles stream — maps to a Pallas grid over (row block, column
+block) with the full inner dimension contracted per program: the MXU
+accumulates in registers/VMEM, and `BlockSpec` expresses the HBM→VMEM
+schedule the paper wrote with explicit `tileloadd`s.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+COL_BLOCK = 128
+ROW_BLOCK = 32
+
+
+def _kernel(x_ref, w_ref, o_ref):
+    o_ref[...] = jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def _pad(a, axis, to):
+    size = a.shape[axis]
+    pad = (-size) % to
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths)
+
+
+@jax.jit
+def dense_gemm(x, w):
+    """``x[B, K] @ w[K, N]`` via the blocked Pallas kernel."""
+    b, k_dim = x.shape
+    _, n = w.shape
+    xp = _pad(x, 0, ROW_BLOCK)
+    wp = _pad(w, 1, COL_BLOCK)
+    bp, np_ = xp.shape[0], wp.shape[1]
+    out = pl.pallas_call(
+        _kernel,
+        grid=(bp // ROW_BLOCK, np_ // COL_BLOCK),
+        in_specs=[
+            pl.BlockSpec((ROW_BLOCK, k_dim), lambda i, j: (i, 0)),
+            pl.BlockSpec((k_dim, COL_BLOCK), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((ROW_BLOCK, COL_BLOCK), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bp, np_), x.dtype),
+        interpret=True,
+    )(xp, wp)
+    return out[:b, :n]
+
+
+@functools.partial(jax.jit, static_argnames=())
+def dense_gemm_bf16(x, w):
+    """BF16-storage variant: operands round through bfloat16 (as the AMX
+    tile unit consumes them), accumulation in f32."""
+    xb = x.astype(jnp.bfloat16).astype(jnp.float32)
+    wb = w.astype(jnp.bfloat16).astype(jnp.float32)
+    return dense_gemm(xb, wb)

@@ -1,0 +1,100 @@
+"""Host-side packing into the SparAMX bitmap + values format (Layer 1).
+
+This is the Python twin of the Rust `sparse::format` module, specialized
+for the Pallas kernels' layout:
+
+* the weight matrix ``W[K][N]`` is carved into **column blocks** of 16
+  output neurons (the paper's AMX tile width / the kernels' grid
+  dimension);
+* per column block ``b``, ``mask[b, k]`` is a 16-bit bitmap (stored
+  uint32) over the block's 16 columns at inner-dim position ``k``
+  (``bit c`` set ⟺ ``W[k, 16b + c] != 0``);
+* ``vals[b]`` holds the block's non-zeros in ``k``-major, then
+  column-order — exactly the order a `vpexpandw`-style expansion
+  consumes — zero-padded to the max block ``nnz`` so the array is
+  rectangular for XLA.
+
+Packing happens once at model-load time (build time here); the kernels
+never see dense weights in HBM.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+COLS_PER_BLOCK = 16
+
+
+def pack_mask_vals(w: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Pack dense ``w[K, N]`` → ``(mask[cb, K] uint32, vals[cb, Vmax])``.
+
+    ``N`` is zero-padded up to a multiple of 16 (padding columns carry no
+    mask bits, hence no values). ``vals`` keeps ``w``'s dtype.
+    """
+    if w.ndim != 2:
+        raise ValueError(f"expected 2-D weights, got shape {w.shape}")
+    k_dim, n = w.shape
+    cb = -(-n // COLS_PER_BLOCK)
+    n_pad = cb * COLS_PER_BLOCK
+    if n_pad != n:
+        w = np.concatenate([w, np.zeros((k_dim, n_pad - n), dtype=w.dtype)], axis=1)
+
+    blocks = w.reshape(k_dim, cb, COLS_PER_BLOCK).transpose(1, 0, 2)  # [cb, K, 16]
+    nz = blocks != 0
+    # mask[b, k] = sum_c nz[b,k,c] << c
+    weights_of_bits = (1 << np.arange(COLS_PER_BLOCK, dtype=np.uint32))
+    mask = (nz.astype(np.uint32) * weights_of_bits).sum(axis=2).astype(np.uint32)
+
+    counts = nz.reshape(cb, -1).sum(axis=1)
+    vmax = max(int(counts.max()) if cb else 0, 1)
+    vals = np.zeros((cb, vmax), dtype=w.dtype)
+    for b in range(cb):
+        vals[b, : counts[b]] = blocks[b][nz[b]]  # row-major: k-major, col order
+    return mask, vals
+
+
+def unpack_mask_vals(
+    mask: np.ndarray, vals: np.ndarray, n: int
+) -> np.ndarray:
+    """Inverse of :func:`pack_mask_vals` (testing oracle)."""
+    cb, k_dim = mask.shape
+    out = np.zeros((k_dim, cb * COLS_PER_BLOCK), dtype=vals.dtype)
+    for b in range(cb):
+        vi = 0
+        for k in range(k_dim):
+            m = int(mask[b, k])
+            for c in range(COLS_PER_BLOCK):
+                if m >> c & 1:
+                    out[k, b * COLS_PER_BLOCK + c] = vals[b, vi]
+                    vi += 1
+    return out[:, :n]
+
+
+def sparsity_of(mask: np.ndarray, k_dim: int, n: int) -> float:
+    """Observed sparsity over the logical (unpadded) matrix."""
+    nnz = int(
+        np.unpackbits(mask.astype(np.uint32).view(np.uint8), bitorder="little").sum()
+    )
+    return 1.0 - nnz / float(k_dim * n)
+
+
+def magnitude_prune(w: np.ndarray, sparsity: float) -> np.ndarray:
+    """Zero the smallest-|w| fraction (paper §6.1), matching the Rust
+    implementation's exact-count semantics."""
+    w = np.asarray(w)
+    k = int(round(w.size * float(np.clip(sparsity, 0.0, 1.0))))
+    if k == 0:
+        return w.copy()
+    if k >= w.size:
+        return np.zeros_like(w)
+    flat = np.abs(w).ravel()
+    thresh = np.partition(flat, k - 1)[k - 1]
+    out = w.copy()
+    below = np.abs(out) < thresh
+    out[below] = 0
+    pruned = int(below.sum())
+    if pruned < k:
+        ties = np.argwhere(np.abs(out) == thresh)
+        for idx in ties[: k - pruned]:
+            out[tuple(idx)] = 0
+    return out

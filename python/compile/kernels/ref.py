@@ -1,0 +1,56 @@
+"""Pure-jnp/numpy oracles for every Layer-1 kernel.
+
+These are the correctness contract: pytest asserts the Pallas kernels
+match them to float tolerance across shapes, sparsities, and dtypes
+(including hypothesis-generated cases).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def gemm(x: np.ndarray, w: np.ndarray) -> np.ndarray:
+    """Plain f32 GEMM."""
+    return np.asarray(x, np.float32) @ np.asarray(w, np.float32)
+
+
+def gemm_bf16(x: np.ndarray, w: np.ndarray) -> np.ndarray:
+    """GEMM with operands rounded through bfloat16 storage."""
+    import jax.numpy as jnp
+
+    xb = np.asarray(jnp.asarray(x, jnp.bfloat16).astype(jnp.float32))
+    wb = np.asarray(jnp.asarray(w, jnp.bfloat16).astype(jnp.float32))
+    return xb @ wb
+
+
+def gemm_int8(x: np.ndarray, w: np.ndarray) -> np.ndarray:
+    """Exact INT8 GEMM with INT32 accumulation."""
+    return x.astype(np.int32) @ w.astype(np.int32)
+
+
+def softmax(x: np.ndarray, axis: int = -1) -> np.ndarray:
+    m = x.max(axis=axis, keepdims=True)
+    e = np.exp(x - m)
+    return e / e.sum(axis=axis, keepdims=True)
+
+
+def decode_attention(
+    q: np.ndarray, k: np.ndarray, v: np.ndarray
+) -> np.ndarray:
+    """Single-head decode attention oracle.
+
+    q: ``[group, hd]``; k, v: ``[ctx, hd]`` → ``[group, hd]``.
+    """
+    hd = q.shape[-1]
+    scores = (q @ k.T) / np.sqrt(hd)
+    return softmax(scores, axis=-1) @ v
+
+
+def gqa_decode_attention(
+    q: np.ndarray, k: np.ndarray, v: np.ndarray
+) -> np.ndarray:
+    """GQA oracle: q ``[kv_heads, group, hd]``, k/v ``[kv_heads, ctx, hd]``."""
+    return np.stack(
+        [decode_attention(q[h], k[h], v[h]) for h in range(q.shape[0])]
+    )

@@ -1,0 +1,63 @@
+"""Layer-1 Pallas kernel: load-as-sparse / compute-as-dense GEMM (§4.3).
+
+Grid = one program per 16-neuron column block (the paper's
+parallelization dimension; each block owns a contiguous slice of the
+compressed stream — the `weight_value_index` idea maps to the per-block
+``vals`` rows). Each program:
+
+1. streams its bitmap + packed values block from HBM (the only weight
+   traffic),
+2. decompresses into a dense ``[K, 16]`` block in VMEM
+   (:mod:`common.decompress_block`),
+3. feeds the MXU: ``out_block = x @ W_block`` with f32 accumulation.
+
+``interpret=True`` always — real-TPU lowering would emit a Mosaic
+custom-call the CPU PJRT plugin cannot execute (see DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import COLS_PER_BLOCK, decompress_block
+
+
+def _kernel(x_ref, mask_ref, vals_ref, o_ref):
+    w_block = decompress_block(mask_ref[0, :], vals_ref[0, :], x_ref.dtype)
+    o_ref[...] = jnp.dot(
+        x_ref[...], w_block, preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("n_logical",))
+def sparse_gemm(x, mask, vals, n_logical: int):
+    """``x[B, K] @ unpack(mask, vals)[K, N]`` without densifying in HBM.
+
+    Args:
+      x: ``f32[B, K]`` activations.
+      mask: ``uint32[cb, K]`` bitmap stream.
+      vals: ``f32[cb, Vmax]`` packed non-zero stream.
+      n_logical: unpadded output width ``N`` (≤ ``cb * 16``).
+
+    Returns:
+      ``f32[B, N]``.
+    """
+    b, k_dim = x.shape
+    cb = mask.shape[0]
+    out = pl.pallas_call(
+        _kernel,
+        grid=(cb,),
+        in_specs=[
+            pl.BlockSpec((b, k_dim), lambda i: (0, 0)),
+            pl.BlockSpec((1, k_dim), lambda i: (i, 0)),
+            pl.BlockSpec((1, vals.shape[1]), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, COLS_PER_BLOCK), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((b, cb * COLS_PER_BLOCK), x.dtype),
+        interpret=True,
+    )(x, mask, vals)
+    return out[:, :n_logical]

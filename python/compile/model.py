@@ -1,0 +1,269 @@
+"""Layer-2 JAX model: a tiny Llama-architecture LM (RMSNorm, RoPE, GQA,
+SwiGLU) used for (a) the end-to-end serving path and (b) the accuracy
+experiments (Figs 10/14/17/18 analogues).
+
+Must stay in sync with ``rust/src/models/llama.rs::ModelConfig::tiny()``
+and the Rust `tinyforward` module, which re-implements this forward pass
+over the simulated AMX kernels.
+
+Inference entry points (`decode_step`, `prefill`, `eval_logits`) route
+every linear through the Layer-1 Pallas `dense_gemm` kernel so the AOT
+artifact exercises the kernel end-to-end; the training path uses plain
+jnp for speed (build-time only).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.dense_gemm import dense_gemm
+
+TINY_CONFIG = dict(
+    vocab=256,
+    hidden=128,
+    inter=352,
+    layers=2,
+    heads=4,
+    kv_heads=2,
+    head_dim=32,
+    max_ctx=320,
+)
+
+PREFILL_LEN = 64
+EVAL_LEN = 128
+
+
+# ---------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------
+
+def init_params(key, cfg=TINY_CONFIG):
+    """He-initialized parameter pytree."""
+    h, inter, v = cfg["hidden"], cfg["inter"], cfg["vocab"]
+    kvd = cfg["kv_heads"] * cfg["head_dim"]
+    qd = cfg["heads"] * cfg["head_dim"]
+
+    def dense(key, i, o):
+        return jax.random.normal(key, (i, o), jnp.float32) * (2.0 / i) ** 0.5
+
+    keys = jax.random.split(key, 2 + 7 * cfg["layers"])
+    params = {
+        "emb": jax.random.normal(keys[0], (v, h), jnp.float32) * 0.02,
+        "ln_f": jnp.ones((h,), jnp.float32),
+        "lm_head": dense(keys[1], h, v),
+        "layers": [],
+    }
+    ki = 2
+    for _ in range(cfg["layers"]):
+        params["layers"].append(
+            {
+                "ln1": jnp.ones((h,), jnp.float32),
+                "wq": dense(keys[ki + 0], h, qd),
+                "wk": dense(keys[ki + 1], h, kvd),
+                "wv": dense(keys[ki + 2], h, kvd),
+                "wo": dense(keys[ki + 3], qd, h),
+                "ln2": jnp.ones((h,), jnp.float32),
+                "wgate": dense(keys[ki + 4], h, inter),
+                "wup": dense(keys[ki + 5], h, inter),
+                "wdown": dense(keys[ki + 6], inter, h),
+            }
+        )
+        ki += 7
+    return params
+
+
+def param_manifest(params):
+    """Deterministic (name, shape) list in `tree_flatten` leaf order — the
+    contract the Rust runtime uses to feed PJRT buffers."""
+    leaves = jax.tree_util.tree_flatten_with_path(params)[0]
+    out = []
+    for path, leaf in leaves:
+        name = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        out.append((name, tuple(leaf.shape)))
+    return out
+
+
+# ---------------------------------------------------------------------
+# building blocks
+# ---------------------------------------------------------------------
+
+def rmsnorm(x, g, eps=1e-5):
+    return x * g * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+
+
+def rope(x, pos):
+    """Rotary embedding. x: [..., seq, heads, hd]; pos: [..., seq]."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (10000.0 ** (jnp.arange(half, dtype=jnp.float32) / half))
+    # angles: [..., seq, 1, half], broadcast over the heads axis
+    angles = pos[..., :, None, None].astype(jnp.float32) * freqs
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _repeat_kv(x, group):
+    """[..., kv_heads, hd] → [..., heads, hd] (training path only; the
+    serving path never materializes this — §6.2)."""
+    return jnp.repeat(x, group, axis=-2)
+
+
+# ---------------------------------------------------------------------
+# training / evaluation path (pure jnp, batched over sequences)
+# ---------------------------------------------------------------------
+
+def forward_seq(params, tokens, cfg=TINY_CONFIG):
+    """Causal forward over full sequences: tokens [B, S] → logits [B, S, V]."""
+    b, s = tokens.shape
+    h = params["emb"][tokens]  # [B, S, H]
+    pos = jnp.arange(s)
+    heads, kvh, hd = cfg["heads"], cfg["kv_heads"], cfg["head_dim"]
+    group = heads // kvh
+    causal = jnp.tril(jnp.ones((s, s), bool))
+    for layer in params["layers"]:
+        x = rmsnorm(h, layer["ln1"])
+        q = rope((x @ layer["wq"]).reshape(b, s, heads, hd), jnp.broadcast_to(pos, (b, s)))
+        k = rope((x @ layer["wk"]).reshape(b, s, kvh, hd), jnp.broadcast_to(pos, (b, s)))
+        v = (x @ layer["wv"]).reshape(b, s, kvh, hd)
+        k, v = _repeat_kv(k, group), _repeat_kv(v, group)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / hd**0.5
+        scores = jnp.where(causal, scores, -1e30)
+        att = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(b, s, heads * hd)
+        h = h + ctx @ layer["wo"]
+        x = rmsnorm(h, layer["ln2"])
+        h = h + (jax.nn.silu(x @ layer["wgate"]) * (x @ layer["wup"])) @ layer["wdown"]
+    return rmsnorm(h, params["ln_f"]) @ params["lm_head"]
+
+
+# ---------------------------------------------------------------------
+# inference path (Pallas kernels, KV cache) — the AOT artifacts
+# ---------------------------------------------------------------------
+
+def _linear(x, w):
+    """Layer-1 kernel dispatch: every inference linear runs the Pallas
+    blocked GEMM."""
+    return dense_gemm(x, w)
+
+
+def _attend_cached(q, k_cache, v_cache, cache_len, cfg):
+    """Decode attention over the dense runtime cache with length masking.
+
+    q: [B, heads, hd]; caches: [B, kvh, max_ctx, hd]; cache_len counts
+    valid positions (including the current token's slot).
+    """
+    heads, kvh, hd = cfg["heads"], cfg["kv_heads"], cfg["head_dim"]
+    group = heads // kvh
+    b = q.shape[0]
+    qg = q.reshape(b, kvh, group, hd)
+    scores = jnp.einsum("bhgd,bhcd->bhgc", qg, k_cache) / hd**0.5
+    pos = jnp.arange(cfg["max_ctx"])
+    valid = pos[None, None, None, :] < cache_len[:, None, None, None]
+    scores = jnp.where(valid, scores, -1e30)
+    att = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhgc,bhcd->bhgd", att, v_cache)
+    return ctx.reshape(b, heads * hd)
+
+
+def decode_step(params, token, pos, k_cache, v_cache, cache_len, cfg=TINY_CONFIG):
+    """One decode step.
+
+    Args:
+      token: int32[B] current token ids.
+      pos: int32[B] absolute positions.
+      k_cache/v_cache: f32[B, kvh, max_ctx, hd] with the new slot free.
+      cache_len: int32[B] valid length *after* inserting this token.
+
+    Returns:
+      (logits [B, V], k_cache', v_cache') — caches updated functionally.
+    """
+    heads, kvh, hd = cfg["heads"], cfg["kv_heads"], cfg["head_dim"]
+    b = token.shape[0]
+    h = params["emb"][token]  # [B, H]
+    layer_caches = []
+    for li, layer in enumerate(params["layers"]):
+        x = rmsnorm(h, layer["ln1"])
+        q = rope(_linear(x, layer["wq"]).reshape(b, 1, heads, hd),
+                 pos[:, None]).reshape(b, heads, hd)
+        k = rope(_linear(x, layer["wk"]).reshape(b, 1, kvh, hd),
+                 pos[:, None]).reshape(b, kvh, hd)
+        v = _linear(x, layer["wv"]).reshape(b, kvh, hd)
+        # insert at slot cache_len-1 (functional update)
+        slot = cache_len - 1
+        kc = _insert(k_cache[li], k, slot)
+        vc = _insert(v_cache[li], v, slot)
+        layer_caches.append((kc, vc))
+        ctx = _attend_cached(q, kc, vc, cache_len, cfg)
+        h = h + _linear(ctx, layer["wo"])
+        x = rmsnorm(h, layer["ln2"])
+        h = h + _linear(
+            jax.nn.silu(_linear(x, layer["wgate"])) * _linear(x, layer["wup"]),
+            layer["wdown"],
+        )
+    logits = _linear(rmsnorm(h, params["ln_f"]), params["lm_head"])
+    new_k = jnp.stack([c[0] for c in layer_caches])
+    new_v = jnp.stack([c[1] for c in layer_caches])
+    return logits, new_k, new_v
+
+
+def _insert(cache, row, slot):
+    """cache [B, kvh, C, hd] ← row [B, kvh, hd] at per-batch slot."""
+    onehot = (jnp.arange(cache.shape[2])[None, :] == slot[:, None]).astype(cache.dtype)
+    return cache * (1 - onehot[:, None, :, None]) + (
+        row[:, :, None, :] * onehot[:, None, :, None]
+    )
+
+
+def prefill(params, tokens, cfg=TINY_CONFIG):
+    """Process a fixed-length prompt: tokens [B, S] → (last logits [B, V],
+    k [layers, B, kvh, S, hd], v [...]) for cache initialization."""
+    b, s = tokens.shape
+    heads, kvh, hd = cfg["heads"], cfg["kv_heads"], cfg["head_dim"]
+    group = heads // kvh
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    h = params["emb"][tokens]
+    causal = jnp.tril(jnp.ones((s, s), bool))
+    ks, vs = [], []
+    for layer in params["layers"]:
+        x = rmsnorm(h, layer["ln1"])
+        q = rope((x @ layer["wq"]).reshape(b, s, heads, hd), pos)
+        k = rope((x @ layer["wk"]).reshape(b, s, kvh, hd), pos)
+        v = (x @ layer["wv"]).reshape(b, s, kvh, hd)
+        ks.append(k.transpose(0, 2, 1, 3))  # [B, kvh, S, hd]
+        vs.append(v.transpose(0, 2, 1, 3))
+        kr, vr = _repeat_kv(k, group), _repeat_kv(v, group)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, kr) / hd**0.5
+        scores = jnp.where(causal, scores, -1e30)
+        att = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bhqk,bkhd->bqhd", att, vr).reshape(b, s, heads * hd)
+        h = h + ctx @ layer["wo"]
+        x = rmsnorm(h, layer["ln2"])
+        h = h + (jax.nn.silu(x @ layer["wgate"]) * (x @ layer["wup"])) @ layer["wdown"]
+    logits = _linear(rmsnorm(h[:, -1], params["ln_f"]), params["lm_head"])
+    return logits, jnp.stack(ks), jnp.stack(vs)
+
+
+def eval_logits(params, tokens, cfg=TINY_CONFIG):
+    """Per-position logits for perplexity evaluation: [1, EVAL_LEN] →
+    [1, EVAL_LEN, V]."""
+    return forward_seq(params, tokens, cfg)
+
+
+# ---------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=())
+def next_token_loss(params, tokens):
+    """Mean cross-entropy of next-token prediction over [B, S]."""
+    logits = forward_seq(params, tokens)
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1).squeeze(-1)
+    return nll.mean()

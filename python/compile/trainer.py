@@ -1,0 +1,115 @@
+"""Build-time trainer for the tiny checkpoint (DESIGN.md §2).
+
+The paper evaluates pretrained Llama checkpoints; offline we train a
+~1 M-parameter byte-level LM on a synthetic structured corpus so the
+accuracy experiments (Figs 10/14/17/18 analogues) measure a model that
+genuinely learned something. Adam is implemented inline (optax is not in
+the image).
+
+Run: ``python -m compile.trainer --steps 300 --out ../artifacts``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import io, model
+
+SUBJECTS = ["the cat", "a dog", "the queen", "my robot", "one bird",
+            "the old man", "a tiny fox", "the ship", "her friend", "the wizard"]
+VERBS = ["sees", "likes", "chases", "finds", "paints", "builds", "sings to",
+         "feeds", "follows", "greets"]
+OBJECTS = ["the moon", "a red ball", "the river", "an apple", "the tower",
+           "a green hat", "the garden", "a small stone", "the market", "a book"]
+
+
+def synth_corpus(n_sentences: int, seed: int) -> np.ndarray:
+    """Deterministic synthetic corpus: grammatical S-V-O sentences with a
+    counting clause, byte-level tokens. Learnable structure at every
+    scale: characters → words → phrase grammar."""
+    rng = np.random.default_rng(seed)
+    parts = []
+    for _ in range(n_sentences):
+        s = rng.choice(SUBJECTS)
+        v = rng.choice(VERBS)
+        o = rng.choice(OBJECTS)
+        k = int(rng.integers(2, 9))
+        parts.append(f"{s} {v} {o} {k} times. ")
+    text = "".join(parts).encode()
+    return np.frombuffer(text, dtype=np.uint8).copy()
+
+
+def batches(corpus: np.ndarray, batch: int, seq: int, steps: int, seed: int):
+    rng = np.random.default_rng(seed)
+    hi = len(corpus) - seq - 1
+    for _ in range(steps):
+        starts = rng.integers(0, hi, size=batch)
+        yield np.stack([corpus[s : s + seq] for s in starts]).astype(np.int32)
+
+
+def adam_init(params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params), "t": jnp.zeros((), jnp.int32), "_": zeros}
+
+
+@jax.jit
+def adam_step(params, opt, grads, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = opt["t"] + 1
+    m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, opt["m"], grads)
+    v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, opt["v"], grads)
+    mh = jax.tree.map(lambda m: m / (1 - b1 ** t.astype(jnp.float32)), m)
+    vh = jax.tree.map(lambda v: v / (1 - b2 ** t.astype(jnp.float32)), v)
+    new = jax.tree.map(lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps), params, mh, vh)
+    return new, {"m": m, "v": v, "t": t, "_": opt["_"]}
+
+
+def train(steps: int = 300, batch: int = 16, seq: int = 48, seed: int = 0,
+          log_every: int = 25):
+    """Train and return (params, loss_log, eval_tokens)."""
+    corpus = synth_corpus(20_000, seed)
+    split = int(len(corpus) * 0.9)
+    train_c, eval_c = corpus[:split], corpus[split:]
+    params = model.init_params(jax.random.PRNGKey(seed))
+    opt = adam_init(params)
+    loss_grad = jax.jit(jax.value_and_grad(model.next_token_loss))
+    log = []
+    t0 = time.time()
+    for step, toks in enumerate(batches(train_c, batch, seq, steps, seed + 1)):
+        loss, grads = loss_grad(params, jnp.asarray(toks))
+        params, opt = adam_step(params, opt, grads)
+        if step % log_every == 0 or step == steps - 1:
+            log.append((step, float(loss)))
+            print(f"step {step:4d}  loss {float(loss):.4f}  "
+                  f"({time.time() - t0:.1f}s)", flush=True)
+    return params, log, eval_c[: model.EVAL_LEN * 40]
+
+
+def flatten_params(params):
+    """(name, array) pairs in the manifest order (tree_flatten order)."""
+    names = [n for n, _ in model.param_manifest(params)]
+    leaves = jax.tree_util.tree_flatten(params)[0]
+    return list(zip(names, [np.asarray(x) for x in leaves]))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    params, log, eval_tokens = train(steps=args.steps, seed=args.seed)
+    io.write_weights(f"{args.out}/weights.bin", flatten_params(params))
+    io.write_tokens(f"{args.out}/eval_tokens.bin", eval_tokens)
+    with open(f"{args.out}/train_log.txt", "w") as f:
+        for step, loss in log:
+            f.write(f"{step}\t{loss:.6f}\n")
+    print(f"saved weights + eval tokens to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Interchange-format tests + AOT artifact smoke checks."""
+
+import os
+
+import numpy as np
+import pytest
+
+from compile import io
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_weights_roundtrip(tmp_path):
+    path = str(tmp_path / "w.bin")
+    tensors = [
+        ("emb", np.arange(12, dtype=np.float32).reshape(3, 4)),
+        ("g", np.array([1.5, -2.0], np.float32)),
+    ]
+    io.write_weights(path, tensors)
+    back = io.read_weights(path)
+    assert back[0][0] == "emb"
+    np.testing.assert_array_equal(back[0][1], tensors[0][1])
+    np.testing.assert_array_equal(back[1][1], tensors[1][1])
+
+
+def test_tokens_roundtrip(tmp_path):
+    path = str(tmp_path / "t.bin")
+    toks = np.array([0, 255, 65], np.uint8)
+    io.write_tokens(path, toks)
+    np.testing.assert_array_equal(io.read_tokens(path), toks)
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+class TestArtifacts:
+    def test_manifest_lists_all_artifacts(self):
+        import json
+
+        with open(os.path.join(ART, "manifest.json")) as f:
+            man = json.load(f)
+        for name in ["decode_step", "prefill", "eval_logits", "sparse_gemm", "int8_gemm"]:
+            assert name in man["artifacts"]
+            path = os.path.join(ART, man["artifacts"][name]["file"])
+            assert os.path.getsize(path) > 1000, name
+
+    def test_hlo_text_is_parseable_header(self):
+        with open(os.path.join(ART, "decode_step.hlo.txt")) as f:
+            head = f.read(200)
+        assert "HloModule" in head
+
+    def test_weights_match_manifest_order(self):
+        import json
+
+        with open(os.path.join(ART, "manifest.json")) as f:
+            man = json.load(f)
+        weights = io.read_weights(os.path.join(ART, "weights.bin"))
+        assert [w[0] for w in weights] == [p["name"] for p in man["params"]]
+        for (name, arr), p in zip(weights, man["params"]):
+            assert list(arr.shape) == p["shape"], name
+
+    def test_training_converged(self):
+        import json
+
+        with open(os.path.join(ART, "manifest.json")) as f:
+            man = json.load(f)
+        losses = [l for _, l in man["train_loss"]]
+        assert losses[-1] < losses[0] * 0.3, "training did not converge"

@@ -1,0 +1,198 @@
+"""Layer-1 kernel correctness: every Pallas kernel vs its pure oracle.
+
+This is the core correctness signal of the compile path — the same
+kernels get lowered into the AOT artifacts Rust serves from.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import packing, ref
+from compile.kernels.dense_gemm import dense_gemm, dense_gemm_bf16
+from compile.kernels.int8_gemm import int8_sparse_gemm
+from compile.kernels.sparse_gemm import sparse_gemm
+from compile.kernels.attention import sparse_kv_attention
+
+RNG = np.random.default_rng(1234)
+
+
+def random_sparse(k, n, sparsity, dtype=np.float32):
+    w = RNG.normal(size=(k, n)).astype(np.float32)
+    w = packing.magnitude_prune(w, sparsity)
+    return w.astype(dtype)
+
+
+# ---------------------------------------------------------------------
+# packing
+# ---------------------------------------------------------------------
+
+class TestPacking:
+    @pytest.mark.parametrize("k,n", [(32, 16), (64, 37), (50, 100), (7, 5)])
+    @pytest.mark.parametrize("sparsity", [0.0, 0.5, 0.9, 1.0])
+    def test_roundtrip(self, k, n, sparsity):
+        w = random_sparse(k, n, sparsity)
+        mask, vals = packing.pack_mask_vals(w)
+        assert np.array_equal(packing.unpack_mask_vals(mask, vals, n), w)
+
+    def test_mask_bit_positions(self):
+        w = np.zeros((4, 16), np.float32)
+        w[2, 3] = 5.0
+        mask, vals = packing.pack_mask_vals(w)
+        assert mask.shape == (1, 4)
+        assert mask[0, 2] == 1 << 3
+        assert vals[0, 0] == 5.0
+
+    def test_prune_exact_count(self):
+        w = RNG.normal(size=(40, 25)).astype(np.float32)
+        p = packing.magnitude_prune(w, 0.3)
+        assert (p == 0).sum() == round(0.3 * w.size)
+
+    def test_prune_keeps_largest(self):
+        w = np.array([[0.1, -9.0, 0.2, 3.0]], np.float32)
+        p = packing.magnitude_prune(w, 0.5)
+        assert p.tolist() == [[0.0, -9.0, 0.0, 3.0]]
+
+
+# ---------------------------------------------------------------------
+# sparse GEMM
+# ---------------------------------------------------------------------
+
+class TestSparseGemm:
+    @pytest.mark.parametrize("b,k,n", [(1, 32, 16), (4, 64, 48), (3, 50, 37)])
+    @pytest.mark.parametrize("sparsity", [0.0, 0.5, 0.95])
+    def test_matches_ref(self, b, k, n, sparsity):
+        w = random_sparse(k, n, sparsity)
+        mask, vals = packing.pack_mask_vals(w)
+        x = RNG.normal(size=(b, k)).astype(np.float32)
+        got = np.asarray(sparse_gemm(x, mask, vals, n))
+        np.testing.assert_allclose(got, ref.gemm(x, w), atol=1e-4, rtol=1e-4)
+
+    def test_all_zero_weights(self):
+        w = np.zeros((32, 16), np.float32)
+        mask, vals = packing.pack_mask_vals(w)
+        x = RNG.normal(size=(2, 32)).astype(np.float32)
+        assert np.all(np.asarray(sparse_gemm(x, mask, vals, 16)) == 0)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        b=st.integers(1, 4),
+        k=st.integers(1, 96),
+        n=st.integers(1, 80),
+        sparsity=st.floats(0.0, 1.0),
+        seed=st.integers(0, 2**31),
+    )
+    def test_hypothesis_sweep(self, b, k, n, sparsity, seed):
+        rng = np.random.default_rng(seed)
+        w = packing.magnitude_prune(
+            rng.normal(size=(k, n)).astype(np.float32), sparsity
+        )
+        mask, vals = packing.pack_mask_vals(w)
+        x = rng.normal(size=(b, k)).astype(np.float32)
+        got = np.asarray(sparse_gemm(x, mask, vals, n))
+        np.testing.assert_allclose(got, ref.gemm(x, w), atol=2e-4, rtol=2e-4)
+
+
+# ---------------------------------------------------------------------
+# dense GEMM
+# ---------------------------------------------------------------------
+
+class TestDenseGemm:
+    @pytest.mark.parametrize("b,k,n", [(1, 16, 8), (33, 48, 130), (5, 128, 352)])
+    def test_matches_ref(self, b, k, n):
+        x = RNG.normal(size=(b, k)).astype(np.float32)
+        w = RNG.normal(size=(k, n)).astype(np.float32)
+        np.testing.assert_allclose(
+            np.asarray(dense_gemm(x, w)), ref.gemm(x, w), atol=1e-4, rtol=1e-4
+        )
+
+    def test_bf16_variant_rounds_operands(self):
+        x = RNG.normal(size=(2, 32)).astype(np.float32)
+        w = RNG.normal(size=(32, 16)).astype(np.float32)
+        got = np.asarray(dense_gemm_bf16(x, w))
+        np.testing.assert_allclose(got, ref.gemm_bf16(x, w), atol=1e-3, rtol=1e-2)
+
+
+# ---------------------------------------------------------------------
+# INT8 GEMM
+# ---------------------------------------------------------------------
+
+class TestInt8Gemm:
+    @pytest.mark.parametrize("b,k,n", [(1, 64, 32), (4, 100, 30)])
+    @pytest.mark.parametrize("sparsity", [0.0, 0.6])
+    def test_exact_vs_ref(self, b, k, n, sparsity):
+        w = RNG.integers(-100, 100, size=(k, n)).astype(np.int8)
+        w[RNG.random(size=w.shape) < sparsity] = 0
+        mask, vals = packing.pack_mask_vals(w)
+        x = RNG.integers(-100, 100, size=(b, k)).astype(np.int8)
+        got = np.asarray(int8_sparse_gemm(x, mask, vals, n))
+        assert np.array_equal(got, ref.gemm_int8(x, w))
+
+    def test_accumulator_does_not_overflow_int8(self):
+        # worst-case accumulation requires int32: 128 * 127 * 127 > 2^21
+        k = 128
+        w = np.full((k, 16), 127, np.int8)
+        mask, vals = packing.pack_mask_vals(w)
+        x = np.full((1, k), 127, np.int8)
+        got = np.asarray(int8_sparse_gemm(x, mask, vals, 16))
+        assert got[0, 0] == 127 * 127 * k
+
+
+# ---------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------
+
+def pack_head_kv(k, v):
+    """Pack one head's K/V for the kernel (Kᵀ and V layouts)."""
+    kt_mask, kt_vals = packing.pack_mask_vals(np.ascontiguousarray(k.T))
+    v_mask, v_vals = packing.pack_mask_vals(v)
+    return kt_mask, kt_vals, v_mask, v_vals
+
+
+def pack_all_heads(k, v):
+    packed = [pack_head_kv(k[h], v[h]) for h in range(k.shape[0])]
+    def stack(i):
+        arrs = [p[i] for p in packed]
+        vmax = max(a.shape[1] for a in arrs)
+        return np.stack(
+            [np.pad(a, [(0, 0), (0, vmax - a.shape[1])]) for a in arrs]
+        )
+    return stack(0), stack(1), stack(2), stack(3)
+
+
+class TestAttention:
+    @pytest.mark.parametrize("sparsity", [0.0, 0.4])
+    def test_matches_ref(self, sparsity):
+        kv_heads, group, hd, ctx, max_dyn = 2, 2, 16, 32, 4
+        q = RNG.normal(size=(kv_heads, group, hd)).astype(np.float32)
+        k = random_sparse(kv_heads * ctx, hd, sparsity).reshape(kv_heads, ctx, hd)
+        v = random_sparse(kv_heads * ctx, hd, sparsity).reshape(kv_heads, ctx, hd)
+        kt_mask, kt_vals, v_mask, v_vals = pack_all_heads(k, v)
+        k_dyn = RNG.normal(size=(kv_heads, max_dyn, hd)).astype(np.float32)
+        v_dyn = RNG.normal(size=(kv_heads, max_dyn, hd)).astype(np.float32)
+        dyn_len = np.array([3, 1], np.int32)
+        got = np.asarray(
+            sparse_kv_attention(q, kt_mask, kt_vals, v_mask, v_vals, k_dyn, v_dyn, dyn_len)
+        )
+        for h in range(kv_heads):
+            kk = np.concatenate([k[h], k_dyn[h, : dyn_len[h]]])
+            vv = np.concatenate([v[h], v_dyn[h, : dyn_len[h]]])
+            want = ref.decode_attention(q[h], kk, vv)
+            np.testing.assert_allclose(got[h], want, atol=1e-3, rtol=1e-3)
+
+    def test_empty_dynamic_tail(self):
+        kv_heads, group, hd, ctx = 1, 1, 8, 16
+        q = RNG.normal(size=(kv_heads, group, hd)).astype(np.float32)
+        k = RNG.normal(size=(kv_heads, ctx, hd)).astype(np.float32)
+        v = RNG.normal(size=(kv_heads, ctx, hd)).astype(np.float32)
+        kt_mask, kt_vals, v_mask, v_vals = pack_all_heads(k, v)
+        k_dyn = np.zeros((kv_heads, 2, hd), np.float32)
+        v_dyn = np.zeros((kv_heads, 2, hd), np.float32)
+        got = np.asarray(
+            sparse_kv_attention(
+                q, kt_mask, kt_vals, v_mask, v_vals, k_dyn, v_dyn,
+                np.zeros(kv_heads, np.int32),
+            )
+        )
+        want = ref.decode_attention(q[0], k[0], v[0])
+        np.testing.assert_allclose(got[0], want, atol=1e-3, rtol=1e-3)

@@ -1,0 +1,104 @@
+//! Ablations called out in DESIGN.md §5:
+//!  A1 — 8-tile vs naive 3-tile AMX schedule (compute-to-load ratio)
+//!  A2 — prefix-sum offsets vs serial offset update (instruction count)
+//!  A3 — weight_value_index vs per-thread stream scan (load-time cost)
+//!  A4 — static+dynamic KV split vs repacking the whole cache per token
+
+use sparamx::bench::harness::{report_header, report_row};
+use sparamx::perf::{analytic, Machine};
+use sparamx::perf::cost::KernelCost;
+use sparamx::sparse::format::SparseTensor;
+use sparamx::sparse::partition::ThreadPartition;
+use sparamx::sparse::prune::magnitude_prune;
+use sparamx::util::XorShift;
+use std::time::Instant;
+
+fn main() {
+    let m = Machine::sapphire_rapids(32);
+
+    // A1: the naive schedule loads 2 tiles per tdp (1 weight + 1 input
+    // re-load), the 8-tile schedule amortizes to 1 load per tdp.
+    report_header(
+        "A1 — 8-tile schedule vs naive 3-tile (4096x4096, batch 256, LLC-resident)",
+        &["schedule", "tile loads / tdp", "modeled time"],
+    );
+    let c8 = analytic::dense_bf16(256, 4096, 4096);
+    let loads8 = (c8.tile_load_input + c8.tile_load_weight) as f64 / c8.tdp_total() as f64;
+    let t8 = KernelCost::from_counters(&c8, &m).time;
+    let mut c3 = c8.clone();
+    // naive: one result tile at a time → every tdp needs its own A and B load
+    c3.tile_load_input = c3.tdp_total();
+    c3.tile_load_weight = c3.tdp_total();
+    c3.weight_stream_bytes = c3.tile_load_weight * 1024;
+    c3.input_bytes = c3.tile_load_input * 1024;
+    let t3 = KernelCost::from_counters(&c3, &m).time;
+    report_row(&["8-tile (paper)".into(), format!("{loads8:.2}"), format!("{:.0} µs", t8 * 1e6)]);
+    report_row(&["naive 3-tile".into(), "2.00".into(), format!("{:.0} µs", t3 * 1e6)]);
+    report_row(&["advantage".into(), String::new(), format!("{:.2}x", t3 / t8)]);
+
+    // A2: Algorithm-1 prefix sum = 4 vector steps per tile; a serial
+    // scan is 16 dependent scalar updates.
+    report_header(
+        "A2 — prefix-sum offsets vs serial update (per weight tile)",
+        &["method", "ops/tile", "modeled decompress overhead (4096x14336)"],
+    );
+    let nnz = (0.5 * 4096.0 * 14336.0) as usize;
+    let cs = analytic::sparse_bf16(1, 4096, 14336, nnz);
+    let prefix_t = KernelCost::from_counters(&cs, &m).time;
+    let mut serial = cs.clone();
+    // 16 dependent scalar updates at ~3-cycle latency each vs 4 vector
+    // steps at 2 cycles: express as an equivalent prefix_step count
+    serial.prefix_step = 24 * (serial.vpexpand / 16);
+    let serial_t = KernelCost::from_counters(&serial, &m).time;
+    report_row(&["prefix sum (paper)".into(), "4".into(), format!("{:.0} µs", prefix_t * 1e6)]);
+    report_row(&["serial scan".into(), "16".into(), format!("{:.0} µs", serial_t * 1e6)]);
+
+    // A3: weight_value_index precompute vs scanning the bitmap stream
+    // per thread at every call (wall clock, real data structures).
+    report_header(
+        "A3 — weight_value_index vs per-call bitmap scan (4096x4096 @ 50%)",
+        &["method", "cost", "when"],
+    );
+    let mut g = XorShift::new(3);
+    let w = magnitude_prune(&g.normal_vec(4096 * 4096, 1.0), 0.5);
+    let sp = SparseTensor::pack_f32(&w, 4096, 4096);
+    let t0 = Instant::now();
+    let part = ThreadPartition::build(&sp, 32);
+    let build = t0.elapsed();
+    let t0 = Instant::now();
+    // per-call scan: each thread popcounts every preceding tile
+    let mut scanned = 0usize;
+    for t in 0..sp.num_tiles() {
+        scanned += sp
+            .tile_metadata(t)
+            .iter()
+            .map(|w| w.count_ones() as usize)
+            .sum::<usize>();
+    }
+    let scan = t0.elapsed();
+    std::hint::black_box((part.weight_value_index.len(), scanned));
+    report_row(&["weight_value_index (paper)".into(), format!("{build:?}"), "once at load".into()]);
+    report_row(&["full bitmap scan".into(), format!("{scan:?}"), "every kernel call".into()]);
+
+    // A4: split cache vs re-packing the static segment every token.
+    report_header(
+        "A4 — dynamic tail vs repacking static cache per token (ctx 4096, hd 128)",
+        &["method", "per-token cost"],
+    );
+    let k0 = g.normal_vec(4096 * 128, 1.0);
+    let v0 = g.normal_vec(4096 * 128, 1.0);
+    let mut hc =
+        sparamx::kvcache::cache::HeadCache::from_prefill(&k0, &v0, 4096, 128, 0.3, 0.5);
+    let row = g.normal_vec(128, 1.0);
+    let t0 = Instant::now();
+    for _ in 0..100 {
+        hc.append(&row, &row);
+    }
+    let tail = t0.elapsed() / 100;
+    let t0 = Instant::now();
+    let _repack =
+        sparamx::kvcache::cache::HeadCache::from_prefill(&k0, &v0, 4096, 128, 0.3, 0.5);
+    let repack = t0.elapsed();
+    report_row(&["dynamic tail (paper §6.2)".into(), format!("{tail:?}")]);
+    report_row(&["repack whole cache".into(), format!("{repack:?}")]);
+}

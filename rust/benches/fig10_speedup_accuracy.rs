@@ -1,0 +1,42 @@
+//! Fig 10: end-to-end speedup vs downstream accuracy across weight
+//! sparsity points. Accuracy comes from the tiny trained checkpoint
+//! (DESIGN.md §2 substitution for GSM8K); speedup from the Llama 3 8B
+//! cost model at the same sparsity.
+
+use sparamx::baselines::systems::{decode_step_cost, Baseline, Precision};
+use sparamx::bench::harness::{report_header, report_row};
+use sparamx::models::tinyforward::{KvTreatment, TinyModel};
+use sparamx::models::ModelConfig;
+use sparamx::perf::Machine;
+use sparamx::runtime::artifact::Bundle;
+
+fn main() {
+    let m = Machine::sapphire_rapids(32);
+    let cfg = ModelConfig::llama3_8b();
+    let bundle = Bundle::load("artifacts").ok();
+    report_header(
+        "Fig 10 — speedup vs accuracy across weight sparsity",
+        &["sparsity", "speedup (8B model)", "tiny-LM top1", "tiny-LM ppl"],
+    );
+    let py = decode_step_cost(&cfg, Baseline::PyTorch, Precision::Bf16, 1, 512, 0.0, &m);
+    for s in [0.0, 0.2, 0.4, 0.5, 0.6, 0.8] {
+        let ours = decode_step_cost(&cfg, Baseline::SparAmxSparse, Precision::Bf16, 1, 512, s, &m);
+        let (top1, ppl) = match &bundle {
+            Some(b) => {
+                let mut model = TinyModel::from_bundle(b).expect("model");
+                model.prune_weights(s);
+                let limit = b.eval_tokens.len().min(1280);
+                let r = model.evaluate(&b.eval_tokens[..limit], 128, KvTreatment::default());
+                (format!("{:.3}", r.top1), format!("{:.2}", r.ppl))
+            }
+            None => ("n/a (no artifacts)".into(), "n/a".into()),
+        };
+        report_row(&[
+            format!("{:.0}%", s * 100.0),
+            format!("{:.2}x", py / ours),
+            top1,
+            ppl,
+        ]);
+    }
+    println!("\npaper shape: speedup rises with sparsity; accuracy degrades past a knee");
+}

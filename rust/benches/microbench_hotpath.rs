@@ -1,0 +1,74 @@
+//! §Perf microbenchmarks: wall-clock of the real Rust hot paths on this
+//! container (1 core) — the functional simulator's decompression, the
+//! pack/prune pipeline, and the engine-adjacent pieces. These are the
+//! before/after numbers tracked in EXPERIMENTS.md §Perf.
+
+use sparamx::amx::kernels::{dense_amx_gemm_bf16, sparse_amx_gemm_bf16, DenseWeights, GemmCounters};
+use sparamx::bench::harness::{bench_auto, fmt_time, report_header, report_row};
+use sparamx::sparse::format::SparseTensor;
+use sparamx::sparse::prune::magnitude_prune;
+use sparamx::util::XorShift;
+
+fn main() {
+    let mut g = XorShift::new(42);
+    let (k, n) = (1024usize, 1024usize);
+    let w = magnitude_prune(&g.normal_vec(k * n, 1.0), 0.5);
+    let x = g.normal_vec(k, 1.0);
+    let sp = SparseTensor::pack_f32(&w, k, n);
+    let dw = DenseWeights::pack_f32(&w, k, n);
+
+    report_header(
+        "§Perf — hot-path wall clock (1024x1024, batch 1, this container)",
+        &["path", "time", "throughput"],
+    );
+
+    let r = bench_auto("pack", 0.5, || {
+        std::hint::black_box(SparseTensor::pack_f32(&w, k, n));
+    });
+    report_row(&[
+        "SparseTensor::pack_f32".into(),
+        fmt_time(r.mean_s()),
+        format!("{:.2} Melem/s", (k * n) as f64 / r.mean_s() / 1e6),
+    ]);
+
+    let r = bench_auto("prune", 0.5, || {
+        std::hint::black_box(magnitude_prune(&w, 0.5));
+    });
+    report_row(&[
+        "magnitude_prune".into(),
+        fmt_time(r.mean_s()),
+        format!("{:.2} Melem/s", (k * n) as f64 / r.mean_s() / 1e6),
+    ]);
+
+    let r = bench_auto("sim-sparse-gemm", 1.0, || {
+        let mut ctr = GemmCounters::default();
+        std::hint::black_box(sparse_amx_gemm_bf16(&x, 1, &sp, &mut ctr));
+    });
+    report_row(&[
+        "simulated sparse AMX GEMM".into(),
+        fmt_time(r.mean_s()),
+        format!("{:.2} MMAC/s", (k * n) as f64 / r.mean_s() / 1e6),
+    ]);
+
+    let r = bench_auto("sim-dense-gemm", 1.0, || {
+        let mut ctr = GemmCounters::default();
+        std::hint::black_box(dense_amx_gemm_bf16(&x, 1, &dw, &mut ctr));
+    });
+    report_row(&[
+        "simulated dense AMX GEMM".into(),
+        fmt_time(r.mean_s()),
+        format!("{:.2} MMAC/s", (k * n) as f64 / r.mean_s() / 1e6),
+    ]);
+
+    // decompression stream rate: bitmap+values bytes consumed per second
+    let r = bench_auto("decompress-only", 1.0, || {
+        let mut ctr = GemmCounters::default();
+        std::hint::black_box(sparse_amx_gemm_bf16(&x, 1, &sp, &mut ctr));
+    });
+    let stream = sp.bytes_sparse() as f64;
+    report_row(&[
+        "compressed-stream rate".into(),
+        fmt_time(r.mean_s()),
+        format!("{:.2} MB/s", stream / r.mean_s() / 1e6),
+    ]);
+}

@@ -1,0 +1,226 @@
+//! The AVX-512 operations SparAMX's decompression and AVX kernels use.
+//!
+//! Modeled ops (paper §2.4, §4.3, Algorithm 1 & 2):
+//! `vmovdqu32` (512-bit load), `vpexpandw`/`vpexpandb` (bitmask → dense
+//! expansion), `vpopcntd` (per-lane popcount), the shift-add parallel
+//! prefix sum, `vdpbf16ps` (BF16 dot-product FMA), and scalar broadcast.
+//!
+//! Each helper both computes the architectural result and ticks the
+//! event counters.
+
+use super::events::EventCounters;
+use crate::util::bf16::Bf16;
+
+/// Load 16 u32 lanes (one 512-bit `vmovdqu32`). Counts an AVX load and
+/// charges `bytes` to the weight (bitmap) stream.
+pub fn vmovdqu32(src: &[u64], ctr: &mut EventCounters) -> [u32; 16] {
+    debug_assert!(src.len() >= 16);
+    let mut out = [0u32; 16];
+    for (o, &s) in out.iter_mut().zip(src.iter()) {
+        *o = s as u32;
+    }
+    ctr.avx_load += 1;
+    ctr.weight_stream_bytes += 64;
+    out
+}
+
+/// `vpexpandw`: expand up to 32 BF16 values from `stream` into a 32-lane
+/// register according to `mask` (bit i set → lane i gets the next stream
+/// value; clear → zero). Returns the expanded lanes and the number of
+/// values consumed. The value bytes consumed are charged to the weight
+/// stream (they are read from the packed `weight_values` array in DRAM).
+pub fn vpexpandw(mask: u32, stream: &[Bf16], ctr: &mut EventCounters) -> ([Bf16; 32], usize) {
+    let mut out = [Bf16::ZERO; 32];
+    let mut consumed = 0usize;
+    for (i, o) in out.iter_mut().enumerate() {
+        if mask >> i & 1 == 1 {
+            *o = stream[consumed];
+            consumed += 1;
+        }
+    }
+    ctr.vpexpand += 1;
+    ctr.weight_stream_bytes += (consumed * 2) as u64;
+    out
+        .iter()
+        .for_each(|_| {}); // no-op; keeps clippy quiet about unused iter
+    (out, consumed)
+}
+
+/// `vpexpandb`: the INT8 variant — expand up to 64 i8 values by a 64-bit
+/// mask.
+pub fn vpexpandb(mask: u64, stream: &[i8], ctr: &mut EventCounters) -> ([i8; 64], usize) {
+    let mut out = [0i8; 64];
+    let mut consumed = 0usize;
+    for (i, o) in out.iter_mut().enumerate() {
+        if mask >> i & 1 == 1 {
+            *o = stream[consumed];
+            consumed += 1;
+        }
+    }
+    ctr.vpexpand += 1;
+    ctr.weight_stream_bytes += consumed as u64;
+    (out, consumed)
+}
+
+/// `vpopcntd`: per-lane popcount of 16 u32 lanes.
+pub fn vpopcntd(lanes: &[u32; 16], ctr: &mut EventCounters) -> [u32; 16] {
+    let mut out = [0u32; 16];
+    for (o, &l) in out.iter_mut().zip(lanes.iter()) {
+        *o = l.count_ones();
+    }
+    ctr.vpopcnt += 1;
+    out
+}
+
+/// Parallel inclusive prefix sum over 16 u32 lanes — Algorithm 1 of the
+/// paper: four shift-and-add rounds (log2(16)).
+pub fn prefix_sum_u32x16(lanes: &[u32; 16], ctr: &mut EventCounters) -> [u32; 16] {
+    let mut s = *lanes;
+    let mut shift = 1usize;
+    while shift < 16 {
+        let mut next = s;
+        for i in shift..16 {
+            next[i] = s[i] + s[i - shift];
+        }
+        s = next;
+        ctr.prefix_step += 1;
+        shift <<= 1;
+    }
+    s
+}
+
+/// Broadcast one BF16 scalar across a 32-lane register.
+pub fn broadcast_bf16(x: Bf16, ctr: &mut EventCounters) -> [Bf16; 32] {
+    ctr.broadcast += 1;
+    [x; 32]
+}
+
+/// `vdpbf16ps acc, a, b`: multiply 32 BF16 pairs, add each adjacent pair
+/// into 16 FP32 accumulator lanes (paper §2.4).
+pub fn vdpbf16ps(
+    acc: &mut [f32; 16],
+    a: &[Bf16; 32],
+    b: &[Bf16; 32],
+    ctr: &mut EventCounters,
+) {
+    for n in 0..16 {
+        acc[n] += a[2 * n].to_f32() * b[2 * n].to_f32()
+            + a[2 * n + 1].to_f32() * b[2 * n + 1].to_f32();
+    }
+    ctr.avx_fma += 1;
+}
+
+/// Store 16 FP32 lanes to memory (one 512-bit store), charged to output.
+pub fn store_f32x16(acc: &[f32; 16], dst: &mut [f32], ctr: &mut EventCounters) {
+    dst[..16].copy_from_slice(acc);
+    ctr.avx_store += 1;
+    ctr.output_bytes += 64;
+}
+
+/// Store 32 expanded BF16 lanes into the decompression scratch buffer
+/// (charged to `scratch_bytes`: the buffer is cache-resident).
+pub fn store_scratch_bf16(lanes: &[Bf16; 32], dst: &mut [Bf16], ctr: &mut EventCounters) {
+    dst[..32].copy_from_slice(lanes);
+    ctr.avx_store += 1;
+    ctr.scratch_bytes += 64;
+}
+
+/// INT8 variant of [`store_scratch_bf16`].
+pub fn store_scratch_i8(lanes: &[i8; 64], dst: &mut [i8], ctr: &mut EventCounters) {
+    dst[..64].copy_from_slice(lanes);
+    ctr.avx_store += 1;
+    ctr.scratch_bytes += 64;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bf(x: f32) -> Bf16 {
+        Bf16::from_f32(x)
+    }
+
+    #[test]
+    fn vpexpandw_places_values_at_set_bits() {
+        let mut ctr = EventCounters::default();
+        let stream = [bf(1.0), bf(2.0), bf(3.0)];
+        let mask = 0b1000_0000_0000_0000_0000_0000_0000_0101u32;
+        let (out, consumed) = vpexpandw(mask, &stream, &mut ctr);
+        assert_eq!(consumed, 3);
+        assert_eq!(out[0], bf(1.0));
+        assert_eq!(out[1], Bf16::ZERO);
+        assert_eq!(out[2], bf(2.0));
+        assert_eq!(out[31], bf(3.0));
+        assert_eq!(ctr.vpexpand, 1);
+        assert_eq!(ctr.weight_stream_bytes, 6);
+    }
+
+    #[test]
+    fn vpexpandw_zero_mask_consumes_nothing() {
+        let mut ctr = EventCounters::default();
+        let (out, consumed) = vpexpandw(0, &[], &mut ctr);
+        assert_eq!(consumed, 0);
+        assert!(out.iter().all(|x| x.is_zero()));
+    }
+
+    #[test]
+    fn vpexpandb_full_mask() {
+        let mut ctr = EventCounters::default();
+        let stream: Vec<i8> = (0..64).map(|i| i as i8 - 32).collect();
+        let (out, consumed) = vpexpandb(u64::MAX, &stream, &mut ctr);
+        assert_eq!(consumed, 64);
+        assert_eq!(out.to_vec(), stream);
+    }
+
+    #[test]
+    fn vpopcntd_counts_per_lane() {
+        let mut ctr = EventCounters::default();
+        let mut lanes = [0u32; 16];
+        lanes[0] = 0b1011;
+        lanes[15] = u32::MAX;
+        let pc = vpopcntd(&lanes, &mut ctr);
+        assert_eq!(pc[0], 3);
+        assert_eq!(pc[1], 0);
+        assert_eq!(pc[15], 32);
+    }
+
+    #[test]
+    fn prefix_sum_matches_scan() {
+        let mut ctr = EventCounters::default();
+        let lanes: [u32; 16] = std::array::from_fn(|i| (i as u32 * 7 + 1) % 13);
+        let got = prefix_sum_u32x16(&lanes, &mut ctr);
+        let mut expect = [0u32; 16];
+        let mut run = 0;
+        for i in 0..16 {
+            run += lanes[i];
+            expect[i] = run;
+        }
+        assert_eq!(got, expect);
+        assert_eq!(ctr.prefix_step, 4, "log2(16) = 4 shift-add rounds");
+    }
+
+    #[test]
+    fn vdpbf16ps_pairwise_dot() {
+        let mut ctr = EventCounters::default();
+        let mut acc = [0f32; 16];
+        let a: [Bf16; 32] = std::array::from_fn(|i| bf((i % 4) as f32));
+        let b: [Bf16; 32] = std::array::from_fn(|_| bf(2.0));
+        vdpbf16ps(&mut acc, &a, &b, &mut ctr);
+        // lanes alternate: (0*2 + 1*2)=2, (2*2+3*2)=10, ...
+        assert_eq!(acc[0], 2.0);
+        assert_eq!(acc[1], 10.0);
+        assert_eq!(acc[2], 2.0);
+        assert_eq!(ctr.avx_fma, 1);
+    }
+
+    #[test]
+    fn scratch_store_counts_scratch_not_dram() {
+        let mut ctr = EventCounters::default();
+        let lanes = [Bf16::ONE; 32];
+        let mut buf = vec![Bf16::ZERO; 32];
+        store_scratch_bf16(&lanes, &mut buf, &mut ctr);
+        assert_eq!(ctr.scratch_bytes, 64);
+        assert_eq!(ctr.weight_stream_bytes, 0);
+        assert_eq!(buf[31], Bf16::ONE);
+    }
+}

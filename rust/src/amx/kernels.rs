@@ -1,0 +1,891 @@
+//! The four SparAMX kernels (paper §4), executed on the simulated ISA.
+//!
+//! * [`dense_amx_gemm_bf16`] — §4.1 dense kernel: the 8-tile schedule
+//!   (4 accumulators + 2 input tiles + 2 weight tiles → 1:1
+//!   compute-to-load ratio).
+//! * [`sparse_amx_gemm_bf16`] — §4.3 sparse kernel: weight tiles are
+//!   decompressed from bitmap+values with `vpexpandw`, `vpopcntd` and the
+//!   Algorithm-1 prefix sum into a cache-hot `weight_buffer`, then
+//!   `tileloadd`-ed into the AMX unit.
+//! * [`avx_sparse_gemm_bf16`] — §4.4 AVX kernel: vector FMA with
+//!   `num_column_groups` accumulator registers sharing one input
+//!   broadcast (Appendix B).
+//! * [`dense_amx_gemm_int8`] / [`sparse_amx_gemm_int8`] — §4.5 INT8
+//!   variants (64-element tile rows, `vpexpandb`, `tdpbssd`).
+//!
+//! All kernels return numerics identical (up to BF16/INT8 rounding) to a
+//! dense reference GEMM — asserted by the test suite — while ticking the
+//! event counters the perf model consumes.
+
+use super::avx;
+use super::events::EventCounters;
+use super::tiles::{pack_a_bf16, AmxUnit, LoadClass};
+use crate::sparse::format::{Element, SparseTensor, TileOrder};
+use crate::util::bf16::Bf16;
+
+/// Alias used throughout the crate's public API.
+pub type GemmCounters = EventCounters;
+
+/// Dense weights pre-packed into the AMX B-tile stream (VNNI interleave),
+/// same tile order as [`SparseTensor`]: column-block major, k fastest.
+#[derive(Clone, Debug)]
+pub struct DenseWeights<T: Element = Bf16> {
+    pub rows: usize,
+    pub cols: usize,
+    pub rows_padded: usize,
+    pub cols_padded: usize,
+    pub order: TileOrder,
+    /// `num_tiles × 16 × 64` bytes.
+    pub tiles: Vec<u8>,
+    _marker: std::marker::PhantomData<T>,
+}
+
+impl<T: Element> DenseWeights<T> {
+    pub fn k_chunks(&self) -> usize {
+        self.rows_padded / self.order.k_per_tile
+    }
+    pub fn col_blocks(&self) -> usize {
+        self.cols_padded / self.order.cols_per_tile
+    }
+    pub fn tile_index(&self, col_block: usize, k_chunk: usize) -> usize {
+        col_block * self.k_chunks() + k_chunk
+    }
+    /// Bytes of one tile (always 1 KiB on AMX).
+    pub const TILE_BYTES: usize = 1024;
+
+    pub fn tile_bytes(&self, tile: usize) -> &[u8] {
+        &self.tiles[tile * Self::TILE_BYTES..(tile + 1) * Self::TILE_BYTES]
+    }
+
+    /// Total bytes the dense kernel streams for weights.
+    pub fn stream_bytes(&self) -> usize {
+        self.tiles.len()
+    }
+
+    /// Pack a row-major `rows × cols` matrix.
+    pub fn pack(w: &[T], rows: usize, cols: usize) -> DenseWeights<T> {
+        assert_eq!(w.len(), rows * cols);
+        let order = TileOrder::for_elem::<T>();
+        let rows_padded = rows.div_ceil(order.k_per_tile) * order.k_per_tile;
+        let cols_padded = cols.div_ceil(order.cols_per_tile) * order.cols_per_tile;
+        let k_chunks = rows_padded / order.k_per_tile;
+        let col_blocks = cols_padded / order.cols_per_tile;
+        let mut tiles = vec![0u8; k_chunks * col_blocks * Self::TILE_BYTES];
+        let v = T::VNNI;
+        for cb in 0..col_blocks {
+            for kc in 0..k_chunks {
+                let t = cb * k_chunks + kc;
+                let base = t * Self::TILE_BYTES;
+                for r in 0..order.tile_rows {
+                    for c in 0..order.row_elems {
+                        let k = kc * order.k_per_tile + r * v + c % v;
+                        let n = cb * order.cols_per_tile + c / v;
+                        if k < rows && n < cols {
+                            let x = w[k * cols + n];
+                            write_elem::<T>(&mut tiles[base + r * 64..], c, x);
+                        }
+                    }
+                }
+            }
+        }
+        DenseWeights {
+            rows,
+            cols,
+            rows_padded,
+            cols_padded,
+            order,
+            tiles,
+            _marker: std::marker::PhantomData,
+        }
+    }
+}
+
+impl DenseWeights<Bf16> {
+    pub fn pack_f32(w: &[f32], rows: usize, cols: usize) -> DenseWeights<Bf16> {
+        let wb: Vec<Bf16> = w.iter().map(|&x| Bf16::from_f32(x)).collect();
+        DenseWeights::pack(&wb, rows, cols)
+    }
+}
+
+fn write_elem<T: Element>(row: &mut [u8], c: usize, x: T) {
+    match T::BYTES {
+        2 => {
+            let bits = (Bf16::from_f32(x.to_f32())).to_bits();
+            row[2 * c..2 * c + 2].copy_from_slice(&bits.to_le_bytes());
+        }
+        1 => {
+            row[c] = x.to_f32() as i8 as u8;
+        }
+        _ => unreachable!(),
+    }
+}
+
+/// Pack a `batch × rows_logical` f32 input into a zero-padded
+/// `batch × rows_padded` BF16 buffer (row-major).
+fn pack_input_bf16(input: &[f32], batch: usize, k: usize, k_padded: usize) -> Vec<u8> {
+    let mut buf = vec![0f32; batch * k_padded];
+    for b in 0..batch {
+        buf[b * k_padded..b * k_padded + k].copy_from_slice(&input[b * k..(b + 1) * k]);
+    }
+    pack_a_bf16(&buf, batch, k_padded, k_padded)
+}
+
+/// Extract `batch × cols` logical outputs from a padded f32 accumulator.
+fn extract_out(acc: &[f32], batch: usize, cols: usize, cols_padded: usize) -> Vec<f32> {
+    let mut out = vec![0f32; batch * cols];
+    for b in 0..batch {
+        out[b * cols..(b + 1) * cols]
+            .copy_from_slice(&acc[b * cols_padded..b * cols_padded + cols]);
+    }
+    out
+}
+
+/// Independent column-pair work items of the AMX schedule (the paper's
+/// parallelization dimension).
+fn col_tasks(cols_padded: usize) -> u64 {
+    let cb = cols_padded / 16;
+    (cb / 2 + cb % 2) as u64
+}
+
+/// Record a kernel's parallel granularity (min-merge semantics, see
+/// [`EventCounters::parallel_tasks`]).
+fn set_tasks(ctr: &mut EventCounters, tasks: u64) {
+    ctr.parallel_tasks = match (ctr.parallel_tasks, tasks) {
+        (0, x) => x,
+        (a, b) => a.min(b),
+    };
+}
+
+// ---------------------------------------------------------------------
+// §4.1 dense AMX kernel
+// ---------------------------------------------------------------------
+
+/// Dense BF16 GEMM on the 8-tile schedule. `input` is `batch × w.rows`
+/// row-major f32 (rounded through BF16 as the hardware would); returns
+/// `batch × w.cols` f32.
+pub fn dense_amx_gemm_bf16(
+    input: &[f32],
+    batch: usize,
+    w: &DenseWeights<Bf16>,
+    ctr: &mut EventCounters,
+) -> Vec<f32> {
+    assert_eq!(input.len(), batch * w.rows, "input shape");
+    ctr.weight_unique_bytes += w.stream_bytes() as u64;
+    ctr.input_unique_bytes += (batch * w.rows_padded * 2) as u64;
+    set_tasks(ctr, col_tasks(w.cols_padded));
+    let kp = w.order.k_per_tile; // 32
+    let a_bytes = pack_input_bf16(input, batch, w.rows, w.rows_padded);
+    let a_stride = w.rows_padded * 2;
+
+    let mut acc = vec![0f32; batch * w.cols_padded];
+    let mut amx = AmxUnit::new();
+    let mut out_tile = vec![0u8; 16 * 64];
+
+    // m in blocks of 32 rows (two input tiles), n in blocks of 32 cols
+    // (two weight tiles) — the Figure 5 schedule.
+    let mut m0 = 0;
+    while m0 < batch {
+        let m_rows = (batch - m0).min(32);
+        let m_hi = m_rows.min(16); // rows in tile 4
+        let m_lo = m_rows - m_hi; // rows in tile 5
+        let mut n0 = 0;
+        while n0 < w.cols_padded {
+            let two_blocks = n0 + 16 < w.cols_padded;
+            // accumulators: 0 ← 4×6, 1 ← 4×7, 2 ← 5×6, 3 ← 5×7
+            amx.config(0, m_hi, 64);
+            amx.tilezero(0, ctr);
+            if two_blocks {
+                amx.config(1, m_hi, 64);
+                amx.tilezero(1, ctr);
+            }
+            if m_lo > 0 {
+                amx.config(2, m_lo, 64);
+                amx.tilezero(2, ctr);
+                if two_blocks {
+                    amx.config(3, m_lo, 64);
+                    amx.tilezero(3, ctr);
+                }
+            }
+            for kc in 0..w.k_chunks() {
+                // input tiles
+                amx.config(4, m_hi, kp * 2);
+                let a_off = m0 * a_stride + kc * kp * 2;
+                amx.tileloadd(4, &a_bytes[a_off..], a_stride, LoadClass::Input, ctr);
+                if m_lo > 0 {
+                    amx.config(5, m_lo, kp * 2);
+                    let a_off2 = (m0 + 16) * a_stride + kc * kp * 2;
+                    amx.tileloadd(5, &a_bytes[a_off2..], a_stride, LoadClass::Input, ctr);
+                }
+                // weight tiles straight from the dense stream
+                amx.config(6, 16, 64);
+                let t6 = w.tile_index(n0 / 16, kc);
+                amx.tileloadd(6, w.tile_bytes(t6), 64, LoadClass::WeightStream, ctr);
+                if two_blocks {
+                    amx.config(7, 16, 64);
+                    let t7 = w.tile_index(n0 / 16 + 1, kc);
+                    amx.tileloadd(7, w.tile_bytes(t7), 64, LoadClass::WeightStream, ctr);
+                }
+                amx.tdpbf16ps(0, 4, 6, ctr);
+                if two_blocks {
+                    amx.tdpbf16ps(1, 4, 7, ctr);
+                }
+                if m_lo > 0 {
+                    amx.tdpbf16ps(2, 5, 6, ctr);
+                    if two_blocks {
+                        amx.tdpbf16ps(3, 5, 7, ctr);
+                    }
+                }
+            }
+            // store the (up to) four result tiles
+            let mut store = |amx: &mut AmxUnit,
+                             t: usize,
+                             rows: usize,
+                             row0: usize,
+                             col0: usize,
+                             ctr: &mut EventCounters| {
+                amx.tilestored(t, &mut out_tile, 64, ctr);
+                for r in 0..rows {
+                    for n in 0..16 {
+                        let v = f32::from_le_bytes(
+                            out_tile[r * 64 + 4 * n..r * 64 + 4 * n + 4]
+                                .try_into()
+                                .expect("4 bytes"),
+                        );
+                        acc[(row0 + r) * w.cols_padded + col0 + n] = v;
+                    }
+                }
+            };
+            store(&mut amx, 0, m_hi, m0, n0, ctr);
+            if two_blocks {
+                store(&mut amx, 1, m_hi, m0, n0 + 16, ctr);
+            }
+            if m_lo > 0 {
+                store(&mut amx, 2, m_lo, m0 + 16, n0, ctr);
+                if two_blocks {
+                    store(&mut amx, 3, m_lo, m0 + 16, n0 + 16, ctr);
+                }
+            }
+            n0 += if two_blocks { 32 } else { 16 };
+        }
+        m0 += 32;
+    }
+    extract_out(&acc, batch, w.cols, w.cols_padded)
+}
+
+// ---------------------------------------------------------------------
+// §4.3 sparse AMX kernel
+// ---------------------------------------------------------------------
+
+/// Decompress one sparse BF16 tile into `weight_buffer` (Algorithm 2) and
+/// return the buffer as tile bytes. Ticks: 1 bitmap load, 1 popcount,
+/// 4 prefix steps, 16 `vpexpandw`, 16 scratch stores.
+fn decompress_tile_bf16(
+    sp: &SparseTensor<Bf16>,
+    tile: usize,
+    weight_buffer: &mut [Bf16],
+    ctr: &mut EventCounters,
+) {
+    let meta = sp.tile_metadata(tile);
+    let lanes = avx::vmovdqu32(meta, ctr);
+    let pops = avx::vpopcntd(&lanes, ctr);
+    let offsets = avx::prefix_sum_u32x16(&pops, ctr);
+    let (vals, _) = sp.tile_values(tile);
+    for r in 0..16 {
+        let start = if r == 0 { 0 } else { offsets[r - 1] as usize };
+        let (expanded, consumed) = avx::vpexpandw(lanes[r], &vals[start..], ctr);
+        debug_assert_eq!(consumed, pops[r] as usize);
+        avx::store_scratch_bf16(&expanded, &mut weight_buffer[r * 32..], ctr);
+    }
+}
+
+/// Convert the expanded weight buffer to tile bytes into a reusable
+/// scratch (perf: avoids a per-tile allocation — EXPERIMENTS.md §Perf).
+fn buffer_to_bytes_bf16_into(weight_buffer: &[Bf16], out: &mut [u8]) {
+    debug_assert_eq!(out.len(), weight_buffer.len() * 2);
+    for (chunk, w) in out.chunks_exact_mut(2).zip(weight_buffer.iter()) {
+        chunk.copy_from_slice(&w.to_bits().to_le_bytes());
+    }
+}
+
+/// Sparse BF16 GEMM: identical schedule to the dense kernel, but weight
+/// tiles are rebuilt from the compressed stream before each `tileloadd`.
+pub fn sparse_amx_gemm_bf16(
+    input: &[f32],
+    batch: usize,
+    sp: &SparseTensor<Bf16>,
+    ctr: &mut EventCounters,
+) -> Vec<f32> {
+    assert_eq!(input.len(), batch * sp.rows, "input shape");
+    ctr.weight_unique_bytes += sp.bytes_sparse() as u64;
+    ctr.input_unique_bytes += (batch * sp.rows_padded * 2) as u64;
+    set_tasks(ctr, col_tasks(sp.cols_padded));
+    let kp = sp.order.k_per_tile;
+    let a_bytes = pack_input_bf16(input, batch, sp.rows, sp.rows_padded);
+    let a_stride = sp.rows_padded * 2;
+
+    let mut acc = vec![0f32; batch * sp.cols_padded];
+    let mut amx = AmxUnit::new();
+    let mut out_tile = vec![0u8; 16 * 64];
+    let mut weight_buffer = vec![Bf16::ZERO; 16 * 32];
+    let mut tile_bytes = vec![0u8; 16 * 64];
+
+    let mut m0 = 0;
+    while m0 < batch {
+        let m_rows = (batch - m0).min(32);
+        let m_hi = m_rows.min(16);
+        let m_lo = m_rows - m_hi;
+        let mut n0 = 0;
+        while n0 < sp.cols_padded {
+            let two_blocks = n0 + 16 < sp.cols_padded;
+            amx.config(0, m_hi, 64);
+            amx.tilezero(0, ctr);
+            if two_blocks {
+                amx.config(1, m_hi, 64);
+                amx.tilezero(1, ctr);
+            }
+            if m_lo > 0 {
+                amx.config(2, m_lo, 64);
+                amx.tilezero(2, ctr);
+                if two_blocks {
+                    amx.config(3, m_lo, 64);
+                    amx.tilezero(3, ctr);
+                }
+            }
+            for kc in 0..sp.k_chunks() {
+                amx.config(4, m_hi, kp * 2);
+                let a_off = m0 * a_stride + kc * kp * 2;
+                amx.tileloadd(4, &a_bytes[a_off..], a_stride, LoadClass::Input, ctr);
+                if m_lo > 0 {
+                    amx.config(5, m_lo, kp * 2);
+                    let a_off2 = (m0 + 16) * a_stride + kc * kp * 2;
+                    amx.tileloadd(5, &a_bytes[a_off2..], a_stride, LoadClass::Input, ctr);
+                }
+                // decompress weight tile(s) into the hot buffer, then load
+                amx.config(6, 16, 64);
+                let t6 = sp.tile_index(n0 / 16, kc);
+                decompress_tile_bf16(sp, t6, &mut weight_buffer, ctr);
+                buffer_to_bytes_bf16_into(&weight_buffer, &mut tile_bytes);
+                amx.tileloadd(6, &tile_bytes, 64, LoadClass::Scratch, ctr);
+                if two_blocks {
+                    amx.config(7, 16, 64);
+                    let t7 = sp.tile_index(n0 / 16 + 1, kc);
+                    decompress_tile_bf16(sp, t7, &mut weight_buffer, ctr);
+                    buffer_to_bytes_bf16_into(&weight_buffer, &mut tile_bytes);
+                    amx.tileloadd(7, &tile_bytes, 64, LoadClass::Scratch, ctr);
+                }
+                amx.tdpbf16ps(0, 4, 6, ctr);
+                if two_blocks {
+                    amx.tdpbf16ps(1, 4, 7, ctr);
+                }
+                if m_lo > 0 {
+                    amx.tdpbf16ps(2, 5, 6, ctr);
+                    if two_blocks {
+                        amx.tdpbf16ps(3, 5, 7, ctr);
+                    }
+                }
+            }
+            let mut store = |amx: &mut AmxUnit,
+                             t: usize,
+                             rows: usize,
+                             row0: usize,
+                             col0: usize,
+                             ctr: &mut EventCounters| {
+                amx.tilestored(t, &mut out_tile, 64, ctr);
+                for r in 0..rows {
+                    for n in 0..16 {
+                        let v = f32::from_le_bytes(
+                            out_tile[r * 64 + 4 * n..r * 64 + 4 * n + 4]
+                                .try_into()
+                                .expect("4 bytes"),
+                        );
+                        acc[(row0 + r) * sp.cols_padded + col0 + n] = v;
+                    }
+                }
+            };
+            store(&mut amx, 0, m_hi, m0, n0, ctr);
+            if two_blocks {
+                store(&mut amx, 1, m_hi, m0, n0 + 16, ctr);
+            }
+            if m_lo > 0 {
+                store(&mut amx, 2, m_lo, m0 + 16, n0, ctr);
+                if two_blocks {
+                    store(&mut amx, 3, m_lo, m0 + 16, n0 + 16, ctr);
+                }
+            }
+            n0 += if two_blocks { 32 } else { 16 };
+        }
+        m0 += 32;
+    }
+    extract_out(&acc, batch, sp.cols, sp.cols_padded)
+}
+
+// ---------------------------------------------------------------------
+// §4.4 AVX sparse kernel (Appendix B column groups)
+// ---------------------------------------------------------------------
+
+/// Sparse BF16 GEMM using only AVX-512: per 16-neuron column block, the
+/// accumulator lives in a vector register; weight rows are expanded with
+/// `vpexpandw` and consumed directly by `vdpbf16ps` — no scratch bounce
+/// (this is why AVX can beat AMX at batch 1, paper §7).
+///
+/// `column_groups` (Appendix B `num_neuron_groups`): how many column
+/// blocks share one input broadcast. Larger groups amortize the
+/// broadcast and improve ILP; the value is baked into the packed layout
+/// at load time in the real system.
+pub fn avx_sparse_gemm_bf16(
+    input: &[f32],
+    batch: usize,
+    sp: &SparseTensor<Bf16>,
+    column_groups: usize,
+    ctr: &mut EventCounters,
+) -> Vec<f32> {
+    assert_eq!(input.len(), batch * sp.rows, "input shape");
+    let g = column_groups.max(1);
+    ctr.weight_unique_bytes += sp.bytes_sparse() as u64;
+    ctr.input_unique_bytes += (batch * sp.rows * 4) as u64;
+    set_tasks(ctr, (sp.col_blocks().div_ceil(g)) as u64);
+    let mut out = vec![0f32; batch * sp.cols];
+    let cbs = sp.col_blocks();
+    for b in 0..batch {
+        let row = &input[b * sp.rows..(b + 1) * sp.rows];
+        // input row is read once per column-group sweep
+        let mut cb0 = 0;
+        while cb0 < cbs {
+            let group = (cbs - cb0).min(g);
+            let mut accs = vec![[0f32; 16]; group];
+            for kc in 0..sp.k_chunks() {
+                // bitmap lanes + popcounts for each block in the group
+                let mut lanes_g = Vec::with_capacity(group);
+                let mut offs_g = Vec::with_capacity(group);
+                for gi in 0..group {
+                    let tile = sp.tile_index(cb0 + gi, kc);
+                    let lanes = avx::vmovdqu32(sp.tile_metadata(tile), ctr);
+                    let pops = avx::vpopcntd(&lanes, ctr);
+                    offs_g.push(avx::prefix_sum_u32x16(&pops, ctr));
+                    lanes_g.push(lanes);
+                }
+                for r in 0..16 {
+                    // one broadcast of the input k-pair shared by the group
+                    let k0 = kc * sp.order.k_per_tile + r * 2;
+                    let x0 = if k0 < sp.rows { row[k0] } else { 0.0 };
+                    let x1 = if k0 + 1 < sp.rows { row[k0 + 1] } else { 0.0 };
+                    let mut pair = [Bf16::ZERO; 32];
+                    for n in 0..16 {
+                        pair[2 * n] = Bf16::from_f32(x0);
+                        pair[2 * n + 1] = Bf16::from_f32(x1);
+                    }
+                    ctr.broadcast += 1;
+                    ctr.input_bytes += 4;
+                    for gi in 0..group {
+                        let tile = sp.tile_index(cb0 + gi, kc);
+                        let (vals, _) = sp.tile_values(tile);
+                        let start = if r == 0 { 0 } else { offs_g[gi][r - 1] as usize };
+                        let (wreg, _) = avx::vpexpandw(lanes_g[gi][r], &vals[start..], ctr);
+                        avx::vdpbf16ps(&mut accs[gi], &wreg, &pair, ctr);
+                        // model the dependency-chain stall (see analytic.rs)
+                        let lat = 4u64;
+                        ctr.fma_dep_stall += lat / (group as u64).min(lat) - 1;
+                    }
+                }
+            }
+            for (gi, acc) in accs.iter().enumerate() {
+                let n0 = (cb0 + gi) * 16;
+                let take = (sp.cols - n0).min(16);
+                let mut padded = [0f32; 16];
+                padded.copy_from_slice(acc);
+                let mut dst = vec![0f32; 16];
+                avx::store_f32x16(&padded, &mut dst, ctr);
+                out[b * sp.cols + n0..b * sp.cols + n0 + take]
+                    .copy_from_slice(&dst[..take]);
+            }
+            cb0 += group;
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// §4.5 INT8 kernels
+// ---------------------------------------------------------------------
+
+/// Dense INT8 GEMM (`tdpbssd`), INT32 outputs. `input` is `batch × rows`
+/// row-major i8.
+pub fn dense_amx_gemm_int8(
+    input: &[i8],
+    batch: usize,
+    w: &DenseWeights<i8>,
+    ctr: &mut EventCounters,
+) -> Vec<i32> {
+    ctr.weight_unique_bytes += w.stream_bytes() as u64;
+    ctr.input_unique_bytes += (batch * w.rows_padded) as u64;
+    set_tasks(ctr, col_tasks(w.cols_padded));
+    int8_gemm_impl(input, batch, w.rows, w.rows_padded, w.cols, w.cols_padded, ctr, |amx,
+         t,
+         cb,
+         kc,
+         ctr| {
+        let tile = w.tile_index(cb, kc);
+        amx.tileloadd(t, w.tile_bytes(tile), 64, LoadClass::WeightStream, ctr);
+    })
+}
+
+/// Sparse INT8 GEMM: metadata is fetched as two 512-bit registers per
+/// tile (8 rows each — paper §4.5), expanded with `vpexpandb`.
+pub fn sparse_amx_gemm_int8(
+    input: &[i8],
+    batch: usize,
+    sp: &SparseTensor<i8>,
+    ctr: &mut EventCounters,
+) -> Vec<i32> {
+    ctr.weight_unique_bytes += sp.bytes_sparse() as u64;
+    ctr.input_unique_bytes += (batch * sp.rows_padded) as u64;
+    set_tasks(ctr, col_tasks(sp.cols_padded));
+    let mut weight_buffer = vec![0i8; 16 * 64];
+    int8_gemm_impl(
+        input,
+        batch,
+        sp.rows,
+        sp.rows_padded,
+        sp.cols,
+        sp.cols_padded,
+        ctr,
+        |amx, t, cb, kc, ctr| {
+            let tile = sp.tile_index(cb, kc);
+            let meta = sp.tile_metadata(tile);
+            // two bitmap registers of 8×64 bits
+            ctr.avx_load += 2;
+            ctr.weight_stream_bytes += 128;
+            let (vals, _) = sp.tile_values(tile);
+            let mut consumed = 0usize;
+            for r in 0..16 {
+                // popcount-based offsets: one vpopcnt per register half
+                if r % 8 == 0 {
+                    ctr.vpopcnt += 1;
+                    ctr.prefix_step += 3; // log2(8)
+                }
+                let (expanded, c) = avx::vpexpandb(meta[r], &vals[consumed..], ctr);
+                consumed += c;
+                avx::store_scratch_i8(&expanded, &mut weight_buffer[r * 64..], ctr);
+            }
+            // reinterpret i8 scratch as bytes without allocating
+            let bytes = unsafe {
+                std::slice::from_raw_parts(weight_buffer.as_ptr() as *const u8, weight_buffer.len())
+            };
+            amx.tileloadd(t, bytes, 64, LoadClass::Scratch, ctr);
+        },
+    )
+}
+
+/// Shared INT8 schedule; `load_weight_tile(amx, reg, col_block, k_chunk)`
+/// abstracts dense-stream vs decompress-then-load.
+#[allow(clippy::too_many_arguments)]
+fn int8_gemm_impl<F>(
+    input: &[i8],
+    batch: usize,
+    rows: usize,
+    rows_padded: usize,
+    cols: usize,
+    cols_padded: usize,
+    ctr: &mut EventCounters,
+    mut load_weight_tile: F,
+) -> Vec<i32>
+where
+    F: FnMut(&mut AmxUnit, usize, usize, usize, &mut EventCounters),
+{
+    assert_eq!(input.len(), batch * rows, "input shape");
+    let kp = 64usize;
+    // zero-padded input
+    let mut a = vec![0u8; batch * rows_padded];
+    for b in 0..batch {
+        for k in 0..rows {
+            a[b * rows_padded + k] = input[b * rows + k] as u8;
+        }
+    }
+    let k_chunks = rows_padded / kp;
+    let mut acc = vec![0i32; batch * cols_padded];
+    let mut amx = AmxUnit::new();
+    let mut out_tile = vec![0u8; 16 * 64];
+
+    let mut m0 = 0;
+    while m0 < batch {
+        let m_rows = (batch - m0).min(32);
+        let m_hi = m_rows.min(16);
+        let m_lo = m_rows - m_hi;
+        let mut n0 = 0;
+        while n0 < cols_padded {
+            let two_blocks = n0 + 16 < cols_padded;
+            amx.config(0, m_hi, 64);
+            amx.tilezero(0, ctr);
+            if two_blocks {
+                amx.config(1, m_hi, 64);
+                amx.tilezero(1, ctr);
+            }
+            if m_lo > 0 {
+                amx.config(2, m_lo, 64);
+                amx.tilezero(2, ctr);
+                if two_blocks {
+                    amx.config(3, m_lo, 64);
+                    amx.tilezero(3, ctr);
+                }
+            }
+            for kc in 0..k_chunks {
+                amx.config(4, m_hi, kp);
+                amx.tileloadd(4, &a[m0 * rows_padded + kc * kp..], rows_padded, LoadClass::Input, ctr);
+                if m_lo > 0 {
+                    amx.config(5, m_lo, kp);
+                    amx.tileloadd(5, &a[(m0 + 16) * rows_padded + kc * kp..], rows_padded, LoadClass::Input, ctr);
+                }
+                amx.config(6, 16, 64);
+                load_weight_tile(&mut amx, 6, n0 / 16, kc, ctr);
+                if two_blocks {
+                    amx.config(7, 16, 64);
+                    load_weight_tile(&mut amx, 7, n0 / 16 + 1, kc, ctr);
+                }
+                amx.tdpbssd(0, 4, 6, ctr);
+                if two_blocks {
+                    amx.tdpbssd(1, 4, 7, ctr);
+                }
+                if m_lo > 0 {
+                    amx.tdpbssd(2, 5, 6, ctr);
+                    if two_blocks {
+                        amx.tdpbssd(3, 5, 7, ctr);
+                    }
+                }
+            }
+            let mut store = |amx: &mut AmxUnit,
+                             t: usize,
+                             rws: usize,
+                             row0: usize,
+                             col0: usize,
+                             ctr: &mut EventCounters| {
+                amx.tilestored(t, &mut out_tile, 64, ctr);
+                for r in 0..rws {
+                    for n in 0..16 {
+                        let v = i32::from_le_bytes(
+                            out_tile[r * 64 + 4 * n..r * 64 + 4 * n + 4]
+                                .try_into()
+                                .expect("4 bytes"),
+                        );
+                        acc[(row0 + r) * cols_padded + col0 + n] = v;
+                    }
+                }
+            };
+            store(&mut amx, 0, m_hi, m0, n0, ctr);
+            if two_blocks {
+                store(&mut amx, 1, m_hi, m0, n0 + 16, ctr);
+            }
+            if m_lo > 0 {
+                store(&mut amx, 2, m_lo, m0 + 16, n0, ctr);
+                if two_blocks {
+                    store(&mut amx, 3, m_lo, m0 + 16, n0 + 16, ctr);
+                }
+            }
+            n0 += if two_blocks { 32 } else { 16 };
+        }
+        m0 += 32;
+    }
+    let mut out = vec![0i32; batch * cols];
+    for b in 0..batch {
+        out[b * cols..(b + 1) * cols]
+            .copy_from_slice(&acc[b * cols_padded..b * cols_padded + cols]);
+    }
+    out
+}
+
+/// Reference f32 GEMM with operands rounded through BF16 — the oracle the
+/// simulated kernels are validated against.
+pub fn ref_gemm_bf16(input: &[f32], batch: usize, w: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    let mut out = vec![0f32; batch * cols];
+    for b in 0..batch {
+        for k in 0..rows {
+            let x = crate::util::bf16::round_f32(input[b * rows + k]);
+            if x == 0.0 {
+                continue;
+            }
+            for n in 0..cols {
+                let wv = crate::util::bf16::round_f32(w[k * cols + n]);
+                out[b * cols + n] += x * wv;
+            }
+        }
+    }
+    out
+}
+
+/// Reference INT8 GEMM (exact INT32).
+pub fn ref_gemm_int8(input: &[i8], batch: usize, w: &[i8], rows: usize, cols: usize) -> Vec<i32> {
+    let mut out = vec![0i32; batch * cols];
+    for b in 0..batch {
+        for k in 0..rows {
+            let x = input[b * rows + k] as i32;
+            for n in 0..cols {
+                out[b * cols + n] += x * w[k * cols + n] as i32;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::prune::magnitude_prune;
+    use crate::util::XorShift;
+
+    fn rand_mat(g: &mut XorShift, n: usize) -> Vec<f32> {
+        (0..n).map(|_| g.next_normal()).collect()
+    }
+
+    fn assert_close(got: &[f32], want: &[f32], k: usize) {
+        assert_eq!(got.len(), want.len());
+        // bf16 accumulation error grows with sqrt(k)
+        let tol = 0.02 * (k as f32).sqrt();
+        for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+            assert!(
+                (g - w).abs() <= tol + w.abs() * 0.02,
+                "idx {i}: got {g}, want {w} (tol {tol})"
+            );
+        }
+    }
+
+    #[test]
+    fn dense_kernel_matches_reference() {
+        let mut g = XorShift::new(10);
+        for &(batch, rows, cols) in &[(1usize, 64usize, 32usize), (4, 96, 48), (17, 32, 16), (33, 64, 80)] {
+            let w = rand_mat(&mut g, rows * cols);
+            let x = rand_mat(&mut g, batch * rows);
+            let dw = DenseWeights::pack_f32(&w, rows, cols);
+            let mut ctr = EventCounters::default();
+            let got = dense_amx_gemm_bf16(&x, batch, &dw, &mut ctr);
+            let want = ref_gemm_bf16(&x, batch, &w, rows, cols);
+            assert_close(&got, &want, rows);
+            assert!(ctr.tdp_bf16 > 0);
+            assert_eq!(ctr.vpexpand, 0, "dense kernel never expands");
+        }
+    }
+
+    #[test]
+    fn sparse_kernel_matches_reference_across_sparsity() {
+        let mut g = XorShift::new(11);
+        let (batch, rows, cols) = (2usize, 128usize, 64usize);
+        for s in [0.0, 0.3, 0.5, 0.9, 1.0] {
+            let w = magnitude_prune(&rand_mat(&mut g, rows * cols), s);
+            let x = rand_mat(&mut g, batch * rows);
+            let sp = SparseTensor::pack_f32(&w, rows, cols);
+            let mut ctr = EventCounters::default();
+            let got = sparse_amx_gemm_bf16(&x, batch, &sp, &mut ctr);
+            let want = ref_gemm_bf16(&x, batch, &w, rows, cols);
+            assert_close(&got, &want, rows);
+        }
+    }
+
+    #[test]
+    fn sparse_kernel_unaligned_shapes() {
+        let mut g = XorShift::new(12);
+        let (batch, rows, cols) = (3usize, 50usize, 37usize);
+        let w = magnitude_prune(&rand_mat(&mut g, rows * cols), 0.4);
+        let x = rand_mat(&mut g, batch * rows);
+        let sp = SparseTensor::pack_f32(&w, rows, cols);
+        let mut ctr = EventCounters::default();
+        let got = sparse_amx_gemm_bf16(&x, batch, &sp, &mut ctr);
+        let want = ref_gemm_bf16(&x, batch, &w, rows, cols);
+        assert_close(&got, &want, rows);
+    }
+
+    #[test]
+    fn sparse_moves_fewer_weight_bytes_than_dense() {
+        let mut g = XorShift::new(13);
+        let (rows, cols) = (256, 128);
+        let w = magnitude_prune(&rand_mat(&mut g, rows * cols), 0.7);
+        let x = rand_mat(&mut g, rows);
+        let dw = DenseWeights::pack_f32(&w, rows, cols);
+        let sp = SparseTensor::pack_f32(&w, rows, cols);
+        let mut cd = EventCounters::default();
+        let mut cs = EventCounters::default();
+        dense_amx_gemm_bf16(&x, 1, &dw, &mut cd);
+        sparse_amx_gemm_bf16(&x, 1, &sp, &mut cs);
+        // at 70% sparsity: bitmap 1/16 + values ~0.3 → ~0.36 of dense
+        let ratio = cs.weight_stream_bytes as f64 / cd.weight_stream_bytes as f64;
+        assert!(ratio < 0.45, "ratio={ratio}");
+        // but identical tile-compute count
+        assert_eq!(cd.tdp_bf16, cs.tdp_bf16);
+        // and sparse pays decompression instructions
+        assert!(cs.vpexpand > 0 && cs.vpopcnt > 0 && cs.prefix_step > 0);
+    }
+
+    #[test]
+    fn avx_kernel_matches_reference_and_groups_are_equivalent() {
+        let mut g = XorShift::new(14);
+        let (batch, rows, cols) = (2usize, 64usize, 96usize);
+        let w = magnitude_prune(&rand_mat(&mut g, rows * cols), 0.5);
+        let x = rand_mat(&mut g, batch * rows);
+        let sp = SparseTensor::pack_f32(&w, rows, cols);
+        let want = ref_gemm_bf16(&x, batch, &w, rows, cols);
+        let mut base_out = None;
+        for groups in [1usize, 2, 4, 8] {
+            let mut ctr = EventCounters::default();
+            let got = avx_sparse_gemm_bf16(&x, batch, &sp, groups, &mut ctr);
+            assert_close(&got, &want, rows);
+            if let Some(b) = &base_out {
+                assert_eq!(&got, b, "groups must not change numerics");
+            } else {
+                base_out = Some(got);
+            }
+        }
+    }
+
+    #[test]
+    fn avx_column_groups_amortize_broadcasts() {
+        let mut g = XorShift::new(15);
+        let (rows, cols) = (64, 128);
+        let w = magnitude_prune(&rand_mat(&mut g, rows * cols), 0.5);
+        let x = rand_mat(&mut g, rows);
+        let sp = SparseTensor::pack_f32(&w, rows, cols);
+        let mut c1 = EventCounters::default();
+        let mut c8 = EventCounters::default();
+        avx_sparse_gemm_bf16(&x, 1, &sp, 1, &mut c1);
+        avx_sparse_gemm_bf16(&x, 1, &sp, 8, &mut c8);
+        assert!(c8.broadcast < c1.broadcast, "{} !< {}", c8.broadcast, c1.broadcast);
+        assert_eq!(c1.avx_fma, c8.avx_fma, "same FMA work");
+    }
+
+    #[test]
+    fn int8_dense_and_sparse_match_reference_exactly() {
+        let mut g = XorShift::new(16);
+        let (batch, rows, cols) = (3usize, 128usize, 48usize);
+        let wf: Vec<i8> = (0..rows * cols)
+            .map(|_| {
+                if g.next_f64() < 0.5 {
+                    0
+                } else {
+                    (g.below(200) as i32 - 100) as i8
+                }
+            })
+            .collect();
+        let x: Vec<i8> = (0..batch * rows).map(|_| (g.below(200) as i32 - 100) as i8).collect();
+        let want = ref_gemm_int8(&x, batch, &wf, rows, cols);
+
+        let dw: DenseWeights<i8> = DenseWeights::pack(&wf, rows, cols);
+        let mut cd = EventCounters::default();
+        assert_eq!(dense_amx_gemm_int8(&x, batch, &dw, &mut cd), want);
+
+        let sp: SparseTensor<i8> = SparseTensor::pack(&wf, rows, cols);
+        let mut cs = EventCounters::default();
+        assert_eq!(sparse_amx_gemm_int8(&x, batch, &sp, &mut cs), want);
+        assert!(cs.weight_stream_bytes < cd.weight_stream_bytes);
+    }
+
+    #[test]
+    fn compute_to_load_ratio_is_one_for_interior_blocks() {
+        // 8-tile schedule: per k-step in an interior 32x32 block, 4 loads
+        // (2 input + 2 weight) and 4 tdp ops → 1:1 (paper §4.1).
+        let mut g = XorShift::new(17);
+        let (batch, rows, cols) = (32usize, 64usize, 64usize);
+        let w = rand_mat(&mut g, rows * cols);
+        let x = rand_mat(&mut g, batch * rows);
+        let dw = DenseWeights::pack_f32(&w, rows, cols);
+        let mut ctr = EventCounters::default();
+        dense_amx_gemm_bf16(&x, batch, &dw, &mut ctr);
+        let loads = ctr.tile_load_input + ctr.tile_load_weight;
+        assert_eq!(ctr.tdp_bf16, loads, "1:1 compute-to-load");
+    }
+}

@@ -1,0 +1,24 @@
+//! Functional, instruction-level simulator of the Intel AMX tile
+//! architecture and the AVX-512 operations SparAMX uses, plus the four
+//! paper kernels built on top of them.
+//!
+//! The container this repo runs in has no AMX (and may not even have
+//! AVX-512), so the kernels execute against a software model that:
+//!
+//! 1. computes **bit-exact the same numerics** the hardware would
+//!    (BF16 multiply → FP32 accumulate; INT8 → INT32), and
+//! 2. counts **every architectural event** the real kernel would issue
+//!    (tile loads/stores, `tdpbf16ps`/`tdpbssd`, `vpexpandw`,
+//!    `vpopcntd`, prefix-sum steps, bytes streamed from DRAM vs. bytes
+//!    bounced through the cached `weight_buffer`).
+//!
+//! The event counts drive the [`crate::perf`] cost model that regenerates
+//! the paper's tables and figures (DESIGN.md §2, §5).
+
+pub mod events;
+pub mod tiles;
+pub mod avx;
+pub mod kernels;
+
+pub use events::EventCounters;
+pub use tiles::{AmxUnit, Tile, MAX_ROWS, MAX_COLSB};

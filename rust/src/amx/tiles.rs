@@ -1,0 +1,404 @@
+//! The AMX tile register file and tile instructions.
+//!
+//! Models the architecture described in paper §2.4 / Figure 4: eight tile
+//! registers, each up to 16 rows × 64 bytes; `tdpbf16ps` multiplies a
+//! BF16 A-tile by a VNNI-interleaved BF16 B-tile accumulating FP32;
+//! `tdpbssd` does the same for signed INT8 with INT32 accumulation.
+
+use super::events::EventCounters;
+use crate::util::bf16::Bf16;
+
+/// Maximum tile rows (architectural).
+pub const MAX_ROWS: usize = 16;
+/// Maximum bytes per tile row (architectural).
+pub const MAX_COLSB: usize = 64;
+/// Number of tile registers per AMX unit.
+pub const NUM_TILES: usize = 8;
+
+/// One tile register: raw bytes plus its configured shape.
+#[derive(Clone)]
+pub struct Tile {
+    pub rows: usize,
+    pub colsb: usize,
+    data: [u8; MAX_ROWS * MAX_COLSB],
+}
+
+impl Default for Tile {
+    fn default() -> Self {
+        Tile {
+            rows: MAX_ROWS,
+            colsb: MAX_COLSB,
+            data: [0; MAX_ROWS * MAX_COLSB],
+        }
+    }
+}
+
+impl Tile {
+    fn row(&self, r: usize) -> &[u8] {
+        &self.data[r * MAX_COLSB..r * MAX_COLSB + self.colsb]
+    }
+
+    fn row_mut(&mut self, r: usize) -> &mut [u8] {
+        &mut self.data[r * MAX_COLSB..r * MAX_COLSB + self.colsb]
+    }
+
+    /// Read element `(r, i)` as BF16.
+    pub fn bf16(&self, r: usize, i: usize) -> Bf16 {
+        let b = self.row(r);
+        Bf16::from_bits(u16::from_le_bytes([b[2 * i], b[2 * i + 1]]))
+    }
+
+    /// Read element `(r, i)` as f32 (for accumulator tiles).
+    pub fn f32(&self, r: usize, i: usize) -> f32 {
+        let b = self.row(r);
+        f32::from_le_bytes([b[4 * i], b[4 * i + 1], b[4 * i + 2], b[4 * i + 3]])
+    }
+
+    fn set_f32(&mut self, r: usize, i: usize, v: f32) {
+        let b = self.row_mut(r);
+        b[4 * i..4 * i + 4].copy_from_slice(&v.to_le_bytes());
+    }
+
+    /// Read element `(r, i)` as i8.
+    pub fn i8(&self, r: usize, i: usize) -> i8 {
+        self.row(r)[i] as i8
+    }
+
+    /// Read element `(r, i)` as i32 (for INT8 accumulator tiles).
+    pub fn i32(&self, r: usize, i: usize) -> i32 {
+        let b = self.row(r);
+        i32::from_le_bytes([b[4 * i], b[4 * i + 1], b[4 * i + 2], b[4 * i + 3]])
+    }
+
+    fn set_i32(&mut self, r: usize, i: usize, v: i32) {
+        let b = self.row_mut(r);
+        b[4 * i..4 * i + 4].copy_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// One AMX unit: 8 tile registers + the tile ISA. All instructions tick
+/// the supplied [`EventCounters`].
+#[derive(Default)]
+pub struct AmxUnit {
+    tiles: [Tile; NUM_TILES],
+}
+
+/// Classification of a `tileloadd` source, for traffic accounting.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LoadClass {
+    /// Activation tile (input rows).
+    Input,
+    /// Weight tile streamed directly from the (dense) weight stream.
+    WeightStream,
+    /// Weight tile read back from the hot decompression buffer — charged
+    /// to `scratch_bytes`, not the DRAM stream.
+    Scratch,
+}
+
+impl AmxUnit {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Configure a tile's shape (models `ldtilecfg`).
+    pub fn config(&mut self, t: usize, rows: usize, colsb: usize) {
+        assert!(rows <= MAX_ROWS && colsb <= MAX_COLSB, "tile shape too large");
+        self.tiles[t].rows = rows;
+        self.tiles[t].colsb = colsb;
+    }
+
+    /// Borrow a tile (tests / kernel result extraction).
+    pub fn tile(&self, t: usize) -> &Tile {
+        &self.tiles[t]
+    }
+
+    /// `tilezero t`.
+    pub fn tilezero(&mut self, t: usize, ctr: &mut EventCounters) {
+        self.tiles[t].data = [0; MAX_ROWS * MAX_COLSB];
+        ctr.tile_zero += 1;
+    }
+
+    /// `tileloadd t, [src + stride]`: load `rows × colsb` bytes. `class`
+    /// decides which traffic counter the bytes land in.
+    pub fn tileloadd(
+        &mut self,
+        t: usize,
+        src: &[u8],
+        stride: usize,
+        class: LoadClass,
+        ctr: &mut EventCounters,
+    ) {
+        let (rows, colsb) = (self.tiles[t].rows, self.tiles[t].colsb);
+        for r in 0..rows {
+            let line = &src[r * stride..r * stride + colsb];
+            self.tiles[t].row_mut(r).copy_from_slice(line);
+        }
+        let bytes = (rows * colsb) as u64;
+        match class {
+            LoadClass::Input => {
+                ctr.tile_load_input += 1;
+                ctr.input_bytes += bytes;
+            }
+            LoadClass::WeightStream => {
+                ctr.tile_load_weight += 1;
+                ctr.weight_stream_bytes += bytes;
+            }
+            LoadClass::Scratch => {
+                ctr.tile_load_weight += 1;
+                ctr.scratch_bytes += bytes;
+            }
+        }
+    }
+
+    /// `tilestored [dst + stride], t`.
+    pub fn tilestored(
+        &mut self,
+        t: usize,
+        dst: &mut [u8],
+        stride: usize,
+        ctr: &mut EventCounters,
+    ) {
+        let (rows, colsb) = (self.tiles[t].rows, self.tiles[t].colsb);
+        for r in 0..rows {
+            dst[r * stride..r * stride + colsb].copy_from_slice(self.tiles[t].row(r));
+        }
+        ctr.tile_store += 1;
+        ctr.output_bytes += (rows * colsb) as u64;
+    }
+
+    /// `tdpbf16ps dst, a, b` — BF16 tile matmul, FP32 accumulate.
+    ///
+    /// `a`: M rows × 2·Kp BF16 (VNNI pairs along the row).
+    /// `b`: Kp rows × 32 BF16, row `k` holding `(n, pair)` interleaved.
+    /// `dst`: M rows × 16 FP32, `dst[m][n] += Σ_k Σ_p a[m][2k+p]·b[k][2n+p]`.
+    pub fn tdpbf16ps(&mut self, dst: usize, a: usize, b: usize, ctr: &mut EventCounters) {
+        let m_rows = self.tiles[a].rows;
+        let k_pairs = self.tiles[b].rows;
+        debug_assert_eq!(self.tiles[a].colsb, k_pairs * 4, "A colsb must be 4·Kp");
+        let n_cols = self.tiles[b].colsb / 4;
+        // decode both operands to f32 once (perf: the naive version
+        // re-extracted B's bf16 bytes m_rows times — EXPERIMENTS.md §Perf)
+        let mut a_f32 = [[0f32; 32]; MAX_ROWS];
+        for (m, row) in a_f32.iter_mut().enumerate().take(m_rows) {
+            for (k, slot) in row.iter_mut().enumerate().take(2 * k_pairs) {
+                *slot = self.tiles[a].bf16(m, k).to_f32();
+            }
+        }
+        let mut b_f32 = [[0f32; 32]; MAX_ROWS];
+        for (k, row) in b_f32.iter_mut().enumerate().take(k_pairs) {
+            for (n, slot) in row.iter_mut().enumerate().take(2 * n_cols) {
+                *slot = self.tiles[b].bf16(k, n).to_f32();
+            }
+        }
+        let mut acc = [0f32; MAX_ROWS * 16];
+        for m in 0..m_rows {
+            let arow = &a_f32[m];
+            let out = &mut acc[m * n_cols..(m + 1) * n_cols];
+            for k in 0..k_pairs {
+                let (a0, a1) = (arow[2 * k], arow[2 * k + 1]);
+                let brow = &b_f32[k];
+                for (n, o) in out.iter_mut().enumerate() {
+                    *o += a0 * brow[2 * n] + a1 * brow[2 * n + 1];
+                }
+            }
+        }
+        for m in 0..m_rows {
+            for n in 0..n_cols {
+                let cur = self.tiles[dst].f32(m, n);
+                self.tiles[dst].set_f32(m, n, cur + acc[m * n_cols + n]);
+            }
+        }
+        ctr.tdp_bf16 += 1;
+    }
+
+    /// `tdpbssd dst, a, b` — signed INT8 tile matmul, INT32 accumulate.
+    ///
+    /// `a`: M rows × 4·Kq INT8. `b`: Kq rows × 64 INT8 with quads of `k`
+    /// interleaved per output column. `dst`: M × 16 INT32.
+    pub fn tdpbssd(&mut self, dst: usize, a: usize, b: usize, ctr: &mut EventCounters) {
+        let m_rows = self.tiles[a].rows;
+        let k_quads = self.tiles[b].rows;
+        debug_assert_eq!(self.tiles[a].colsb, k_quads * 4, "A colsb must be 4·Kq");
+        let n_cols = self.tiles[b].colsb / 4;
+        for m in 0..m_rows {
+            for n in 0..n_cols {
+                let mut acc = 0i32;
+                for k in 0..k_quads {
+                    for p in 0..4 {
+                        let av = self.tiles[a].i8(m, 4 * k + p) as i32;
+                        let bv = self.tiles[b].i8(k, 4 * n + p) as i32;
+                        acc += av * bv;
+                    }
+                }
+                let cur = self.tiles[dst].i32(m, n);
+                self.tiles[dst].set_i32(m, n, cur + acc);
+            }
+        }
+        ctr.tdp_int8 += 1;
+    }
+}
+
+/// Pack an `M × K` f32 activation block into A-tile bytes (row-major BF16,
+/// which is already the VNNI-compatible layout for the A operand).
+pub fn pack_a_bf16(input: &[f32], m: usize, k: usize, lead: usize) -> Vec<u8> {
+    let mut out = vec![0u8; m * k * 2];
+    for r in 0..m {
+        for c in 0..k {
+            let v = Bf16::from_f32(input[r * lead + c]).to_bits();
+            out[(r * k + c) * 2..(r * k + c) * 2 + 2].copy_from_slice(&v.to_le_bytes());
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Dense reference matmul for validating tdp semantics.
+    fn ref_matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut out = vec![0f32; m * n];
+        for i in 0..m {
+            for kk in 0..k {
+                for j in 0..n {
+                    out[i * n + j] += a[i * k + kk] * b[kk * n + j];
+                }
+            }
+        }
+        out
+    }
+
+    /// Build a VNNI B tile (Kp rows × 32 bf16) from row-major b[k][n].
+    fn pack_b_vnni(b: &[f32], k: usize, n: usize) -> Vec<u8> {
+        assert!(k % 2 == 0 && n <= 16);
+        let mut out = vec![0u8; (k / 2) * 64];
+        for kk in 0..k {
+            for j in 0..n {
+                let row = kk / 2;
+                let col = 2 * j + kk % 2;
+                let bits = Bf16::from_f32(b[kk * n + j]).to_bits();
+                let off = row * 64 + col * 2;
+                out[off..off + 2].copy_from_slice(&bits.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn tdpbf16ps_matches_reference() {
+        let (m, k, n) = (16, 32, 16);
+        let mut g = crate::util::XorShift::new(5);
+        let a: Vec<f32> = (0..m * k).map(|_| g.next_normal()).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| g.next_normal()).collect();
+        // round through bf16 as the hardware sees it
+        let ar: Vec<f32> = a.iter().map(|&x| crate::util::bf16::round_f32(x)).collect();
+        let br: Vec<f32> = b.iter().map(|&x| crate::util::bf16::round_f32(x)).collect();
+        let expect = ref_matmul(&ar, &br, m, k, n);
+
+        let mut amx = AmxUnit::new();
+        let mut ctr = EventCounters::default();
+        amx.config(0, m, n * 4); // fp32 accumulator
+        amx.config(4, m, k * 2); // A: 32 bf16 per row
+        amx.config(6, k / 2, 64); // B: 16 rows x 32 bf16
+        amx.tilezero(0, &mut ctr);
+        let a_bytes = pack_a_bf16(&a, m, k, k);
+        amx.tileloadd(4, &a_bytes, k * 2, LoadClass::Input, &mut ctr);
+        let b_bytes = pack_b_vnni(&b, k, n);
+        amx.tileloadd(6, &b_bytes, 64, LoadClass::WeightStream, &mut ctr);
+        amx.tdpbf16ps(0, 4, 6, &mut ctr);
+
+        for i in 0..m {
+            for j in 0..n {
+                let got = amx.tile(0).f32(i, j);
+                let want = expect[i * n + j];
+                assert!(
+                    (got - want).abs() <= 1e-2 + want.abs() * 1e-2,
+                    "({i},{j}): got {got}, want {want}"
+                );
+            }
+        }
+        assert_eq!(ctr.tdp_bf16, 1);
+        assert_eq!(ctr.tile_load_input, 1);
+        assert_eq!(ctr.tile_load_weight, 1);
+        assert_eq!(ctr.input_bytes, (m * k * 2) as u64);
+        assert_eq!(ctr.weight_stream_bytes, (k / 2 * 64) as u64);
+    }
+
+    #[test]
+    fn tdpbf16ps_accumulates_across_calls() {
+        let mut amx = AmxUnit::new();
+        let mut ctr = EventCounters::default();
+        let (m, k, n) = (2, 2, 2);
+        amx.config(0, m, 16 * 4);
+        amx.config(4, m, k * 2);
+        amx.config(6, k / 2, 64);
+        amx.tilezero(0, &mut ctr);
+        let a = pack_a_bf16(&[1.0, 2.0, 3.0, 4.0], m, k, k);
+        let b = pack_b_vnni(&[1.0, 0.0, 0.0, 1.0], k, n);
+        amx.tileloadd(4, &a, k * 2, LoadClass::Input, &mut ctr);
+        amx.tileloadd(6, &b, 64, LoadClass::WeightStream, &mut ctr);
+        amx.tdpbf16ps(0, 4, 6, &mut ctr);
+        amx.tdpbf16ps(0, 4, 6, &mut ctr);
+        // identity matmul applied twice accumulates 2×A
+        assert_eq!(amx.tile(0).f32(0, 0), 2.0);
+        assert_eq!(amx.tile(0).f32(1, 1), 8.0);
+    }
+
+    #[test]
+    fn tdpbssd_matches_reference_int8() {
+        let (m, k, n) = (4, 64, 16);
+        let mut g = crate::util::XorShift::new(6);
+        let a: Vec<i8> = (0..m * k).map(|_| (g.below(255) as i32 - 127) as i8).collect();
+        let b: Vec<i8> = (0..k * n).map(|_| (g.below(255) as i32 - 127) as i8).collect();
+        let mut expect = vec![0i32; m * n];
+        for i in 0..m {
+            for kk in 0..k {
+                for j in 0..n {
+                    expect[i * n + j] += a[i * k + kk] as i32 * b[kk * n + j] as i32;
+                }
+            }
+        }
+        let mut amx = AmxUnit::new();
+        let mut ctr = EventCounters::default();
+        amx.config(0, m, n * 4);
+        amx.config(4, m, k);
+        amx.config(6, k / 4, 64);
+        amx.tilezero(0, &mut ctr);
+        let a_bytes: Vec<u8> = a.iter().map(|&x| x as u8).collect();
+        amx.tileloadd(4, &a_bytes, k, LoadClass::Input, &mut ctr);
+        // B quad-interleaved: row = k/4, col = 4n + k%4
+        let mut b_bytes = vec![0u8; (k / 4) * 64];
+        for kk in 0..k {
+            for j in 0..n {
+                b_bytes[(kk / 4) * 64 + 4 * j + kk % 4] = b[kk * n + j] as u8;
+            }
+        }
+        amx.tileloadd(6, &b_bytes, 64, LoadClass::WeightStream, &mut ctr);
+        amx.tdpbssd(0, 4, 6, &mut ctr);
+        for i in 0..m {
+            for j in 0..n {
+                assert_eq!(amx.tile(0).i32(i, j), expect[i * n + j], "({i},{j})");
+            }
+        }
+        assert_eq!(ctr.tdp_int8, 1);
+    }
+
+    #[test]
+    fn tilestored_writes_and_counts() {
+        let mut amx = AmxUnit::new();
+        let mut ctr = EventCounters::default();
+        amx.config(1, 2, 8);
+        let src = [7u8; 16];
+        amx.tileloadd(1, &src, 8, LoadClass::Input, &mut ctr);
+        let mut dst = [0u8; 16];
+        amx.tilestored(1, &mut dst, 8, &mut ctr);
+        assert_eq!(dst, src);
+        assert_eq!(ctr.output_bytes, 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "tile shape too large")]
+    fn oversized_tile_config_rejected() {
+        AmxUnit::new().config(0, 17, 64);
+    }
+}

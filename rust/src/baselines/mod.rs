@@ -1,0 +1,3 @@
+//! Cost models of the comparison systems (stock PyTorch, DeepSparse,
+//! llama.cpp) — see DESIGN.md §2 for the substitution rationale.
+pub mod systems;

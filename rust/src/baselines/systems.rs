@@ -1,0 +1,255 @@
+//! Cost models of the comparison systems in the paper's figures.
+//!
+//! Each baseline is characterized by its kernel class — exactly how the
+//! paper itself describes them (§5, §7):
+//!
+//! * **Stock PyTorch** — dense AMX GEMMs via oneDNN, plus per-op
+//!   framework dispatch overhead. (The paper's primary baseline; it
+//!   "utilizes AMX when available".)
+//! * **DeepSparse** — sparse **AVX**-class kernels with additional
+//!   proprietary fusion (modeled as a fixed efficiency factor), no AMX.
+//! * **llama.cpp** — dense AVX INT8 kernels, minimal overhead.
+//! * **SparAMX** (ours) — the simulated sparse/dense AMX kernels.
+
+use crate::models::llama::ModelConfig;
+use crate::perf::analytic;
+use crate::perf::cost::KernelCost;
+use crate::perf::Machine;
+
+/// Which system executes the decode step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Baseline {
+    /// Stock PyTorch (dense AMX + framework overhead).
+    PyTorch,
+    /// Our dense AMX kernel (no framework overhead).
+    SparAmxDense,
+    /// Our sparse AMX kernel at the model's weight sparsity.
+    SparAmxSparse,
+    /// Our sparse AVX kernel (`column_groups` fixed at 16).
+    SparAvxSparse,
+    /// DeepSparse-like: sparse AVX + fusion bonus, INT8 only in Fig 13.
+    DeepSparse,
+    /// llama.cpp-like: dense AVX INT8.
+    LlamaCpp,
+}
+
+/// Precision of the modeled weights.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Precision {
+    Bf16,
+    Int8,
+}
+
+/// DeepSparse's extra fusion/scheduling advantage over our un-fused AVX
+/// kernel class (operator fusion the paper credits OpenVINO/DeepSparse
+/// with but keeps out of scope for SparAMX).
+const DEEPSPARSE_FUSION_SPEEDUP: f64 = 1.25;
+
+/// Modeled time for all *linear layers* of one decode step.
+pub fn linear_stack_cost(
+    model: &ModelConfig,
+    baseline: Baseline,
+    precision: Precision,
+    batch: usize,
+    sparsity: f64,
+    m: &Machine,
+) -> f64 {
+    let mut total = 0.0;
+    for layer in model.layer_linears() {
+        let (k, n) = (layer.in_features, layer.out_features);
+        total += linear_cost(baseline, precision, batch, k, n, sparsity, m);
+    }
+    total *= model.layers as f64;
+    // LM head runs once, always dense in every system (never pruned)
+    let head = model.lm_head();
+    total += linear_cost(
+        match baseline {
+            Baseline::SparAmxSparse => Baseline::SparAmxDense,
+            Baseline::DeepSparse => Baseline::LlamaCpp, // dense AVX class
+            b => b,
+        },
+        precision,
+        batch,
+        head.in_features,
+        head.out_features,
+        0.0,
+        m,
+    );
+    total
+}
+
+/// Modeled time of one linear of shape `k × n` on a baseline.
+pub fn linear_cost(
+    baseline: Baseline,
+    precision: Precision,
+    batch: usize,
+    k: usize,
+    n: usize,
+    sparsity: f64,
+    m: &Machine,
+) -> f64 {
+    let nnz = ((1.0 - sparsity.clamp(0.0, 1.0)) * (k * n) as f64).round() as usize;
+    let ctr = match (baseline, precision) {
+        (Baseline::PyTorch | Baseline::SparAmxDense, Precision::Bf16) => {
+            analytic::dense_bf16(batch, k, n)
+        }
+        (Baseline::PyTorch | Baseline::SparAmxDense | Baseline::LlamaCpp, Precision::Int8) => {
+            analytic::dense_int8(batch, k, n)
+        }
+        (Baseline::SparAmxSparse, Precision::Bf16) => analytic::sparse_bf16(batch, k, n, nnz),
+        (Baseline::SparAmxSparse, Precision::Int8) => analytic::sparse_int8(batch, k, n, nnz),
+        (Baseline::SparAvxSparse | Baseline::DeepSparse, _) => {
+            // AVX class; INT8 halves the value-stream bytes, which the
+            // bf16 counter model approximates by halving nnz bytes — use
+            // the bf16 counters and rescale below.
+            analytic::avx_sparse_bf16(batch, k, n, nnz, 16)
+        }
+        (Baseline::LlamaCpp, Precision::Bf16) => {
+            // llama.cpp on CPU runs AVX dense; model as dense AVX = AVX
+            // sparse with nnz = all elements and no bitmap saving.
+            analytic::avx_sparse_bf16(batch, k, n, k * n, 16)
+        }
+    };
+    let cost = KernelCost::from_counters(&ctr, m);
+    let mut time = cost.time;
+    // INT8 on the AVX classes: half the weight-value bytes of bf16
+    if precision == Precision::Int8
+        && matches!(baseline, Baseline::SparAvxSparse | Baseline::DeepSparse)
+    {
+        time = (cost.dram_time * 0.5).max(cost.core_time);
+    }
+    match baseline {
+        Baseline::PyTorch => time + m.framework_overhead_s,
+        Baseline::DeepSparse => time / DEEPSPARSE_FUSION_SPEEDUP,
+        _ => time,
+    }
+}
+
+/// Modeled attention time for one decode step at `ctx` cached tokens
+/// (dense cache, BF16): bandwidth-dominated streaming of K and V.
+pub fn attention_cost(model: &ModelConfig, batch: usize, ctx: usize, m: &Machine) -> f64 {
+    // per layer: read K and V of shape ctx × kv_dim once per batch row
+    let bytes =
+        (2 * ctx * model.kv_dim() * 2) as f64 * model.layers as f64 * batch as f64;
+    let dram = bytes / (m.effective_bw_gbs() * 1e9);
+    // score/softmax compute is minor; charge 2 FLOP/byte at AVX rate
+    let flops = 2.0 * bytes;
+    let compute = flops / m.peak_avx_bf16_flops();
+    dram.max(compute) + 2e-6 * model.layers as f64
+}
+
+/// Non-GEMM per-step overhead (norms, RoPE, softmax glue, sampling):
+/// roughly proportional to hidden × layers.
+pub fn other_cost(model: &ModelConfig, batch: usize, m: &Machine) -> f64 {
+    let elems = (model.hidden * model.layers * batch) as f64;
+    let bytes = elems * 2.0 * 6.0; // a handful of elementwise passes
+    bytes / (m.effective_bw_gbs() * 1e9) + 1e-6 * model.layers as f64
+}
+
+/// Full decode-step latency for a baseline (linears + attention + other).
+pub fn decode_step_cost(
+    model: &ModelConfig,
+    baseline: Baseline,
+    precision: Precision,
+    batch: usize,
+    ctx: usize,
+    sparsity: f64,
+    m: &Machine,
+) -> f64 {
+    let mut t = linear_stack_cost(model, baseline, precision, batch, sparsity, m)
+        + attention_cost(model, batch, ctx, m)
+        + other_cost(model, batch, m);
+    if baseline == Baseline::PyTorch {
+        // PyTorch's eager attention + cache handling overhead per step
+        t += m.framework_overhead_s * (2 * model.layers) as f64;
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m32() -> Machine {
+        Machine::sapphire_rapids(32)
+    }
+
+    #[test]
+    fn fig1_shape_sparse_beats_pytorch_end_to_end() {
+        // 50% sparsity, ctx 512, batch 1 — the Fig 1 setting.
+        let m = m32();
+        for cfg in [
+            ModelConfig::llama32_1b(),
+            ModelConfig::llama32_3b(),
+            ModelConfig::llama3_8b(),
+        ] {
+            let py = decode_step_cost(&cfg, Baseline::PyTorch, Precision::Bf16, 1, 512, 0.0, &m);
+            let ours = decode_step_cost(&cfg, Baseline::SparAmxSparse, Precision::Bf16, 1, 512, 0.5, &m);
+            let speedup = py / ours;
+            assert!(
+                speedup > 1.05 && speedup < 2.2,
+                "{}: speedup {speedup}",
+                cfg.name
+            );
+        }
+    }
+
+    #[test]
+    fn speedup_grows_with_model_size() {
+        // Fig 1: "improvement tends to be greater as model size increases"
+        let m = m32();
+        let sp = |cfg: &ModelConfig| {
+            decode_step_cost(cfg, Baseline::PyTorch, Precision::Bf16, 1, 512, 0.0, &m)
+                / decode_step_cost(cfg, Baseline::SparAmxSparse, Precision::Bf16, 1, 512, 0.5, &m)
+        };
+        let s1 = sp(&ModelConfig::llama32_1b());
+        let s8 = sp(&ModelConfig::llama3_8b());
+        assert!(s8 > s1, "8B speedup {s8} should exceed 1B speedup {s1}");
+    }
+
+    #[test]
+    fn linear_layers_dominate_at_short_context() {
+        // Fig 3 shape: at ctx 512, linears ≫ attention; at 16K attention
+        // catches up substantially.
+        let m = m32();
+        let cfg = ModelConfig::llama3_8b();
+        let lin = linear_stack_cost(&cfg, Baseline::PyTorch, Precision::Bf16, 1, 0.0, &m);
+        let att_512 = attention_cost(&cfg, 1, 512, &m);
+        let att_16k = attention_cost(&cfg, 1, 16384, &m);
+        assert!(lin > 5.0 * att_512, "linears dominate at 512");
+        assert!(att_16k > 10.0 * att_512, "attention grows with context");
+    }
+
+    #[test]
+    fn deepsparse_crossover_at_high_batch() {
+        // Fig 13 shape: DeepSparse (AVX) wins at batch 1..4 but our AMX
+        // INT8 sparse kernel wins at batch ≥ 16.
+        let m = m32();
+        let cfg = ModelConfig::llama2_7b();
+        let ours_b1 = decode_step_cost(&cfg, Baseline::SparAmxSparse, Precision::Int8, 1, 2, 0.5, &m);
+        let ds_b1 = decode_step_cost(&cfg, Baseline::DeepSparse, Precision::Int8, 1, 2, 0.5, &m);
+        let ours_b32 = decode_step_cost(&cfg, Baseline::SparAmxSparse, Precision::Int8, 32, 2, 0.5, &m);
+        let ds_b32 = decode_step_cost(&cfg, Baseline::DeepSparse, Precision::Int8, 32, 2, 0.5, &m);
+        // throughput = batch / time
+        let thr = |b: f64, t: f64| b / t;
+        assert!(
+            thr(32.0, ours_b32) > thr(32.0, ds_b32),
+            "ours must win at batch 32: {} vs {}",
+            thr(32.0, ours_b32),
+            thr(32.0, ds_b32)
+        );
+        // and the gap at batch 1 must be smaller than at batch 32
+        let gap1 = thr(1.0, ours_b1) / thr(1.0, ds_b1);
+        let gap32 = thr(32.0, ours_b32) / thr(32.0, ds_b32);
+        assert!(gap32 > gap1, "AMX advantage grows with batch");
+    }
+
+    #[test]
+    fn pytorch_overhead_visible_on_small_models() {
+        let m = m32();
+        let tiny = ModelConfig::tiny();
+        let py = decode_step_cost(&tiny, Baseline::PyTorch, Precision::Bf16, 1, 64, 0.0, &m);
+        let ours = decode_step_cost(&tiny, Baseline::SparAmxDense, Precision::Bf16, 1, 64, 0.0, &m);
+        assert!(py > ours, "framework overhead dominates tiny models");
+    }
+}

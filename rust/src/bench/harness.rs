@@ -1,0 +1,109 @@
+//! Wall-clock measurement harness (criterion-lite).
+//!
+//! `cargo bench` targets in `benches/` use `harness = false` and call
+//! [`bench`] / [`report_row`] directly. Besides wall-clock benches, the
+//! figure benches print modeled-time tables from [`crate::perf`]; both
+//! paths share the same tabular output helpers so `bench_output.txt` is
+//! self-describing.
+
+use crate::util::stats::Summary;
+use std::time::Instant;
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    /// Mean seconds per iteration.
+    pub fn mean_s(&self) -> f64 {
+        self.summary.mean
+    }
+}
+
+/// Measure `f` with `warmup` unmeasured runs then `iters` timed runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        summary: Summary::from(&samples),
+    }
+}
+
+/// Auto-calibrating variant: picks an iteration count so the measured
+/// region runs for roughly `target_s` seconds (min 3 iters).
+pub fn bench_auto<F: FnMut()>(name: &str, target_s: f64, mut f: F) -> BenchResult {
+    let t0 = Instant::now();
+    f(); // warmup + calibration probe
+    let probe = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((target_s / probe).ceil() as usize).clamp(3, 10_000);
+    bench(name, 1, iters, f)
+}
+
+/// Format seconds human-readably.
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Print a table header (markdown-ish, stable for EXPERIMENTS.md).
+pub fn report_header(title: &str, cols: &[&str]) {
+    println!("\n## {title}");
+    println!("| {} |", cols.join(" | "));
+    println!("|{}|", cols.iter().map(|_| "---").collect::<Vec<_>>().join("|"));
+}
+
+/// Print one table row.
+pub fn report_row(cells: &[String]) {
+    println!("| {} |", cells.join(" | "));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_requested_iterations() {
+        let mut count = 0usize;
+        let r = bench("t", 2, 5, || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(r.iters, 5);
+        assert!(r.mean_s() >= 0.0);
+    }
+
+    #[test]
+    fn bench_auto_scales_iters() {
+        let r = bench_auto("fast", 0.01, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(r.iters >= 3);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(2.5).contains('s'));
+        assert!(fmt_time(2.5e-3).contains("ms"));
+        assert!(fmt_time(2.5e-6).contains("µs"));
+        assert!(fmt_time(2.5e-9).contains("ns"));
+    }
+}

@@ -1,0 +1,2 @@
+//! Criterion-lite measurement harness (criterion is not vendored).
+pub mod harness;

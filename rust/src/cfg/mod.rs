@@ -1,0 +1,9 @@
+//! Configuration: a minimal JSON parser (serde is not vendored in this
+//! offline image) plus the typed config structs for models and the
+//! serving runtime.
+
+pub mod json;
+pub mod runtime_config;
+
+pub use json::Json;
+pub use runtime_config::RuntimeConfig;

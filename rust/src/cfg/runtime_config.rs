@@ -1,0 +1,160 @@
+//! Typed runtime configuration for the serving coordinator.
+
+use super::json::Json;
+
+/// Serving-engine configuration. Loaded from JSON (file or inline) with
+/// defaults matching the paper's evaluation setup.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RuntimeConfig {
+    /// Directory with AOT artifacts (`*.hlo.txt`, `weights.bin`,
+    /// `manifest.json`).
+    pub artifacts_dir: String,
+    /// Maximum decode batch assembled by the continuous batcher.
+    pub max_batch: usize,
+    /// Maximum new tokens per request unless overridden.
+    pub max_new_tokens: usize,
+    /// Worker threads pinned at load time (fixed: the sparse-format
+    /// thread partition depends on it, paper §7).
+    pub threads: usize,
+    /// Weight sparsity applied when packing (0 disables).
+    pub weight_sparsity: f64,
+    /// K-cache sparsity for the static segment (§6).
+    pub k_sparsity: f64,
+    /// V-cache sparsity for the static segment (§6).
+    pub v_sparsity: f64,
+    /// Microseconds the batcher waits to coalesce requests.
+    pub batch_window_us: u64,
+    /// TCP port for `sparamx serve`.
+    pub port: u16,
+    /// Admission-queue capacity; requests beyond it are rejected
+    /// (backpressure).
+    pub queue_capacity: usize,
+}
+
+impl Default for RuntimeConfig {
+    fn default() -> Self {
+        RuntimeConfig {
+            artifacts_dir: "artifacts".into(),
+            max_batch: 8,
+            max_new_tokens: 64,
+            threads: 1,
+            weight_sparsity: 0.5,
+            k_sparsity: 0.3,
+            v_sparsity: 0.5,
+            batch_window_us: 500,
+            port: 7070,
+            queue_capacity: 256,
+        }
+    }
+}
+
+impl RuntimeConfig {
+    /// Load from a JSON string; unknown fields are rejected to catch
+    /// typos, missing fields fall back to defaults.
+    pub fn from_json(s: &str) -> Result<RuntimeConfig, String> {
+        let v = Json::parse(s)?;
+        let obj = match &v {
+            Json::Obj(m) => m,
+            _ => return Err("config must be a JSON object".into()),
+        };
+        let mut cfg = RuntimeConfig::default();
+        for (k, val) in obj {
+            match k.as_str() {
+                "artifacts_dir" => {
+                    cfg.artifacts_dir = val.as_str().ok_or("artifacts_dir: string")?.to_string()
+                }
+                "max_batch" => cfg.max_batch = val.as_usize().ok_or("max_batch: uint")?,
+                "max_new_tokens" => {
+                    cfg.max_new_tokens = val.as_usize().ok_or("max_new_tokens: uint")?
+                }
+                "threads" => cfg.threads = val.as_usize().ok_or("threads: uint")?,
+                "weight_sparsity" => {
+                    cfg.weight_sparsity = val.as_f64().ok_or("weight_sparsity: number")?
+                }
+                "k_sparsity" => cfg.k_sparsity = val.as_f64().ok_or("k_sparsity: number")?,
+                "v_sparsity" => cfg.v_sparsity = val.as_f64().ok_or("v_sparsity: number")?,
+                "batch_window_us" => {
+                    cfg.batch_window_us = val.as_usize().ok_or("batch_window_us: uint")? as u64
+                }
+                "port" => {
+                    cfg.port = val
+                        .as_usize()
+                        .filter(|&p| p <= u16::MAX as usize)
+                        .ok_or("port: u16")? as u16
+                }
+                "queue_capacity" => {
+                    cfg.queue_capacity = val.as_usize().ok_or("queue_capacity: uint")?
+                }
+                other => return Err(format!("unknown config field '{other}'")),
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Load from a file path.
+    pub fn from_file(path: &str) -> Result<RuntimeConfig, String> {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+        Self::from_json(&text)
+    }
+
+    /// Sanity checks shared by all construction paths.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.max_batch == 0 {
+            return Err("max_batch must be >= 1".into());
+        }
+        if self.threads == 0 {
+            return Err("threads must be >= 1".into());
+        }
+        for (name, v) in [
+            ("weight_sparsity", self.weight_sparsity),
+            ("k_sparsity", self.k_sparsity),
+            ("v_sparsity", self.v_sparsity),
+        ] {
+            if !(0.0..=1.0).contains(&v) {
+                return Err(format!("{name} must be in [0,1], got {v}"));
+            }
+        }
+        if self.queue_capacity == 0 {
+            return Err("queue_capacity must be >= 1".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_valid() {
+        RuntimeConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn parses_partial_config() {
+        let cfg = RuntimeConfig::from_json(r#"{"max_batch": 32, "port": 9000}"#).unwrap();
+        assert_eq!(cfg.max_batch, 32);
+        assert_eq!(cfg.port, 9000);
+        assert_eq!(cfg.max_new_tokens, RuntimeConfig::default().max_new_tokens);
+    }
+
+    #[test]
+    fn rejects_unknown_field() {
+        let err = RuntimeConfig::from_json(r#"{"max_batchh": 2}"#).unwrap_err();
+        assert!(err.contains("max_batchh"));
+    }
+
+    #[test]
+    fn rejects_out_of_range() {
+        assert!(RuntimeConfig::from_json(r#"{"weight_sparsity": 1.5}"#).is_err());
+        assert!(RuntimeConfig::from_json(r#"{"max_batch": 0}"#).is_err());
+        assert!(RuntimeConfig::from_json(r#"{"port": 70000}"#).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_type() {
+        assert!(RuntimeConfig::from_json(r#"{"threads": "four"}"#).is_err());
+    }
+}

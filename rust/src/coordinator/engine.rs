@@ -1,0 +1,354 @@
+//! The generation engine: continuous batching over the AOT
+//! `prefill`/`decode_step` PJRT executables.
+//!
+//! Shapes are static (AOT), so the engine owns `decode_batch` slots.
+//! Each slot holds one in-flight request's cache state; finished slots
+//! are refilled from the admission queue every step. Per-slot
+//! `cache_len` vectors make mixed-progress batches safe (the artifact
+//! masks attention per slot).
+//!
+//! Weight handling follows the paper's deployment: parameters are
+//! magnitude-pruned to the configured sparsity at load time, then kept
+//! static for the process lifetime (preprocessing happens once — §7).
+
+use super::batcher::AdmissionQueue;
+use super::metrics::Metrics;
+use super::request::{Request, Response};
+use crate::cfg::RuntimeConfig;
+use crate::runtime::artifact::Bundle;
+use crate::runtime::executor::{lit_f32, lit_i32, to_f32, Executable, Runtime};
+use crate::sparse::prune::magnitude_prune_inplace;
+use anyhow::{anyhow, Context, Result};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Static model geometry read from the manifest.
+#[derive(Clone, Copy, Debug)]
+pub struct Geometry {
+    pub layers: usize,
+    pub kv_heads: usize,
+    pub head_dim: usize,
+    pub max_ctx: usize,
+    pub vocab: usize,
+    pub decode_batch: usize,
+    pub prefill_len: usize,
+}
+
+impl Geometry {
+    pub fn from_bundle(bundle: &Bundle) -> Result<Geometry> {
+        Ok(Geometry {
+            layers: bundle.config_usize("layers")?,
+            kv_heads: bundle.config_usize("kv_heads")?,
+            head_dim: bundle.config_usize("head_dim")?,
+            max_ctx: bundle.config_usize("max_ctx")?,
+            vocab: bundle.config_usize("vocab")?,
+            decode_batch: bundle
+                .manifest
+                .req("decode_batch")
+                .map_err(|e| anyhow!(e))?
+                .as_usize()
+                .ok_or_else(|| anyhow!("decode_batch"))?,
+            prefill_len: bundle
+                .manifest
+                .req("prefill_len")
+                .map_err(|e| anyhow!(e))?
+                .as_usize()
+                .ok_or_else(|| anyhow!("prefill_len"))?,
+        })
+    }
+
+    fn cache_elems(&self) -> usize {
+        self.layers * self.decode_batch * self.kv_heads * self.max_ctx * self.head_dim
+    }
+}
+
+/// One decode slot's state.
+struct Slot {
+    req: Option<Request>,
+    generated: Vec<u8>,
+    /// Valid cache positions for this slot.
+    cache_len: usize,
+    /// Next absolute position to feed.
+    pos: usize,
+    /// Current token to feed.
+    token: u8,
+    started: Option<Instant>,
+    decode_time: f64,
+}
+
+impl Slot {
+    fn empty() -> Slot {
+        Slot {
+            req: None,
+            generated: Vec::new(),
+            cache_len: 0,
+            pos: 0,
+            token: 0,
+            started: None,
+            decode_time: 0.0,
+        }
+    }
+
+    fn active(&self) -> bool {
+        self.req.is_some()
+    }
+}
+
+/// The serving engine.
+pub struct Engine {
+    geo: Geometry,
+    decode: Executable,
+    prefill: Executable,
+    /// Pruned parameter literals, fed to every call (PJRT copies
+    /// internally; the tiny model makes that cheap).
+    param_data: Vec<(Vec<f32>, Vec<i64>)>,
+    /// KV caches as host vectors, updated functionally from the artifact
+    /// outputs: `[layers, B, kvh, max_ctx, hd]`.
+    k_cache: Vec<f32>,
+    v_cache: Vec<f32>,
+    slots: Vec<Slot>,
+    pub metrics: Arc<Metrics>,
+    cfg: RuntimeConfig,
+}
+
+impl Engine {
+    /// Load artifacts, prune weights, compile executables.
+    pub fn load(rt: &Runtime, bundle: &Bundle, cfg: RuntimeConfig) -> Result<Engine> {
+        let geo = Geometry::from_bundle(bundle)?;
+        let decode = rt.load_hlo(&bundle.hlo_path("decode_step"))?;
+        let prefill = rt.load_hlo(&bundle.hlo_path("prefill"))?;
+        let mut param_data = Vec::with_capacity(bundle.params.len());
+        for t in &bundle.params {
+            let mut data = t.data.clone();
+            // prune matrices only (norm gains and embeddings stay dense,
+            // like the paper's linear-layer-only pruning)
+            if t.shape.len() == 2 && cfg.weight_sparsity > 0.0 && t.name != "emb" {
+                magnitude_prune_inplace(&mut data, cfg.weight_sparsity);
+            }
+            let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+            param_data.push((data, dims));
+        }
+        let metrics = Arc::new(Metrics::new());
+        let slots = (0..geo.decode_batch).map(|_| Slot::empty()).collect();
+        Ok(Engine {
+            k_cache: vec![0.0; geo.cache_elems()],
+            v_cache: vec![0.0; geo.cache_elems()],
+            geo,
+            decode,
+            prefill,
+            param_data,
+            slots,
+            metrics,
+            cfg,
+        })
+    }
+
+    pub fn geometry(&self) -> Geometry {
+        self.geo
+    }
+
+    fn param_literals(&self) -> Result<Vec<xla::Literal>> {
+        self.param_data
+            .iter()
+            .map(|(data, dims)| lit_f32(data, dims))
+            .collect()
+    }
+
+    /// Admit new requests into free slots (prefilling their caches).
+    fn fill_slots(&mut self, queue: &AdmissionQueue) -> Result<bool> {
+        let free: Vec<usize> = (0..self.slots.len())
+            .filter(|&i| !self.slots[i].active())
+            .collect();
+        if free.is_empty() {
+            return Ok(true);
+        }
+        let window = Duration::from_micros(self.cfg.batch_window_us);
+        // block only when totally idle; otherwise poll
+        let wait = if free.len() == self.slots.len() {
+            window.max(Duration::from_millis(1))
+        } else {
+            Duration::from_micros(1)
+        };
+        let Some(reqs) = queue.take_batch(free.len(), wait) else {
+            // queue closed; engine drains remaining slots then stops
+            return Ok(self.slots.iter().any(|s| s.active()));
+        };
+        if reqs.is_empty() {
+            return Ok(true);
+        }
+        self.prefill_into_slots(&free, reqs)?;
+        Ok(true)
+    }
+
+    /// Run the batched prefill artifact for newly admitted requests.
+    fn prefill_into_slots(&mut self, free: &[usize], reqs: Vec<Request>) -> Result<()> {
+        let g = self.geo;
+        let b = g.decode_batch;
+        let mut tokens = vec![32i32; b * g.prefill_len]; // pad with spaces
+        let mut assigned: Vec<(usize, Request)> = Vec::new();
+        for (slot_idx, req) in free.iter().copied().zip(reqs.into_iter()) {
+            let plen = req.prompt.len().min(g.prefill_len);
+            for (j, &byte) in req.prompt[..plen].iter().enumerate() {
+                tokens[slot_idx * g.prefill_len + j] = byte as i32;
+            }
+            assigned.push((slot_idx, req));
+        }
+        let mut inputs = self.param_literals()?;
+        inputs.push(lit_i32(&tokens, &[b as i64, g.prefill_len as i64])?);
+        let t0 = Instant::now();
+        let outs = self.prefill.run(&inputs).context("prefill")?;
+        self.metrics.prefills.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let _logits = to_f32(&outs[0])?;
+        let k = to_f32(&outs[1])?; // [L, B, kvh, S, hd]
+        let v = to_f32(&outs[2])?;
+        // scatter prefill K/V into the engine cache slots
+        let (kvh, hd, s, maxc) = (g.kv_heads, g.head_dim, g.prefill_len, g.max_ctx);
+        for (slot_idx, req) in assigned {
+            for l in 0..g.layers {
+                for h in 0..kvh {
+                    for t in 0..s {
+                        let src = (((l * b + slot_idx) * kvh + h) * s + t) * hd;
+                        let dst = (((l * b + slot_idx) * kvh + h) * maxc + t) * hd;
+                        self.k_cache[dst..dst + hd].copy_from_slice(&k[src..src + hd]);
+                        self.v_cache[dst..dst + hd].copy_from_slice(&v[src..src + hd]);
+                    }
+                }
+            }
+            let plen = req.prompt.len().min(s).max(1);
+            let slot = &mut self.slots[slot_idx];
+            *slot = Slot {
+                token: *req.prompt.get(plen - 1).unwrap_or(&32),
+                pos: plen - 1,
+                cache_len: plen,
+                generated: Vec::new(),
+                started: Some(Instant::now()),
+                decode_time: t0.elapsed().as_secs_f64(),
+                req: Some(req),
+            };
+        }
+        Ok(())
+    }
+
+    /// One batched decode step over all active slots. Returns the number
+    /// of active slots processed.
+    fn step(&mut self) -> Result<usize> {
+        let g = self.geo;
+        let b = g.decode_batch;
+        let active: Vec<usize> = (0..b).filter(|&i| self.slots[i].active()).collect();
+        if active.is_empty() {
+            return Ok(0);
+        }
+        let mut token = vec![0i32; b];
+        let mut pos = vec![0i32; b];
+        let mut cache_len = vec![1i32; b];
+        for &i in &active {
+            token[i] = self.slots[i].token as i32;
+            pos[i] = self.slots[i].pos as i32;
+            cache_len[i] = self.slots[i].cache_len as i32;
+        }
+        let dims_cache = [
+            g.layers as i64,
+            b as i64,
+            g.kv_heads as i64,
+            g.max_ctx as i64,
+            g.head_dim as i64,
+        ];
+        let mut inputs = self.param_literals()?;
+        inputs.push(lit_i32(&token, &[b as i64])?);
+        inputs.push(lit_i32(&pos, &[b as i64])?);
+        inputs.push(lit_f32(&self.k_cache, &dims_cache)?);
+        inputs.push(lit_f32(&self.v_cache, &dims_cache)?);
+        inputs.push(lit_i32(&cache_len, &[b as i64])?);
+        let t0 = Instant::now();
+        let outs = self.decode.run(&inputs).context("decode_step")?;
+        let dt = t0.elapsed().as_secs_f64();
+        self.metrics.record_step(dt);
+        self.metrics
+            .decode_steps
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let logits = to_f32(&outs[0])?; // [B, V]
+        self.k_cache = to_f32(&outs[1])?;
+        self.v_cache = to_f32(&outs[2])?;
+
+        for &i in &active {
+            let row = &logits[i * g.vocab..(i + 1) * g.vocab];
+            let next = argmax(row) as u8;
+            let slot = &mut self.slots[i];
+            slot.decode_time += dt;
+            slot.generated.push(next);
+            slot.token = next;
+            slot.pos += 1;
+            slot.cache_len += 1;
+            self.metrics
+                .tokens_generated
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            let done = slot.generated.len()
+                >= slot
+                    .req
+                    .as_ref()
+                    .map(|r| r.max_new_tokens)
+                    .unwrap_or(0)
+                    .min(self.cfg.max_new_tokens)
+                || slot.cache_len >= g.max_ctx;
+            if done {
+                self.finish_slot(i);
+            }
+        }
+        Ok(active.len())
+    }
+
+    fn finish_slot(&mut self, i: usize) {
+        let slot = std::mem::replace(&mut self.slots[i], Slot::empty());
+        let Some(req) = slot.req else { return };
+        let total = req.arrived.elapsed().as_secs_f64();
+        let queue_latency = slot
+            .started
+            .map(|s| (s.duration_since(req.arrived)).as_secs_f64())
+            .unwrap_or(0.0);
+        let n = slot.generated.len().max(1);
+        let resp = Response {
+            id: req.id,
+            tokens: slot.generated,
+            total_latency_s: total,
+            queue_latency_s: queue_latency,
+            per_token_s: slot.decode_time / n as f64,
+        };
+        self.metrics.record_latency(total);
+        self.metrics
+            .requests_completed
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let _ = req.respond.send(resp); // receiver may have gone away
+    }
+
+    /// Serve until the queue closes and all slots drain.
+    pub fn run(&mut self, queue: &AdmissionQueue) -> Result<()> {
+        loop {
+            let keep_going = self.fill_slots(queue)?;
+            let processed = self.step()?;
+            if !keep_going && processed == 0 {
+                return Ok(());
+            }
+        }
+    }
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_picks_first_max() {
+        assert_eq!(argmax(&[1.0, 5.0, 5.0, 2.0]), 1);
+        assert_eq!(argmax(&[-3.0]), 0);
+    }
+}

@@ -1,0 +1,89 @@
+//! Serving metrics: counters and latency distributions.
+
+use crate::util::stats::Summary;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Engine-wide metrics registry (thread-safe).
+#[derive(Default)]
+pub struct Metrics {
+    pub requests_admitted: AtomicU64,
+    pub requests_rejected: AtomicU64,
+    pub requests_completed: AtomicU64,
+    pub tokens_generated: AtomicU64,
+    pub decode_steps: AtomicU64,
+    pub prefills: AtomicU64,
+    latencies_s: Mutex<Vec<f64>>,
+    step_times_s: Mutex<Vec<f64>>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn record_latency(&self, secs: f64) {
+        self.latencies_s.lock().expect("metrics lock").push(secs);
+    }
+
+    pub fn record_step(&self, secs: f64) {
+        self.step_times_s.lock().expect("metrics lock").push(secs);
+    }
+
+    /// End-to-end request latency summary, if any completed.
+    pub fn latency_summary(&self) -> Option<Summary> {
+        let l = self.latencies_s.lock().expect("metrics lock");
+        (!l.is_empty()).then(|| Summary::from(&l))
+    }
+
+    /// Per-decode-step time summary.
+    pub fn step_summary(&self) -> Option<Summary> {
+        let l = self.step_times_s.lock().expect("metrics lock");
+        (!l.is_empty()).then(|| Summary::from(&l))
+    }
+
+    /// One-line report for logs and the serve example.
+    pub fn report(&self) -> String {
+        let steps = self.decode_steps.load(Ordering::Relaxed);
+        let toks = self.tokens_generated.load(Ordering::Relaxed);
+        let done = self.requests_completed.load(Ordering::Relaxed);
+        let rej = self.requests_rejected.load(Ordering::Relaxed);
+        let step = self
+            .step_summary()
+            .map(|s| format!("{:.2}ms", s.mean * 1e3))
+            .unwrap_or_else(|| "n/a".into());
+        let lat = self
+            .latency_summary()
+            .map(|s| format!("p50 {:.1}ms p99 {:.1}ms", s.p50 * 1e3, s.p99 * 1e3))
+            .unwrap_or_else(|| "n/a".into());
+        format!(
+            "completed={done} rejected={rej} tokens={toks} steps={steps} \
+             step_mean={step} latency {lat}"
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_summaries() {
+        let m = Metrics::new();
+        m.requests_completed.fetch_add(2, Ordering::Relaxed);
+        m.record_latency(0.1);
+        m.record_latency(0.3);
+        m.record_step(0.01);
+        let l = m.latency_summary().unwrap();
+        assert!((l.mean - 0.2).abs() < 1e-12);
+        assert!(m.step_summary().is_some());
+        assert!(m.report().contains("completed=2"));
+    }
+
+    #[test]
+    fn empty_summaries_are_none() {
+        let m = Metrics::new();
+        assert!(m.latency_summary().is_none());
+        assert!(m.report().contains("n/a"));
+    }
+}

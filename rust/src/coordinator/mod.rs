@@ -1,0 +1,6 @@
+//! The serving coordinator: requests, continuous batcher, engine, server.
+pub mod request;
+pub mod batcher;
+pub mod metrics;
+pub mod engine;
+pub mod server;

@@ -1,0 +1,66 @@
+//! Request types for the serving coordinator.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// Unique request id.
+pub type RequestId = u64;
+
+/// A generation request submitted to the engine.
+#[derive(Debug)]
+pub struct Request {
+    pub id: RequestId,
+    /// Byte-level prompt tokens.
+    pub prompt: Vec<u8>,
+    pub max_new_tokens: usize,
+    /// Wall-clock admission time (for queueing-latency metrics).
+    pub arrived: Instant,
+    /// Completion channel.
+    pub respond: mpsc::Sender<Response>,
+}
+
+/// The engine's reply.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: RequestId,
+    /// Generated tokens (prompt excluded).
+    pub tokens: Vec<u8>,
+    /// Seconds from admission to completion.
+    pub total_latency_s: f64,
+    /// Seconds spent waiting in the queue before a slot was free.
+    pub queue_latency_s: f64,
+    /// Mean seconds per generated token (decode only).
+    pub per_token_s: f64,
+}
+
+impl Response {
+    /// Generated text (lossy UTF-8 — the tiny model is byte-level).
+    pub fn text(&self) -> String {
+        String::from_utf8_lossy(&self.tokens).into_owned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn response_text_is_lossy_utf8() {
+        let (tx, _rx) = mpsc::channel();
+        let _req = Request {
+            id: 1,
+            prompt: b"hi".to_vec(),
+            max_new_tokens: 4,
+            arrived: Instant::now(),
+            respond: tx,
+        };
+        let r = Response {
+            id: 1,
+            tokens: vec![104, 105, 0xFF],
+            total_latency_s: 0.1,
+            queue_latency_s: 0.0,
+            per_token_s: 0.03,
+        };
+        assert!(r.text().starts_with("hi"));
+    }
+}

@@ -1,0 +1,163 @@
+//! TCP line-protocol server: one JSON request per line, one JSON
+//! response per line.
+//!
+//! Request:  `{"prompt": "...", "max_new_tokens": 32}`
+//! Response: `{"id": 1, "text": "...", "tokens": 32,
+//!             "latency_ms": 12.3, "per_token_ms": 0.4}`
+//! Errors:   `{"error": "..."}` (malformed request or backpressure).
+
+use super::batcher::{AdmissionQueue, AdmitError};
+use super::request::Request;
+use crate::cfg::json::Json;
+use crate::log_info;
+use anyhow::Result;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Parse one request line into a [`Request`] + its response receiver.
+pub fn parse_request(
+    line: &str,
+    default_max_tokens: usize,
+) -> Result<(Request, mpsc::Receiver<super::request::Response>), String> {
+    let v = Json::parse(line)?;
+    let prompt = v
+        .req("prompt")?
+        .as_str()
+        .ok_or("prompt must be a string")?
+        .as_bytes()
+        .to_vec();
+    let max_new_tokens = v
+        .get("max_new_tokens")
+        .and_then(|x| x.as_usize())
+        .unwrap_or(default_max_tokens);
+    let (tx, rx) = mpsc::channel();
+    Ok((
+        Request {
+            id: NEXT_ID.fetch_add(1, Ordering::Relaxed),
+            prompt,
+            max_new_tokens,
+            arrived: Instant::now(),
+            respond: tx,
+        },
+        rx,
+    ))
+}
+
+/// Format a response line.
+pub fn format_response(resp: &super::request::Response) -> String {
+    Json::obj(vec![
+        ("id", Json::Num(resp.id as f64)),
+        ("text", Json::Str(resp.text())),
+        ("tokens", Json::Num(resp.tokens.len() as f64)),
+        ("latency_ms", Json::Num(resp.total_latency_s * 1e3)),
+        ("queue_ms", Json::Num(resp.queue_latency_s * 1e3)),
+        ("per_token_ms", Json::Num(resp.per_token_s * 1e3)),
+    ])
+    .to_string()
+}
+
+fn error_line(msg: &str) -> String {
+    Json::obj(vec![("error", Json::Str(msg.into()))]).to_string()
+}
+
+fn handle_client(stream: TcpStream, queue: Arc<AdmissionQueue>, default_max: usize) {
+    let peer = stream
+        .peer_addr()
+        .map(|a| a.to_string())
+        .unwrap_or_default();
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = match parse_request(&line, default_max) {
+            Err(e) => error_line(&e),
+            Ok((req, rx)) => match queue.admit(req) {
+                Err(AdmitError::Full) => error_line("queue full, retry later"),
+                Err(AdmitError::Closed) => error_line("server shutting down"),
+                Ok(()) => match rx.recv() {
+                    Ok(resp) => format_response(&resp),
+                    Err(_) => error_line("engine dropped request"),
+                },
+            },
+        };
+        if writer.write_all(reply.as_bytes()).is_err()
+            || writer.write_all(b"\n").is_err()
+        {
+            break;
+        }
+    }
+    log_info!("client {peer} disconnected");
+}
+
+/// Accept loop: one thread per connection (the engine itself is the
+/// serial resource; connection concurrency is cheap).
+pub fn serve(listener: TcpListener, queue: Arc<AdmissionQueue>, default_max: usize) {
+    log_info!(
+        "listening on {}",
+        listener.local_addr().map(|a| a.to_string()).unwrap_or_default()
+    );
+    for stream in listener.incoming() {
+        match stream {
+            Ok(s) => {
+                let q = Arc::clone(&queue);
+                std::thread::spawn(move || handle_client(s, q, default_max));
+            }
+            Err(e) => {
+                log_info!("accept error: {e}");
+                break;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_request_happy_path() {
+        let (req, _rx) =
+            parse_request(r#"{"prompt": "hello", "max_new_tokens": 7}"#, 32).unwrap();
+        assert_eq!(req.prompt, b"hello");
+        assert_eq!(req.max_new_tokens, 7);
+    }
+
+    #[test]
+    fn parse_request_defaults_max_tokens() {
+        let (req, _rx) = parse_request(r#"{"prompt": "x"}"#, 9).unwrap();
+        assert_eq!(req.max_new_tokens, 9);
+    }
+
+    #[test]
+    fn parse_request_rejects_garbage() {
+        assert!(parse_request("not json", 1).is_err());
+        assert!(parse_request(r#"{"no_prompt": 1}"#, 1).is_err());
+        assert!(parse_request(r#"{"prompt": 5}"#, 1).is_err());
+    }
+
+    #[test]
+    fn response_roundtrips_as_json() {
+        let resp = super::super::request::Response {
+            id: 3,
+            tokens: b"ok".to_vec(),
+            total_latency_s: 0.5,
+            queue_latency_s: 0.1,
+            per_token_s: 0.01,
+        };
+        let line = format_response(&resp);
+        let v = Json::parse(&line).unwrap();
+        assert_eq!(v.get("text").unwrap().as_str(), Some("ok"));
+        assert_eq!(v.get("tokens").unwrap().as_usize(), Some(2));
+    }
+}

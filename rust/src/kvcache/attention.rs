@@ -1,0 +1,200 @@
+//! Decode attention over the split cache (paper §6): the static segment's
+//! QKᵀ and R·V matmuls run through the **sparse AMX kernel**; the dynamic
+//! tail is dense (it is small and changes every token, so compressing it
+//! would cost more than it saves — §7 "not suitable for dynamic KV").
+
+use super::cache::HeadCache;
+use crate::amx::kernels::{ref_gemm_bf16, sparse_amx_gemm_bf16};
+use crate::amx::EventCounters;
+use crate::util::bf16::round_f32;
+
+/// Numerically-stable softmax in place.
+pub fn softmax(xs: &mut [f32]) {
+    if xs.is_empty() {
+        return;
+    }
+    let max = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0;
+    for x in xs.iter_mut() {
+        *x = (*x - max).exp();
+        sum += *x;
+    }
+    if sum > 0.0 {
+        for x in xs.iter_mut() {
+            *x /= sum;
+        }
+    }
+}
+
+/// One query head's decode attention over a [`HeadCache`], using the
+/// sparse kernel for the static segment. Returns the `head_dim` output
+/// and ticks `ctr` with the kernel events (for the Fig 15 cost model).
+pub fn attend_sparse(hc: &HeadCache, q: &[f32], ctr: &mut EventCounters) -> Vec<f32> {
+    assert_eq!(q.len(), hc.head_dim);
+    let scale = 1.0 / (hc.head_dim as f32).sqrt();
+    let n_static = hc.n_static;
+    let n_dyn = hc.dyn_len();
+    let mut scores = vec![0f32; n_static + n_dyn];
+
+    // QKᵀ static: q (1 × head_dim) × Kᵀ (head_dim × n_static), sparse
+    if n_static > 0 {
+        let s = sparse_amx_gemm_bf16(q, 1, &hc.k_static, ctr);
+        scores[..n_static].copy_from_slice(&s);
+    }
+    // QKᵀ dynamic tail: dense dot products
+    for t in 0..n_dyn {
+        let row = &hc.k_dyn[t * hc.head_dim..(t + 1) * hc.head_dim];
+        let mut acc = 0.0;
+        for d in 0..hc.head_dim {
+            acc += round_f32(q[d]) * row[d];
+        }
+        scores[n_static + t] = acc;
+        ctr.input_bytes += (hc.head_dim * 2) as u64;
+        ctr.avx_fma += hc.head_dim.div_ceil(32) as u64;
+    }
+    for s in scores.iter_mut() {
+        *s *= scale;
+    }
+    softmax(&mut scores);
+
+    // R·V static: r (1 × n_static) × V (n_static × head_dim), sparse
+    let mut out = vec![0f32; hc.head_dim];
+    if n_static > 0 {
+        let o = sparse_amx_gemm_bf16(&scores[..n_static], 1, &hc.v_static, ctr);
+        out.copy_from_slice(&o);
+    }
+    // R·V dynamic tail
+    for t in 0..n_dyn {
+        let r = scores[n_static + t];
+        let row = &hc.v_dyn[t * hc.head_dim..(t + 1) * hc.head_dim];
+        for d in 0..hc.head_dim {
+            out[d] += r * row[d];
+        }
+        ctr.avx_fma += hc.head_dim.div_ceil(16) as u64;
+    }
+    out
+}
+
+/// Dense-reference attention (the Fig 15 baseline and the numerics
+/// oracle): same math on the *unpruned-layout* dense matrices.
+pub fn attend_dense_ref(
+    k: &[f32],
+    v: &[f32],
+    ctx: usize,
+    head_dim: usize,
+    q: &[f32],
+) -> Vec<f32> {
+    let scale = 1.0 / (head_dim as f32).sqrt();
+    // scores = q · Kᵀ
+    let mut kt = vec![0f32; head_dim * ctx];
+    for t in 0..ctx {
+        for d in 0..head_dim {
+            kt[d * ctx + t] = k[t * head_dim + d];
+        }
+    }
+    let mut scores = ref_gemm_bf16(q, 1, &kt, head_dim, ctx);
+    for s in scores.iter_mut() {
+        *s *= scale;
+    }
+    softmax(&mut scores);
+    ref_gemm_bf16(&scores, 1, v, ctx, head_dim)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShift;
+
+    #[test]
+    fn softmax_is_a_distribution() {
+        let mut xs = vec![1.0, 2.0, 3.0, -1e9];
+        softmax(&mut xs);
+        assert!((xs.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        assert!(xs[2] > xs[1] && xs[1] > xs[0]);
+        assert!(xs[3] < 1e-6);
+    }
+
+    #[test]
+    fn softmax_handles_extremes() {
+        let mut xs = vec![1e30f32, 1e30];
+        softmax(&mut xs);
+        assert!((xs[0] - 0.5).abs() < 1e-5);
+        softmax(&mut []);
+    }
+
+    #[test]
+    fn sparse_attention_matches_dense_ref_at_zero_sparsity() {
+        let mut g = XorShift::new(31);
+        let (ctx, d) = (48, 32);
+        let k = g.normal_vec(ctx * d, 1.0);
+        let v = g.normal_vec(ctx * d, 1.0);
+        let q = g.normal_vec(d, 1.0);
+        let hc = super::super::cache::HeadCache::from_prefill(&k, &v, ctx, d, 0.0, 0.0);
+        let mut ctr = EventCounters::default();
+        let got = attend_sparse(&hc, &q, &mut ctr);
+        let want = attend_dense_ref(&k, &v, ctx, d, &q);
+        for (a, b) in got.iter().zip(want.iter()) {
+            assert!((a - b).abs() < 0.05, "{a} vs {b}");
+        }
+        assert!(ctr.vpexpand > 0, "static path must use the sparse kernel");
+    }
+
+    #[test]
+    fn sparse_attention_with_dynamic_tail() {
+        let mut g = XorShift::new(32);
+        let (ctx, d) = (32, 16);
+        let k = g.normal_vec(ctx * d, 1.0);
+        let v = g.normal_vec(ctx * d, 1.0);
+        let q = g.normal_vec(d, 1.0);
+        let mut hc = super::super::cache::HeadCache::from_prefill(&k, &v, ctx, d, 0.0, 0.0);
+        let k2 = g.normal_vec(d, 1.0);
+        let v2 = g.normal_vec(d, 1.0);
+        hc.append(&k2, &v2);
+        // dense reference over the concatenated cache
+        let mut kall = k.clone();
+        kall.extend_from_slice(&k2);
+        let mut vall = v.clone();
+        vall.extend_from_slice(&v2);
+        let want = attend_dense_ref(&kall, &vall, ctx + 1, d, &q);
+        let mut ctr = EventCounters::default();
+        let got = attend_sparse(&hc, &q, &mut ctr);
+        for (a, b) in got.iter().zip(want.iter()) {
+            assert!((a - b).abs() < 0.05, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn pruned_cache_output_stays_close() {
+        // §6.1: moderate KV pruning perturbs attention output only mildly
+        let mut g = XorShift::new(33);
+        let (ctx, d) = (64, 32);
+        let k = g.normal_vec(ctx * d, 1.0);
+        let v = g.normal_vec(ctx * d, 1.0);
+        let q = g.normal_vec(d, 1.0);
+        let dense = attend_dense_ref(&k, &v, ctx, d, &q);
+        let hc = super::super::cache::HeadCache::from_prefill(&k, &v, ctx, d, 0.3, 0.5);
+        let mut ctr = EventCounters::default();
+        let pruned = attend_sparse(&hc, &q, &mut ctr);
+        let rms_base: f32 =
+            (dense.iter().map(|x| x * x).sum::<f32>() / d as f32).sqrt();
+        let rms_err: f32 = (dense
+            .iter()
+            .zip(pruned.iter())
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f32>()
+            / d as f32)
+            .sqrt();
+        assert!(
+            rms_err < 0.8 * rms_base,
+            "pruning destroyed attention: err {rms_err} vs base {rms_base}"
+        );
+    }
+
+    #[test]
+    fn empty_cache_attention() {
+        let hc = super::super::cache::HeadCache::from_prefill(&[], &[], 0, 8, 0.0, 0.0);
+        let mut ctr = EventCounters::default();
+        let out = attend_sparse(&hc, &[1.0; 8], &mut ctr);
+        assert_eq!(out, vec![0.0; 8]);
+    }
+}

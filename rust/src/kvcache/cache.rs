@@ -1,0 +1,269 @@
+//! The §6.2 KV-cache layout: a **static sparse segment** (the prefilled
+//! context, magnitude-pruned and packed in the SparAMX format, constant
+//! size, stored in model state like weights) plus a **dynamic dense
+//! tail** (tokens generated after prefill, appended without touching the
+//! static segment).
+//!
+//! PyTorch's stock path reallocates the whole cache every token
+//! (`torch.cat`) and materializes `repeat_kv` for GQA; this layout avoids
+//! both, which is where the paper's ">6× faster decoding" at long
+//! context comes from. [`NaiveCache`] models the stock behaviour for the
+//! §6.2 benchmark.
+
+use crate::sparse::format::SparseTensor;
+use crate::sparse::prune::magnitude_prune;
+use crate::util::bf16::round_f32;
+
+/// Per-(layer, kv-head) cache: sparse static segment + dense tail.
+#[derive(Clone, Debug)]
+pub struct HeadCache {
+    /// Kᵀ of the prefilled context: `head_dim × n_static` (inner dim ×
+    /// "neurons"), so QKᵀ maps onto the sparse GEMM directly.
+    pub k_static: SparseTensor,
+    /// V of the prefilled context: `n_static × head_dim`.
+    pub v_static: SparseTensor,
+    /// Dynamic K rows, `[t][head_dim]` row-major.
+    pub k_dyn: Vec<f32>,
+    /// Dynamic V rows, `[t][head_dim]` row-major.
+    pub v_dyn: Vec<f32>,
+    pub head_dim: usize,
+    /// Tokens in the static segment.
+    pub n_static: usize,
+}
+
+impl HeadCache {
+    /// Build from prefilled K/V (`ctx × head_dim`, row-major, one row per
+    /// token), pruning K at `k_sparsity` and V at `v_sparsity`
+    /// (magnitude, within this head — §6.1).
+    pub fn from_prefill(
+        k: &[f32],
+        v: &[f32],
+        ctx: usize,
+        head_dim: usize,
+        k_sparsity: f64,
+        v_sparsity: f64,
+    ) -> HeadCache {
+        assert_eq!(k.len(), ctx * head_dim);
+        assert_eq!(v.len(), ctx * head_dim);
+        let kp = magnitude_prune(k, k_sparsity);
+        let vp = magnitude_prune(v, v_sparsity);
+        // transpose K to head_dim × ctx for the QKᵀ GEMM mapping
+        let mut kt = vec![0f32; head_dim * ctx];
+        for t in 0..ctx {
+            for d in 0..head_dim {
+                kt[d * ctx + t] = kp[t * head_dim + d];
+            }
+        }
+        HeadCache {
+            k_static: SparseTensor::pack_f32(&kt, head_dim, ctx),
+            v_static: SparseTensor::pack_f32(&vp, ctx, head_dim),
+            k_dyn: Vec::new(),
+            v_dyn: Vec::new(),
+            head_dim,
+            n_static: ctx,
+        }
+    }
+
+    /// Append one generated token's K/V rows to the dynamic tail —
+    /// O(head_dim), no reallocation of the static segment.
+    pub fn append(&mut self, k_row: &[f32], v_row: &[f32]) {
+        assert_eq!(k_row.len(), self.head_dim);
+        assert_eq!(v_row.len(), self.head_dim);
+        self.k_dyn.extend(k_row.iter().map(|&x| round_f32(x)));
+        self.v_dyn.extend(v_row.iter().map(|&x| round_f32(x)));
+    }
+
+    /// Total tokens visible to attention.
+    pub fn len(&self) -> usize {
+        self.n_static + self.k_dyn.len() / self.head_dim
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Dynamic-tail token count.
+    pub fn dyn_len(&self) -> usize {
+        self.k_dyn.len() / self.head_dim
+    }
+
+    /// Bytes held by the cache (sparse static + dense tail, BF16 tail
+    /// assumed 2 bytes/elem as the engine stores it).
+    pub fn bytes(&self) -> usize {
+        self.k_static.bytes_sparse()
+            + self.v_static.bytes_sparse()
+            + (self.k_dyn.len() + self.v_dyn.len()) * 2
+    }
+}
+
+/// Whole-model cache: `layers × kv_heads` head caches.
+#[derive(Clone, Debug)]
+pub struct KvCache {
+    pub heads: Vec<Vec<HeadCache>>, // [layer][kv_head]
+    pub kv_heads: usize,
+}
+
+impl KvCache {
+    /// Build from per-layer, per-head prefill tensors via a closure
+    /// yielding `(k, v)` for each (layer, head).
+    pub fn from_prefill<F>(
+        layers: usize,
+        kv_heads: usize,
+        ctx: usize,
+        head_dim: usize,
+        k_sparsity: f64,
+        v_sparsity: f64,
+        mut kv_for: F,
+    ) -> KvCache
+    where
+        F: FnMut(usize, usize) -> (Vec<f32>, Vec<f32>),
+    {
+        let heads = (0..layers)
+            .map(|l| {
+                (0..kv_heads)
+                    .map(|h| {
+                        let (k, v) = kv_for(l, h);
+                        HeadCache::from_prefill(&k, &v, ctx, head_dim, k_sparsity, v_sparsity)
+                    })
+                    .collect()
+            })
+            .collect();
+        KvCache { heads, kv_heads }
+    }
+
+    /// The head cache serving query head `q_head` of `q_heads` total
+    /// (GQA mapping — no materialized `repeat_kv`).
+    pub fn head_for_query(&self, layer: usize, q_head: usize, q_heads: usize) -> &HeadCache {
+        let group = q_heads / self.kv_heads;
+        &self.heads[layer][q_head / group]
+    }
+
+    /// Total cache bytes.
+    pub fn bytes(&self) -> usize {
+        self.heads.iter().flatten().map(|h| h.bytes()).sum()
+    }
+}
+
+/// The stock-PyTorch cache behaviour for the §6.2 comparison: every
+/// appended token reallocates and copies the full cache (torch.cat), and
+/// each attention call materializes the GQA repeat.
+#[derive(Clone, Debug, Default)]
+pub struct NaiveCache {
+    pub k: Vec<f32>, // ctx × head_dim
+    pub v: Vec<f32>,
+    pub head_dim: usize,
+}
+
+impl NaiveCache {
+    pub fn new(k: Vec<f32>, v: Vec<f32>, head_dim: usize) -> NaiveCache {
+        NaiveCache { k, v, head_dim }
+    }
+
+    /// torch.cat-style append: allocate new buffers and copy everything.
+    pub fn append_realloc(&mut self, k_row: &[f32], v_row: &[f32]) {
+        let mut nk = Vec::with_capacity(self.k.len() + self.head_dim);
+        nk.extend_from_slice(&self.k);
+        nk.extend_from_slice(k_row);
+        let mut nv = Vec::with_capacity(self.v.len() + self.head_dim);
+        nv.extend_from_slice(&self.v);
+        nv.extend_from_slice(v_row);
+        self.k = nk;
+        self.v = nv;
+    }
+
+    /// Materialize the `repeat_kv` expansion for `group` query heads —
+    /// the copy stock Llama GQA attention performs each step.
+    pub fn repeat_kv(&self, group: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut k = Vec::with_capacity(self.k.len() * group);
+        let mut v = Vec::with_capacity(self.v.len() * group);
+        for _ in 0..group {
+            k.extend_from_slice(&self.k);
+            v.extend_from_slice(&self.v);
+        }
+        (k, v)
+    }
+
+    pub fn len(&self) -> usize {
+        self.k.len() / self.head_dim.max(1)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.k.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShift;
+
+    fn rand_kv(ctx: usize, d: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut g = XorShift::new(seed);
+        (g.normal_vec(ctx * d, 1.0), g.normal_vec(ctx * d, 1.0))
+    }
+
+    #[test]
+    fn prefill_prunes_to_requested_sparsity() {
+        let (k, v) = rand_kv(64, 32, 1);
+        let hc = HeadCache::from_prefill(&k, &v, 64, 32, 0.3, 0.5);
+        assert!((hc.k_static.sparsity() - 0.3).abs() < 0.02);
+        assert!((hc.v_static.sparsity() - 0.5).abs() < 0.02);
+        assert_eq!(hc.len(), 64);
+        assert_eq!(hc.dyn_len(), 0);
+    }
+
+    #[test]
+    fn k_is_stored_transposed() {
+        let (k, v) = rand_kv(16, 8, 2);
+        let hc = HeadCache::from_prefill(&k, &v, 16, 8, 0.0, 0.0);
+        assert_eq!(hc.k_static.rows, 8); // head_dim
+        assert_eq!(hc.k_static.cols, 16); // ctx
+        assert_eq!(hc.v_static.rows, 16);
+        assert_eq!(hc.v_static.cols, 8);
+        // spot-check transposition via dense reconstruction
+        let kt = hc.k_static.to_dense_f32();
+        assert_eq!(kt[0 * 16 + 3], round_f32(k[3 * 8 + 0]));
+    }
+
+    #[test]
+    fn append_grows_only_the_tail() {
+        let (k, v) = rand_kv(32, 16, 3);
+        let mut hc = HeadCache::from_prefill(&k, &v, 32, 16, 0.3, 0.5);
+        let before = hc.k_static.nnz();
+        hc.append(&vec![1.0; 16], &vec![2.0; 16]);
+        hc.append(&vec![3.0; 16], &vec![4.0; 16]);
+        assert_eq!(hc.len(), 34);
+        assert_eq!(hc.dyn_len(), 2);
+        assert_eq!(hc.k_static.nnz(), before, "static segment untouched");
+    }
+
+    #[test]
+    fn gqa_head_mapping() {
+        let cache = KvCache::from_prefill(2, 2, 8, 4, 0.0, 0.0, |l, h| {
+            let val = (l * 10 + h) as f32 + 1.0;
+            (vec![val; 32], vec![val; 32])
+        });
+        // 8 query heads over 2 kv heads → group of 4
+        let hc = cache.head_for_query(1, 5, 8);
+        // query head 5 → kv head 1 → value 1*10 + 1 + 1 = 12.0
+        assert_eq!(hc.v_static.to_dense_f32()[0], 12.0);
+    }
+
+    #[test]
+    fn naive_cache_append_copies() {
+        let mut nc = NaiveCache::new(vec![1.0; 8], vec![2.0; 8], 4);
+        nc.append_realloc(&[9.0; 4], &[8.0; 4]);
+        assert_eq!(nc.len(), 3);
+        assert_eq!(nc.k[8], 9.0);
+        let (rk, _) = nc.repeat_kv(4);
+        assert_eq!(rk.len(), nc.k.len() * 4);
+    }
+
+    #[test]
+    fn cache_bytes_shrink_with_sparsity() {
+        let (k, v) = rand_kv(256, 64, 4);
+        let dense = HeadCache::from_prefill(&k, &v, 256, 64, 0.0, 0.0);
+        let sparse = HeadCache::from_prefill(&k, &v, 256, 64, 0.5, 0.5);
+        assert!(sparse.bytes() < dense.bytes());
+    }
+}

@@ -1,0 +1,3 @@
+//! §6.2 KV-cache manager (static sparse + dynamic dense tail).
+pub mod cache;
+pub mod attention;

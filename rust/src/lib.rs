@@ -1,0 +1,44 @@
+//! # SparAMX — unstructured sparsity for memory-bound LLM decode
+//!
+//! Rust + JAX + Pallas reproduction of *"SparAMX: Accelerating Compressed
+//! LLMs Token Generation on AMX-powered CPUs"* (AbouElhamayed et al., 2025).
+//!
+//! The library is organized in three layers (see `DESIGN.md`):
+//!
+//! * **Layer 1/2 (build time, Python)** — Pallas kernels + a JAX Llama-style
+//!   model, AOT-lowered to HLO text under `artifacts/`.
+//! * **Layer 3 (this crate)** — the serving coordinator, the paper's sparse
+//!   weight format, a functional AMX/AVX-512 instruction simulator, a
+//!   Sapphire-Rapids cost model that regenerates every table and figure of
+//!   the paper, and a PJRT runtime that executes the AOT artifacts.
+//!
+//! Module map:
+//!
+//! | module | role |
+//! |---|---|
+//! | [`util`] | PRNG, bf16, stats, thread pool, CLI, logging substrates |
+//! | [`cfg`] | config structs + minimal JSON parser |
+//! | [`sparse`] | bitmap+values format, magnitude pruning, thread partition |
+//! | [`amx`] | AMX tile + AVX-512 instruction simulator and the four kernels |
+//! | [`perf`] | Sapphire Rapids memory/cost model, pipeline slots, roofline |
+//! | [`models`] | Llama-family shape configs + synthetic weight store |
+//! | [`kvcache`] | §6.2 static-sparse + dynamic-dense KV cache manager |
+//! | [`baselines`] | PyTorch / DeepSparse / llama.cpp cost models |
+//! | [`runtime`] | PJRT client wrapper, HLO artifact loader, executor |
+//! | [`coordinator`] | request queue, continuous batcher, engine, server |
+//! | [`bench`] | criterion-lite measurement harness |
+
+pub mod util;
+pub mod cfg;
+pub mod sparse;
+pub mod amx;
+pub mod perf;
+pub mod models;
+pub mod kvcache;
+pub mod baselines;
+pub mod runtime;
+pub mod coordinator;
+pub mod bench;
+
+/// Crate version string reported by the CLI and the server banner.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

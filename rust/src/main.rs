@@ -1,0 +1,156 @@
+//! `sparamx` CLI — the Layer-3 leader binary.
+//!
+//! Subcommands:
+//!   serve     — start the TCP serving engine on the AOT artifacts
+//!   generate  — one-shot generation for a prompt (loads engine inline)
+//!   eval      — perplexity / accuracy of the tiny checkpoint under
+//!               weight and KV sparsity (the paper's §6 experiments)
+//!   info      — print artifact + machine-model information
+
+use sparamx::cfg::RuntimeConfig;
+use sparamx::coordinator::batcher::AdmissionQueue;
+use sparamx::coordinator::engine::Engine;
+use sparamx::coordinator::{request, server};
+use sparamx::models::tinyforward::{KvTreatment, TinyModel};
+use sparamx::perf::Machine;
+use sparamx::runtime::artifact::Bundle;
+use sparamx::runtime::executor::Runtime;
+use sparamx::util::cli::Args;
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+fn main() {
+    let args = Args::from_env();
+    let code = match args.command.as_deref() {
+        Some("serve") => cmd_serve(&args),
+        Some("generate") => cmd_generate(&args),
+        Some("eval") => cmd_eval(&args),
+        Some("info") => cmd_info(&args),
+        _ => {
+            eprintln!(
+                "sparamx {} — usage:\n  sparamx serve    [--artifacts DIR] [--port P] [--sparsity S]\n  sparamx generate [--artifacts DIR] [--max-tokens N] PROMPT...\n  sparamx eval     [--artifacts DIR] [--sparsity S] [--k-sparsity S] [--v-sparsity S] [--int8-kv]\n  sparamx info     [--artifacts DIR] [--cores N]",
+                sparamx::VERSION
+            );
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn config_from(args: &Args) -> RuntimeConfig {
+    let mut cfg = match args.options.get("config") {
+        Some(path) => RuntimeConfig::from_file(path).expect("load config file"),
+        None => RuntimeConfig::default(),
+    };
+    cfg.artifacts_dir = args.get("artifacts", &cfg.artifacts_dir);
+    cfg.port = args.get_parse("port", cfg.port);
+    cfg.weight_sparsity = args.get_parse("sparsity", cfg.weight_sparsity);
+    cfg.max_new_tokens = args.get_parse("max-tokens", cfg.max_new_tokens);
+    cfg.validate().expect("config");
+    cfg
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let cfg = config_from(args);
+    let bundle = Bundle::load(&cfg.artifacts_dir).expect("load artifacts");
+    let rt = Runtime::cpu().expect("pjrt client");
+    let mut engine = Engine::load(&rt, &bundle, cfg.clone()).expect("engine");
+    let queue = Arc::new(AdmissionQueue::new(cfg.queue_capacity));
+    let listener =
+        std::net::TcpListener::bind(("127.0.0.1", cfg.port)).expect("bind port");
+    println!(
+        "sparamx serving on 127.0.0.1:{} (sparsity {:.0}%, batch {})",
+        cfg.port,
+        cfg.weight_sparsity * 100.0,
+        engine.geometry().decode_batch
+    );
+    let q2 = Arc::clone(&queue);
+    let max = cfg.max_new_tokens;
+    std::thread::spawn(move || server::serve(listener, q2, max));
+    engine.run(&queue).expect("engine loop");
+    0
+}
+
+fn cmd_generate(args: &Args) -> i32 {
+    let cfg = config_from(args);
+    let prompt = args.positional.join(" ");
+    if prompt.is_empty() {
+        eprintln!("generate: missing prompt");
+        return 2;
+    }
+    let bundle = Bundle::load(&cfg.artifacts_dir).expect("load artifacts");
+    let rt = Runtime::cpu().expect("pjrt client");
+    let mut engine = Engine::load(&rt, &bundle, cfg.clone()).expect("engine");
+    let queue = Arc::new(AdmissionQueue::new(4));
+    let (tx, rx) = mpsc::channel();
+    queue
+        .admit(request::Request {
+            id: 1,
+            prompt: prompt.clone().into_bytes(),
+            max_new_tokens: cfg.max_new_tokens,
+            arrived: Instant::now(),
+            respond: tx,
+        })
+        .expect("admit");
+    queue.close();
+    engine.run(&queue).expect("engine loop");
+    let resp = rx.recv().expect("response");
+    println!("{prompt}{}", resp.text());
+    eprintln!(
+        "[{} tokens, {:.1} ms total, {:.2} ms/token]",
+        resp.tokens.len(),
+        resp.total_latency_s * 1e3,
+        resp.per_token_s * 1e3
+    );
+    0
+}
+
+fn cmd_eval(args: &Args) -> i32 {
+    let cfg = config_from(args);
+    let bundle = Bundle::load(&cfg.artifacts_dir).expect("load artifacts");
+    let mut model = TinyModel::from_bundle(&bundle).expect("model");
+    let ws: f64 = args.get_parse("sparsity", 0.0);
+    if ws > 0.0 {
+        model.prune_weights(ws);
+    }
+    let kv = KvTreatment {
+        k_sparsity: args.get_parse("k-sparsity", 0.0),
+        v_sparsity: args.get_parse("v-sparsity", 0.0),
+        int8: args.has("int8-kv"),
+    };
+    let chunk: usize = args.get_parse("chunk", 128);
+    let limit: usize = args.get_parse("limit", bundle.eval_tokens.len());
+    let r = model.evaluate(&bundle.eval_tokens[..limit.min(bundle.eval_tokens.len())], chunk, kv);
+    println!(
+        "weight_sparsity={ws:.2} k={:.2} v={:.2} int8={} → ppl {:.3} nll {:.4} top1 {:.3} ({} tokens)",
+        kv.k_sparsity, kv.v_sparsity, kv.int8, r.ppl, r.nll, r.top1, r.tokens
+    );
+    0
+}
+
+fn cmd_info(args: &Args) -> i32 {
+    let cfg = config_from(args);
+    match Bundle::load(&cfg.artifacts_dir) {
+        Ok(bundle) => {
+            let n_params: usize = bundle.params.iter().map(|t| t.len()).sum();
+            println!(
+                "artifacts: {} ({} tensors, {:.2}M params, {} eval tokens)",
+                cfg.artifacts_dir,
+                bundle.params.len(),
+                n_params as f64 / 1e6,
+                bundle.eval_tokens.len()
+            );
+        }
+        Err(e) => println!("artifacts: unavailable ({e})"),
+    }
+    let cores: usize = args.get_parse("cores", 32);
+    let m = Machine::sapphire_rapids(cores);
+    println!(
+        "machine model: {} cores @ {:.1} GHz, {:.0} GB/s DRAM, AMX peak {:.1} TFLOP/s bf16",
+        m.cores,
+        m.freq_ghz,
+        m.effective_bw_gbs(),
+        m.peak_amx_bf16_flops() / 1e12
+    );
+    0
+}

@@ -1,0 +1,226 @@
+//! Llama-family model shape configs (the paper evaluates Llama 3 8B,
+//! smaller Llama 3.2 variants, and INT8 Llama 2 7B).
+//!
+//! Only *shapes* matter for kernel performance; weight values come from
+//! [`super::weights`] (synthetic) or the build-time-trained tiny
+//! checkpoint for accuracy experiments.
+
+/// One linear layer's GEMM shape: `in_features × out_features`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LinearShape {
+    pub name: &'static str,
+    pub in_features: usize,
+    pub out_features: usize,
+}
+
+impl LinearShape {
+    pub const fn new(name: &'static str, i: usize, o: usize) -> LinearShape {
+        LinearShape {
+            name,
+            in_features: i,
+            out_features: o,
+        }
+    }
+
+    /// Parameter count.
+    pub fn params(&self) -> usize {
+        self.in_features * self.out_features
+    }
+}
+
+/// Transformer decoder shape config.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub hidden: usize,
+    pub intermediate: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub kv_heads: usize,
+    pub head_dim: usize,
+    pub vocab: usize,
+}
+
+impl ModelConfig {
+    /// Llama 3 8B (the paper's main model).
+    pub fn llama3_8b() -> ModelConfig {
+        ModelConfig {
+            name: "llama3-8b".into(),
+            hidden: 4096,
+            intermediate: 14336,
+            layers: 32,
+            heads: 32,
+            kv_heads: 8,
+            head_dim: 128,
+            vocab: 128_256,
+        }
+    }
+
+    /// Llama 3.2 3B.
+    pub fn llama32_3b() -> ModelConfig {
+        ModelConfig {
+            name: "llama3.2-3b".into(),
+            hidden: 3072,
+            intermediate: 8192,
+            layers: 28,
+            heads: 24,
+            kv_heads: 8,
+            head_dim: 128,
+            vocab: 128_256,
+        }
+    }
+
+    /// Llama 3.2 1B.
+    pub fn llama32_1b() -> ModelConfig {
+        ModelConfig {
+            name: "llama3.2-1b".into(),
+            hidden: 2048,
+            intermediate: 8192,
+            layers: 16,
+            heads: 32,
+            kv_heads: 8,
+            head_dim: 64,
+            vocab: 128_256,
+        }
+    }
+
+    /// Llama 2 7B (the DeepSparse INT8 comparison model, Fig 13).
+    pub fn llama2_7b() -> ModelConfig {
+        ModelConfig {
+            name: "llama2-7b".into(),
+            hidden: 4096,
+            intermediate: 11008,
+            layers: 32,
+            heads: 32,
+            kv_heads: 32,
+            head_dim: 128,
+            vocab: 32_000,
+        }
+    }
+
+    /// The tiny build-time-trained model served end-to-end (DESIGN.md §2):
+    /// byte-level vocab, 2 layers, GQA. Must match
+    /// `python/compile/model.py::TINY_CONFIG`.
+    pub fn tiny() -> ModelConfig {
+        ModelConfig {
+            name: "tiny-1m".into(),
+            hidden: 128,
+            intermediate: 352,
+            layers: 2,
+            heads: 4,
+            kv_heads: 2,
+            head_dim: 32,
+            vocab: 256,
+        }
+    }
+
+    /// Look up a config by name.
+    pub fn by_name(name: &str) -> Option<ModelConfig> {
+        match name {
+            "llama3-8b" => Some(Self::llama3_8b()),
+            "llama3.2-3b" => Some(Self::llama32_3b()),
+            "llama3.2-1b" => Some(Self::llama32_1b()),
+            "llama2-7b" => Some(Self::llama2_7b()),
+            "tiny-1m" | "tiny" => Some(Self::tiny()),
+            _ => None,
+        }
+    }
+
+    /// KV-projection output width (GQA: kv_heads × head_dim).
+    pub fn kv_dim(&self) -> usize {
+        self.kv_heads * self.head_dim
+    }
+
+    /// The seven per-layer linear shapes (paper Table 2 rows).
+    pub fn layer_linears(&self) -> Vec<LinearShape> {
+        vec![
+            LinearShape::new("q_proj", self.hidden, self.heads * self.head_dim),
+            LinearShape::new("k_proj", self.hidden, self.kv_dim()),
+            LinearShape::new("v_proj", self.hidden, self.kv_dim()),
+            LinearShape::new("o_proj", self.heads * self.head_dim, self.hidden),
+            LinearShape::new("gate_proj", self.hidden, self.intermediate),
+            LinearShape::new("up_proj", self.hidden, self.intermediate),
+            LinearShape::new("down_proj", self.intermediate, self.hidden),
+        ]
+    }
+
+    /// LM head shape (tied embeddings are not assumed).
+    pub fn lm_head(&self) -> LinearShape {
+        LinearShape::new("lm_head", self.hidden, self.vocab)
+    }
+
+    /// Total linear-layer parameters across the model (decoder + head).
+    pub fn linear_params(&self) -> usize {
+        self.layers * self.layer_linears().iter().map(|l| l.params()).sum::<usize>()
+            + self.lm_head().params()
+    }
+
+    /// KV-cache bytes per token (BF16): 2 (K and V) × kv_dim × layers × 2B.
+    pub fn kv_bytes_per_token(&self) -> usize {
+        2 * self.kv_dim() * self.layers * 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn llama3_8b_matches_paper_table2_shapes() {
+        let m = ModelConfig::llama3_8b();
+        let lin = m.layer_linears();
+        let find = |n: &str| lin.iter().find(|l| l.name == n).unwrap();
+        assert_eq!(
+            (find("q_proj").in_features, find("q_proj").out_features),
+            (4096, 4096)
+        );
+        assert_eq!(
+            (find("k_proj").in_features, find("k_proj").out_features),
+            (4096, 1024)
+        );
+        assert_eq!(
+            (find("up_proj").in_features, find("up_proj").out_features),
+            (4096, 14336)
+        );
+        assert_eq!(
+            (find("down_proj").in_features, find("down_proj").out_features),
+            (14336, 4096)
+        );
+    }
+
+    #[test]
+    fn parameter_counts_are_plausible() {
+        // linear params ≈ 7B for Llama 3 8B (embeddings excluded)
+        let p = ModelConfig::llama3_8b().linear_params() as f64;
+        assert!((6.0e9..8.0e9).contains(&p), "params={p}");
+        let p1 = ModelConfig::llama32_1b().linear_params() as f64;
+        assert!(p1 < 2.0e9);
+    }
+
+    #[test]
+    fn model_size_ordering() {
+        let sizes: Vec<usize> = ["llama3.2-1b", "llama3.2-3b", "llama3-8b"]
+            .iter()
+            .map(|n| ModelConfig::by_name(n).unwrap().linear_params())
+            .collect();
+        assert!(sizes[0] < sizes[1] && sizes[1] < sizes[2]);
+    }
+
+    #[test]
+    fn tiny_model_is_gqa() {
+        let t = ModelConfig::tiny();
+        assert!(t.kv_heads < t.heads);
+        assert_eq!(t.heads * t.head_dim, t.hidden);
+    }
+
+    #[test]
+    fn by_name_unknown_is_none() {
+        assert!(ModelConfig::by_name("gpt-5").is_none());
+    }
+
+    #[test]
+    fn kv_bytes_per_token_llama3() {
+        // 2 * 1024 * 32 layers * 2 bytes = 131072
+        assert_eq!(ModelConfig::llama3_8b().kv_bytes_per_token(), 131_072);
+    }
+}

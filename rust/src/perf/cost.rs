@@ -1,0 +1,222 @@
+//! Event counts → seconds: the bounded-overlap cost model.
+//!
+//! Decode-phase GEMMs are streaming workloads: the weight stream is read
+//! once per step (far larger than LLC), while inputs/outputs and the
+//! decompression buffer stay cache-hot. The model therefore computes
+//!
+//! * `dram_time`   — DRAM-stream bytes / effective bandwidth,
+//! * `core_time`   — instruction issue cycles / (cores × freq), including
+//!   the decompression work, plus L2 traffic for the scratch buffer,
+//! * `time = max(dram_time, core_time)` — hardware prefetchers overlap
+//!   the weight stream with compute almost perfectly for these regular
+//!   access patterns (the paper's Table 1 shows the dense kernel is 100%
+//!   memory-bound, i.e. fully overlapped compute).
+//!
+//! Work is assumed parallel over output columns (the paper's
+//! parallelization dimension); a small non-parallel fraction models the
+//! per-call fixed cost.
+
+use super::machine::Machine;
+use crate::amx::EventCounters;
+
+/// Cost breakdown of one kernel invocation on the modeled machine.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct KernelCost {
+    /// DRAM streaming time (s).
+    pub dram_time: f64,
+    /// Core instruction-issue time including scratch-buffer traffic (s).
+    pub core_time: f64,
+    /// Scratch (L2) traffic time alone (s), for attribution.
+    pub scratch_time: f64,
+    /// LLC re-sweep traffic time (s), for attribution.
+    pub llc_time: f64,
+    /// Modeled wall time (s).
+    pub time: f64,
+}
+
+/// Fixed per-invocation overhead (thread fan-out, tile config): ~2 µs.
+const LAUNCH_OVERHEAD_S: f64 = 2e-6;
+
+/// DRAM stream ramp: prefetchers and TLBs take roughly this many bytes
+/// to reach steady-state bandwidth, charged once per kernel. This is why
+/// small layers (small models) achieve a lower fraction of peak and why
+/// Fig 1's speedup grows with model size.
+const STREAM_RAMP_BYTES: f64 = 1.5e6;
+
+impl KernelCost {
+    /// Cost of a kernel run described by `ctr` on machine `m`.
+    ///
+    /// Two second-order effects matter for the paper's figures:
+    /// * **parallel granularity** — the kernel parallelizes over column
+    ///   pairs; if it exposes fewer tasks than cores, the idle cores
+    ///   contribute neither issue slots nor memory parallelism (§4.1,
+    ///   and the reason small models speed up less in Fig 1);
+    /// * **LLC residency** — at batch > 32 the weight stream is swept
+    ///   once per 32-row m-block; if the (compressed) stream fits in LLC
+    ///   the repeats are served from cache, which is what turns the
+    ///   high-batch regime compute-bound (§7).
+    pub fn from_counters(ctr: &EventCounters, m: &Machine) -> KernelCost {
+        let active = if ctr.parallel_tasks == 0 {
+            m.cores
+        } else {
+            m.cores.min(ctr.parallel_tasks as usize)
+        };
+        let i = &m.instr;
+        let cycles = ctr.tile_zero as f64 * i.tile_zero
+            + (ctr.tile_load_input + ctr.tile_load_weight) as f64 * i.tile_load
+            + ctr.tile_store as f64 * i.tile_store
+            + ctr.tdp_total() as f64 * i.tdp
+            + ctr.avx_load as f64 * i.avx_load
+            + ctr.avx_store as f64 * i.avx_store
+            + ctr.vpexpand as f64 * i.vpexpand
+            + ctr.vpopcnt as f64 * i.vpopcnt
+            + ctr.prefix_step as f64 * i.prefix_step
+            + ctr.avx_fma as f64 * i.avx_fma
+            + ctr.broadcast as f64 * i.broadcast
+            + ctr.fma_dep_stall as f64;
+        let issue_time = cycles / (m.freq_ghz * 1e9) / active as f64;
+        let scratch_time = ctr.scratch_bytes as f64
+            / (active as f64 * m.l2_bw_gbs * 1e9);
+        let (dram_bytes, llc_bytes) = ctr.dram_llc_split(m.llc_bytes);
+        let ramp = if dram_bytes > 0 { STREAM_RAMP_BYTES } else { 0.0 };
+        let dram_time =
+            (dram_bytes as f64 + ramp) / (m.effective_bw_gbs_at(active) * 1e9);
+        let llc_time = llc_bytes as f64 / (m.llc_bw_gbs_at(active) * 1e9);
+        let core_time = issue_time + scratch_time + llc_time;
+        KernelCost {
+            dram_time,
+            core_time,
+            scratch_time,
+            llc_time,
+            time: dram_time.max(core_time) + LAUNCH_OVERHEAD_S,
+        }
+    }
+
+    /// Whether the invocation is DRAM-bandwidth bound.
+    pub fn memory_bound(&self) -> bool {
+        self.dram_time >= self.core_time
+    }
+}
+
+/// Convenience: cost of a dense BF16 GEMM of the given shape.
+pub fn dense_gemm_cost(batch: usize, rows: usize, cols: usize, m: &Machine) -> KernelCost {
+    KernelCost::from_counters(&super::analytic::dense_bf16(batch, rows, cols), m)
+}
+
+/// Convenience: cost of a sparse BF16 GEMM at `sparsity` (nnz derived).
+pub fn sparse_gemm_cost(
+    batch: usize,
+    rows: usize,
+    cols: usize,
+    sparsity: f64,
+    m: &Machine,
+) -> KernelCost {
+    let nnz = ((1.0 - sparsity.clamp(0.0, 1.0)) * (rows * cols) as f64).round() as usize;
+    KernelCost::from_counters(&super::analytic::sparse_bf16(batch, rows, cols, nnz), m)
+}
+
+/// Convenience: AVX sparse GEMM cost.
+pub fn avx_sparse_gemm_cost(
+    batch: usize,
+    rows: usize,
+    cols: usize,
+    sparsity: f64,
+    column_groups: usize,
+    m: &Machine,
+) -> KernelCost {
+    let nnz = ((1.0 - sparsity.clamp(0.0, 1.0)) * (rows * cols) as f64).round() as usize;
+    KernelCost::from_counters(
+        &super::analytic::avx_sparse_bf16(batch, rows, cols, nnz, column_groups),
+        m,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perf::analytic;
+
+    fn m32() -> Machine {
+        Machine::sapphire_rapids(32)
+    }
+
+    #[test]
+    fn dense_decode_gemm_is_memory_bound() {
+        // Llama 3 8B up_proj at batch 1: the paper's Table 1 regime.
+        let c = dense_gemm_cost(1, 4096, 14336, &m32());
+        assert!(c.memory_bound(), "dense decode GEMM must be DRAM bound: {c:?}");
+        assert!(c.dram_time > 3.0 * c.core_time);
+    }
+
+    #[test]
+    fn sparse_is_faster_than_dense_at_50pct_batch1() {
+        let m = m32();
+        let d = dense_gemm_cost(1, 4096, 14336, &m);
+        let s = sparse_gemm_cost(1, 4096, 14336, 0.5, &m);
+        assert!(s.time < d.time, "sparse {s:?} !< dense {d:?}");
+        // the paper's per-layer speedups are 1.2–2.0x at 50%
+        let speedup = d.time / s.time;
+        assert!(speedup > 1.1 && speedup < 2.5, "speedup={speedup}");
+    }
+
+    #[test]
+    fn sparse_loses_at_high_batch_compute_bound() {
+        // §7: "in compute-bound scenarios applying unstructured sparsity
+        // may reduce performance".
+        let m = m32();
+        let d = dense_gemm_cost(256, 4096, 4096, &m);
+        let s = sparse_gemm_cost(256, 4096, 4096, 0.5, &m);
+        assert!(!d.memory_bound(), "batch 256 should be compute bound");
+        assert!(s.time >= d.time, "sparse should not win when compute-bound");
+    }
+
+    #[test]
+    fn speedup_increases_with_sparsity() {
+        let m = m32();
+        let d = dense_gemm_cost(1, 4096, 4096, &m).time;
+        let mut last = 0.0;
+        for s in [0.2, 0.4, 0.6, 0.8] {
+            let sp = d / sparse_gemm_cost(1, 4096, 4096, s, &m).time;
+            assert!(sp > last, "speedup must grow with sparsity");
+            last = sp;
+        }
+    }
+
+    #[test]
+    fn more_cores_never_slower() {
+        for cores in [8usize, 16, 32] {
+            let a = sparse_gemm_cost(1, 4096, 14336, 0.5, &Machine::sapphire_rapids(cores));
+            let b = sparse_gemm_cost(1, 4096, 14336, 0.5, &Machine::sapphire_rapids(cores * 2));
+            assert!(b.time <= a.time, "{cores}→{} cores regressed", cores * 2);
+        }
+    }
+
+    #[test]
+    fn avx_beats_amx_at_batch1_low_cores() {
+        // §7: at batch 1 AVX sometimes outperforms AMX because AMX pays
+        // the scratch bounce. With few cores both are compute-limited on
+        // decompression; AVX avoids the extra scratch traffic.
+        let m = Machine::sapphire_rapids(8);
+        let amx = sparse_gemm_cost(1, 4096, 14336, 0.5, &m);
+        let avx = avx_sparse_gemm_cost(1, 4096, 14336, 0.5, 16, &m);
+        // allow either to win but they must be within 2x — the paper
+        // shows them close at batch 1
+        let ratio = amx.time / avx.time;
+        assert!((0.5..=2.0).contains(&ratio), "ratio={ratio}");
+    }
+
+    #[test]
+    fn amx_beats_avx_at_batch32() {
+        // Fig 12: AMX pulls ahead at high batch (matrix-matrix regime).
+        let m = m32();
+        let amx = sparse_gemm_cost(32, 4096, 14336, 0.5, &m);
+        let avx = avx_sparse_gemm_cost(32, 4096, 14336, 0.5, 16, &m);
+        assert!(amx.time < avx.time, "AMX {amx:?} !< AVX {avx:?}");
+    }
+
+    #[test]
+    fn launch_overhead_dominates_tiny_kernels() {
+        let c = KernelCost::from_counters(&analytic::dense_bf16(1, 32, 16), &m32());
+        assert!(c.time >= LAUNCH_OVERHEAD_S);
+    }
+}

@@ -1,0 +1,23 @@
+//! Performance model: converts simulated architectural events into time,
+//! pipeline-slot attribution, and roofline positions for a Sapphire
+//! Rapids-class CPU.
+//!
+//! The container this repo runs in has one core and no AMX, so wall-clock
+//! timing cannot reproduce the paper's testbed. Instead (DESIGN.md §2):
+//!
+//! 1. the [`crate::amx`] simulator (or [`analytic`], validated against
+//!    it) produces exact per-kernel event counts;
+//! 2. [`machine`] holds published Sapphire Rapids parameters (frequency,
+//!    DRAM bandwidth, instruction throughputs);
+//! 3. [`cost`] turns counts into seconds with a bounded-overlap model;
+//! 4. [`pipeline`] attributes pipeline slots (Table 1);
+//! 5. [`roofline`] reports achieved-vs-peak ratios for the §Perf pass.
+
+pub mod machine;
+pub mod analytic;
+pub mod cost;
+pub mod pipeline;
+pub mod roofline;
+
+pub use cost::KernelCost;
+pub use machine::Machine;

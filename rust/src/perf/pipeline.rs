@@ -1,0 +1,100 @@
+//! Pipeline-slot attribution (reproduces paper Table 1).
+//!
+//! VTune's top-down method classifies pipeline slots into retiring /
+//! front-end / core-bound / memory-bound, and memory-bound further into
+//! cache-bound vs DRAM-bound. We reconstruct the same attribution from
+//! the cost model's time components:
+//!
+//! * slots where the core waits on *any* memory (DRAM stream or the L2
+//!   scratch bounce) and has no instructions to issue → **memory bound**;
+//! * the subset waiting specifically on DRAM → **DRAM bound**.
+//!
+//! For the dense kernel almost no instructions overlap the huge weight
+//! stream → ~100% memory bound, mostly DRAM. The sparse kernel trades
+//! stream bytes for decompression instructions → stalls collapse.
+
+use super::cost::KernelCost;
+
+/// Pipeline-slot attribution percentages.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SlotReport {
+    /// % of slots stalled on any memory level.
+    pub memory_bound_pct: f64,
+    /// % of slots stalled specifically on DRAM.
+    pub dram_bound_pct: f64,
+    /// % of slots doing useful issue (retiring + core).
+    pub busy_pct: f64,
+}
+
+/// Attribute slots for a kernel cost.
+///
+/// A slot is **busy** while the core issues instructions or services its
+/// private cache traffic (`core_time` = issue + scratch + LLC): those
+/// slots retire decompression uops even while the DRAM stream is in
+/// flight. Everything else is stalled on memory; the stall splits
+/// between DRAM and caches in proportion to their traffic times.
+pub fn attribute(cost: &KernelCost) -> SlotReport {
+    let total = cost.time.max(1e-18);
+    let busy = cost.core_time.min(total);
+    let stall = (total - busy).max(0.0);
+    let cache_traffic = cost.scratch_time + cost.llc_time;
+    let mem_traffic = cost.dram_time + cache_traffic;
+    let dram_share = if mem_traffic > 0.0 {
+        cost.dram_time / mem_traffic
+    } else {
+        0.0
+    };
+    let dram_stall = (stall * dram_share).min(cost.dram_time);
+    let memory_bound_pct = 100.0 * stall / total;
+    let dram_bound_pct = 100.0 * dram_stall / total;
+    SlotReport {
+        memory_bound_pct,
+        dram_bound_pct,
+        busy_pct: 100.0 - memory_bound_pct,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perf::cost::{dense_gemm_cost, sparse_gemm_cost};
+    use crate::perf::Machine;
+
+    /// Table 1 workload: 32 consecutive linears, 4192 inputs (hidden dim;
+    /// the paper's text) × 14336 outputs, batch 1, 32 cores.
+    fn table1(sparsity: Option<f64>) -> SlotReport {
+        let m = Machine::sapphire_rapids(32);
+        let cost = match sparsity {
+            None => dense_gemm_cost(1, 4192, 14336, &m),
+            Some(s) => sparse_gemm_cost(1, 4192, 14336, s, &m),
+        };
+        attribute(&cost)
+    }
+
+    #[test]
+    fn dense_is_almost_fully_memory_bound() {
+        let r = table1(None);
+        assert!(r.memory_bound_pct > 85.0, "dense memory bound {r:?}");
+        assert!(r.dram_bound_pct > 70.0, "dense DRAM bound {r:?}");
+    }
+
+    #[test]
+    fn sparse_collapses_the_stalls() {
+        let dense = table1(None);
+        let sparse = table1(Some(0.5));
+        assert!(
+            sparse.memory_bound_pct < dense.memory_bound_pct / 2.0,
+            "sparse {sparse:?} vs dense {dense:?}"
+        );
+        assert!(sparse.dram_bound_pct < dense.dram_bound_pct / 3.0);
+    }
+
+    #[test]
+    fn percentages_are_consistent() {
+        for r in [table1(None), table1(Some(0.5)), table1(Some(0.9))] {
+            assert!((0.0..=100.0).contains(&r.memory_bound_pct));
+            assert!(r.dram_bound_pct <= r.memory_bound_pct + 1e-9);
+            assert!((r.busy_pct + r.memory_bound_pct - 100.0).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,89 @@
+//! Roofline analysis for the §Perf deliverable.
+//!
+//! Positions a kernel on the (arithmetic intensity, performance) plane of
+//! the modeled machine and reports the achieved fraction of the relevant
+//! roof — the "efficiency ratio" the paper's numbers translate to
+//! (DESIGN.md §7).
+
+use super::machine::Machine;
+use crate::amx::EventCounters;
+
+/// Roofline position of one kernel invocation.
+#[derive(Clone, Copy, Debug)]
+pub struct RooflinePoint {
+    /// FLOP per DRAM byte.
+    pub intensity: f64,
+    /// Achieved FLOP/s under the cost model.
+    pub achieved_flops: f64,
+    /// min(peak compute, intensity × bandwidth): the roof at this
+    /// intensity.
+    pub roof_flops: f64,
+    /// achieved / roof — the efficiency ratio.
+    pub efficiency: f64,
+    /// True if the roof at this intensity is the bandwidth slope.
+    pub bandwidth_limited: bool,
+}
+
+/// Compute the roofline position for a kernel with `flops` useful FLOPs.
+pub fn position(flops: f64, ctr: &EventCounters, m: &Machine) -> RooflinePoint {
+    let cost = super::cost::KernelCost::from_counters(ctr, m);
+    let (dram, _llc) = ctr.dram_llc_split(m.llc_bytes);
+    let bytes = dram.max(1) as f64;
+    let intensity = flops / bytes;
+    let bw = m.effective_bw_gbs() * 1e9;
+    let peak = m.peak_amx_bf16_flops();
+    let roof = (intensity * bw).min(peak);
+    let achieved = flops / cost.time.max(1e-18);
+    RooflinePoint {
+        intensity,
+        achieved_flops: achieved,
+        roof_flops: roof,
+        efficiency: achieved / roof,
+        bandwidth_limited: intensity * bw < peak,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perf::analytic;
+
+    #[test]
+    fn decode_gemm_sits_on_bandwidth_roof() {
+        let m = Machine::sapphire_rapids(32);
+        let (b, k, n) = (1, 4096, 14336);
+        let ctr = analytic::dense_bf16(b, k, n);
+        let p = position(analytic::gemm_flops(b, k, n), &ctr, &m);
+        assert!(p.bandwidth_limited, "batch-1 GEMM must be bandwidth limited");
+        assert!(p.efficiency > 0.8, "dense kernel should track its roof: {p:?}");
+        assert!(p.efficiency <= 1.05);
+    }
+
+    #[test]
+    fn large_batch_moves_toward_compute_roof() {
+        let m = Machine::sapphire_rapids(32);
+        let p1 = position(
+            analytic::gemm_flops(1, 4096, 4096),
+            &analytic::dense_bf16(1, 4096, 4096),
+            &m,
+        );
+        let p1024 = position(
+            analytic::gemm_flops(1024, 4096, 4096),
+            &analytic::dense_bf16(1024, 4096, 4096),
+            &m,
+        );
+        assert!(p1024.intensity > 100.0 * p1.intensity);
+        assert!(!p1024.bandwidth_limited);
+    }
+
+    #[test]
+    fn sparse_raises_intensity_at_batch1() {
+        // fewer DRAM bytes for the same useful FLOPs → higher intensity
+        let m = Machine::sapphire_rapids(32);
+        let flops = analytic::gemm_flops(1, 4096, 14336);
+        let d = position(flops, &analytic::dense_bf16(1, 4096, 14336), &m);
+        let nnz = (0.5 * (4096.0 * 14336.0)) as usize;
+        let s = position(flops, &analytic::sparse_bf16(1, 4096, 14336, nnz), &m);
+        assert!(s.intensity > 1.5 * d.intensity, "sparse {s:?} vs dense {d:?}");
+    }
+}

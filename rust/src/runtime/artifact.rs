@@ -1,0 +1,226 @@
+//! Artifact bundle loader: `manifest.json`, `weights.bin`,
+//! `eval_tokens.bin` produced by `python/compile/aot.py`.
+
+use crate::cfg::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::io::Read;
+use std::path::{Path, PathBuf};
+
+/// One named tensor from `weights.bin`.
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Parsed artifact bundle.
+#[derive(Debug)]
+pub struct Bundle {
+    pub dir: PathBuf,
+    pub manifest: Json,
+    /// Trained parameters in manifest order (the PJRT input order).
+    pub params: Vec<Tensor>,
+    /// Held-out evaluation tokens (byte-level).
+    pub eval_tokens: Vec<u8>,
+}
+
+impl Bundle {
+    /// Load the bundle from a directory.
+    pub fn load(dir: &str) -> Result<Bundle> {
+        let dir = PathBuf::from(dir);
+        let manifest_text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("read {}/manifest.json", dir.display()))?;
+        let manifest = Json::parse(&manifest_text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let params = read_weights(&dir.join("weights.bin"))?;
+        // cross-check against the manifest's declared order
+        let declared = manifest
+            .req("params")
+            .map_err(|e| anyhow!(e))?
+            .as_arr()
+            .ok_or_else(|| anyhow!("manifest params must be an array"))?;
+        if declared.len() != params.len() {
+            bail!(
+                "manifest declares {} params, weights.bin has {}",
+                declared.len(),
+                params.len()
+            );
+        }
+        for (d, t) in declared.iter().zip(params.iter()) {
+            let name = d.req("name").map_err(|e| anyhow!(e))?.as_str().unwrap_or("");
+            if name != t.name {
+                bail!("param order mismatch: manifest {name} vs weights {}", t.name);
+            }
+        }
+        let eval_tokens = read_tokens(&dir.join("eval_tokens.bin"))?;
+        Ok(Bundle {
+            dir,
+            manifest,
+            params,
+            eval_tokens,
+        })
+    }
+
+    /// Path of a named HLO artifact.
+    pub fn hlo_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.hlo.txt"))
+    }
+
+    /// Model config value from the manifest.
+    pub fn config_usize(&self, key: &str) -> Result<usize> {
+        self.manifest
+            .req("config")
+            .and_then(|c| c.req(key))
+            .map_err(|e| anyhow!(e))?
+            .as_usize()
+            .ok_or_else(|| anyhow!("config.{key} must be a uint"))
+    }
+
+    /// Find a parameter by manifest name.
+    pub fn param(&self, name: &str) -> Option<&Tensor> {
+        self.params.iter().find(|t| t.name == name)
+    }
+}
+
+/// Read the `SPX1` weights container.
+pub fn read_weights(path: &Path) -> Result<Vec<Tensor>> {
+    let mut f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != b"SPX1" {
+        bail!("{path:?}: bad magic {magic:?}");
+    }
+    let count = read_u32(&mut f)? as usize;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let name_len = read_u16(&mut f)? as usize;
+        let mut name = vec![0u8; name_len];
+        f.read_exact(&mut name)?;
+        let ndim = read_u8(&mut f)? as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(read_u32(&mut f)? as usize);
+        }
+        let n: usize = shape.iter().product();
+        let mut bytes = vec![0u8; n * 4];
+        f.read_exact(&mut bytes)?;
+        let data = bytes
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        out.push(Tensor {
+            name: String::from_utf8(name).context("tensor name utf8")?,
+            shape,
+            data,
+        });
+    }
+    Ok(out)
+}
+
+/// Read the `SPT1` token container.
+pub fn read_tokens(path: &Path) -> Result<Vec<u8>> {
+    let mut f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != b"SPT1" {
+        bail!("{path:?}: bad magic");
+    }
+    let count = read_u32(&mut f)? as usize;
+    let mut tokens = vec![0u8; count];
+    f.read_exact(&mut tokens)?;
+    Ok(tokens)
+}
+
+fn read_u8(f: &mut impl Read) -> Result<u8> {
+    let mut b = [0u8; 1];
+    f.read_exact(&mut b)?;
+    Ok(b[0])
+}
+
+fn read_u16(f: &mut impl Read) -> Result<u16> {
+    let mut b = [0u8; 2];
+    f.read_exact(&mut b)?;
+    Ok(u16::from_le_bytes(b))
+}
+
+fn read_u32(f: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_test_weights(path: &Path, tensors: &[(&str, Vec<usize>, Vec<f32>)]) {
+        let mut f = std::fs::File::create(path).unwrap();
+        f.write_all(b"SPX1").unwrap();
+        f.write_all(&(tensors.len() as u32).to_le_bytes()).unwrap();
+        for (name, shape, data) in tensors {
+            f.write_all(&(name.len() as u16).to_le_bytes()).unwrap();
+            f.write_all(name.as_bytes()).unwrap();
+            f.write_all(&[shape.len() as u8]).unwrap();
+            for d in shape {
+                f.write_all(&(*d as u32).to_le_bytes()).unwrap();
+            }
+            for x in data {
+                f.write_all(&x.to_le_bytes()).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn weights_roundtrip() {
+        let dir = std::env::temp_dir().join("sparamx_test_weights");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("w.bin");
+        write_test_weights(
+            &path,
+            &[
+                ("emb", vec![4, 2], (0..8).map(|i| i as f32).collect()),
+                ("scalar", vec![], vec![7.5]),
+            ],
+        );
+        let ts = read_weights(&path).unwrap();
+        assert_eq!(ts.len(), 2);
+        assert_eq!(ts[0].name, "emb");
+        assert_eq!(ts[0].shape, vec![4, 2]);
+        assert_eq!(ts[0].data[7], 7.0);
+        assert_eq!(ts[1].data, vec![7.5]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("sparamx_test_badmagic");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, b"NOPE....").unwrap();
+        assert!(read_weights(&path).is_err());
+        assert!(read_tokens(&path).is_err());
+    }
+
+    #[test]
+    fn tokens_roundtrip() {
+        let dir = std::env::temp_dir().join("sparamx_test_tokens");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.bin");
+        let mut f = std::fs::File::create(&path).unwrap();
+        f.write_all(b"SPT1").unwrap();
+        f.write_all(&3u32.to_le_bytes()).unwrap();
+        f.write_all(&[10, 20, 30]).unwrap();
+        drop(f);
+        assert_eq!(read_tokens(&path).unwrap(), vec![10, 20, 30]);
+    }
+}

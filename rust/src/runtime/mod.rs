@@ -1,0 +1,3 @@
+//! PJRT runtime: loads AOT HLO-text artifacts and executes them.
+pub mod artifact;
+pub mod executor;

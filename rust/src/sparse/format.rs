@@ -1,0 +1,413 @@
+//! The SparAMX compressed weight format (paper Figure 6).
+//!
+//! A weight matrix `W[K][N]` (K = inner/hidden dim, N = output
+//! neurons) is stored as:
+//!
+//! * `weight_metadata` — a bitmap with one bit per element, `1` = non-zero;
+//! * `weight_values`  — the non-zero values packed in consumption order.
+//!
+//! The consumption order is **tile order**: the matrix is carved into AMX
+//! B-tiles of 16 rows × (32 BF16 | 64 INT8) elements. Each tile covers 16
+//! output neurons × (32 | 64) inner-dim steps, pre-arranged in the VNNI
+//! interleave the `tdpbf16ps`/`tdpbssd` instructions require (pairs /
+//! quads of consecutive `k` sharing a tile row — paper §2.4, §4.5). One
+//! tile row's metadata is exactly one 32-bit (BF16) or 64-bit (INT8)
+//! word, which is what the kernel's `vpexpandw`/`vpexpandb` step consumes.
+//!
+//! Tiles are laid out with the inner (`k`) dimension fastest within a
+//! 16-neuron column block, so each worker thread — which owns a
+//! contiguous range of column blocks — reads a contiguous byte range of
+//! both streams (enabling the Figure 9 `weight_value_index` partition).
+
+use crate::util::bf16::Bf16;
+
+/// Element type stored in a [`SparseTensor`].
+pub trait Element: Copy + Default + PartialEq + std::fmt::Debug + Send + Sync {
+    /// Elements per tile row (32 for BF16, 64 for INT8).
+    const ROW_ELEMS: usize;
+    /// VNNI group size: how many consecutive `k` share a tile row
+    /// (2 for BF16, 4 for INT8).
+    const VNNI: usize;
+    /// Bytes per element.
+    const BYTES: usize;
+    fn is_zero(self) -> bool;
+    fn to_f32(self) -> f32;
+    fn from_f32(x: f32) -> Self;
+}
+
+impl Element for Bf16 {
+    const ROW_ELEMS: usize = 32;
+    const VNNI: usize = 2;
+    const BYTES: usize = 2;
+    fn is_zero(self) -> bool {
+        Bf16::is_zero(self)
+    }
+    fn to_f32(self) -> f32 {
+        Bf16::to_f32(self)
+    }
+    fn from_f32(x: f32) -> Self {
+        Bf16::from_f32(x)
+    }
+}
+
+impl Element for i8 {
+    const ROW_ELEMS: usize = 64;
+    const VNNI: usize = 4;
+    const BYTES: usize = 1;
+    fn is_zero(self) -> bool {
+        self == 0
+    }
+    fn to_f32(self) -> f32 {
+        self as f32
+    }
+    fn from_f32(x: f32) -> Self {
+        x.round().clamp(-128.0, 127.0) as i8
+    }
+}
+
+/// Geometry of the tile stream.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TileOrder {
+    /// Rows per tile (always 16 on AMX).
+    pub tile_rows: usize,
+    /// Elements per tile row (32 BF16 / 64 INT8).
+    pub row_elems: usize,
+    /// Output neurons covered per tile (always 16).
+    pub cols_per_tile: usize,
+    /// Inner-dim steps covered per tile (= tile_rows * VNNI).
+    pub k_per_tile: usize,
+}
+
+impl TileOrder {
+    pub fn for_elem<T: Element>() -> TileOrder {
+        TileOrder {
+            tile_rows: 16,
+            row_elems: T::ROW_ELEMS,
+            cols_per_tile: 16,
+            k_per_tile: 16 * T::VNNI,
+        }
+    }
+
+    /// Elements per tile.
+    pub fn tile_elems(&self) -> usize {
+        self.tile_rows * self.row_elems
+    }
+}
+
+/// A weight matrix in the SparAMX bitmap + values format.
+#[derive(Clone, Debug)]
+pub struct SparseTensor<T: Element = Bf16> {
+    /// Logical (unpadded) inner dimension.
+    pub rows: usize,
+    /// Logical (unpadded) output-neuron count.
+    pub cols: usize,
+    /// Padded inner dimension (multiple of `order.k_per_tile`).
+    pub rows_padded: usize,
+    /// Padded column count (multiple of `order.cols_per_tile`).
+    pub cols_padded: usize,
+    pub order: TileOrder,
+    /// One word per tile row; BF16 uses the low 32 bits, INT8 all 64.
+    pub metadata: Vec<u64>,
+    /// Non-zero values in tile scan order.
+    pub values: Vec<T>,
+    /// Cumulative non-zero count *before* each tile; one extra tail entry
+    /// equal to `values.len()`. Powers O(1) random tile access and the
+    /// `weight_value_index` thread partition.
+    pub tile_nnz_prefix: Vec<u32>,
+}
+
+impl<T: Element> SparseTensor<T> {
+    /// Number of k-chunks (tiles along the inner dimension).
+    pub fn k_chunks(&self) -> usize {
+        self.rows_padded / self.order.k_per_tile
+    }
+
+    /// Number of 16-neuron column blocks.
+    pub fn col_blocks(&self) -> usize {
+        self.cols_padded / self.order.cols_per_tile
+    }
+
+    /// Total number of tiles in the stream.
+    pub fn num_tiles(&self) -> usize {
+        self.k_chunks() * self.col_blocks()
+    }
+
+    /// Tile index for (column block, k chunk). The k dimension is fastest
+    /// so a column range maps to a contiguous tile range.
+    pub fn tile_index(&self, col_block: usize, k_chunk: usize) -> usize {
+        debug_assert!(col_block < self.col_blocks() && k_chunk < self.k_chunks());
+        col_block * self.k_chunks() + k_chunk
+    }
+
+    /// Metadata words (one per tile row) for a tile.
+    pub fn tile_metadata(&self, tile: usize) -> &[u64] {
+        let r = self.order.tile_rows;
+        &self.metadata[tile * r..(tile + 1) * r]
+    }
+
+    /// Values slice and starting offset for a tile.
+    pub fn tile_values(&self, tile: usize) -> (&[T], usize) {
+        let start = self.tile_nnz_prefix[tile] as usize;
+        let end = self.tile_nnz_prefix[tile + 1] as usize;
+        (&self.values[start..end], start)
+    }
+
+    /// Number of stored non-zeros.
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Fraction of *logical* elements that are zero.
+    pub fn sparsity(&self) -> f64 {
+        let logical = self.rows * self.cols;
+        if logical == 0 {
+            return 0.0;
+        }
+        1.0 - self.nnz() as f64 / logical as f64
+    }
+
+    /// Bytes of the dense representation (logical elements only).
+    pub fn bytes_dense(&self) -> usize {
+        self.rows * self.cols * T::BYTES
+    }
+
+    /// Bytes of the compressed stream actually moved from DRAM by the
+    /// sparse kernel: bitmap (1 bit/element over the padded stream) +
+    /// packed values.
+    pub fn bytes_sparse(&self) -> usize {
+        self.metadata.len() * (self.order.row_elems / 8) + self.values.len() * T::BYTES
+    }
+
+    /// Map a tile-local position back to logical (k, n). Returns `None`
+    /// for padding positions.
+    pub fn tile_pos_to_kn(
+        &self,
+        col_block: usize,
+        k_chunk: usize,
+        row: usize,
+        col: usize,
+    ) -> Option<(usize, usize)> {
+        let v = T::VNNI;
+        let k = k_chunk * self.order.k_per_tile + row * v + col % v;
+        let n = col_block * self.order.cols_per_tile + col / v;
+        (k < self.rows && n < self.cols).then_some((k, n))
+    }
+
+    /// Pack a dense row-major `rows x cols` matrix (`w[k * cols + n]`).
+    pub fn pack(w: &[T], rows: usize, cols: usize) -> SparseTensor<T> {
+        assert_eq!(w.len(), rows * cols, "shape mismatch");
+        let order = TileOrder::for_elem::<T>();
+        let rows_padded = rows.div_ceil(order.k_per_tile) * order.k_per_tile;
+        let cols_padded = cols.div_ceil(order.cols_per_tile) * order.cols_per_tile;
+        let k_chunks = rows_padded / order.k_per_tile;
+        let col_blocks = cols_padded / order.cols_per_tile;
+        let num_tiles = k_chunks * col_blocks;
+
+        let mut metadata = Vec::with_capacity(num_tiles * order.tile_rows);
+        let mut values = Vec::new();
+        let mut tile_nnz_prefix = Vec::with_capacity(num_tiles + 1);
+
+        let v = T::VNNI;
+        for cb in 0..col_blocks {
+            for kc in 0..k_chunks {
+                tile_nnz_prefix.push(values.len() as u32);
+                for r in 0..order.tile_rows {
+                    let mut word = 0u64;
+                    for c in 0..order.row_elems {
+                        let k = kc * order.k_per_tile + r * v + c % v;
+                        let n = cb * order.cols_per_tile + c / v;
+                        if k < rows && n < cols {
+                            let x = w[k * cols + n];
+                            if !x.is_zero() {
+                                word |= 1 << c;
+                                values.push(x);
+                            }
+                        }
+                    }
+                    metadata.push(word);
+                }
+            }
+        }
+        tile_nnz_prefix.push(values.len() as u32);
+
+        SparseTensor {
+            rows,
+            cols,
+            rows_padded,
+            cols_padded,
+            order,
+            metadata,
+            values,
+            tile_nnz_prefix,
+        }
+    }
+
+    /// Reconstruct the dense row-major matrix (tests / reference path).
+    pub fn to_dense(&self) -> Vec<T> {
+        let mut out = vec![T::default(); self.rows * self.cols];
+        let v = self.order.tile_rows; // rows per tile
+        let _ = v;
+        for cb in 0..self.col_blocks() {
+            for kc in 0..self.k_chunks() {
+                let tile = self.tile_index(cb, kc);
+                let meta = self.tile_metadata(tile);
+                let (vals, _) = self.tile_values(tile);
+                let mut vi = 0;
+                for (r, &word) in meta.iter().enumerate() {
+                    for c in 0..self.order.row_elems {
+                        if word >> c & 1 == 1 {
+                            let x = vals[vi];
+                            vi += 1;
+                            if let Some((k, n)) = self.tile_pos_to_kn(cb, kc, r, c) {
+                                out[k * self.cols + n] = x;
+                            }
+                        }
+                    }
+                }
+                debug_assert_eq!(vi, vals.len());
+            }
+        }
+        out
+    }
+}
+
+impl SparseTensor<Bf16> {
+    /// Pack an f32 matrix, rounding values through BF16.
+    pub fn pack_f32(w: &[f32], rows: usize, cols: usize) -> SparseTensor<Bf16> {
+        let wb: Vec<Bf16> = w.iter().map(|&x| Bf16::from_f32(x)).collect();
+        SparseTensor::pack(&wb, rows, cols)
+    }
+
+    /// Dense matrix as f32 (reference path).
+    pub fn to_dense_f32(&self) -> Vec<f32> {
+        self.to_dense().iter().map(|x| x.to_f32()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShift;
+
+    fn random_pruned(rows: usize, cols: usize, sparsity: f64, seed: u64) -> Vec<f32> {
+        let mut g = XorShift::new(seed);
+        (0..rows * cols)
+            .map(|_| {
+                if g.next_f64() < sparsity {
+                    0.0
+                } else {
+                    // avoid values that round to 0 in bf16
+                    g.next_normal() + 3.0
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn roundtrip_bf16_aligned() {
+        let (rows, cols) = (64, 32);
+        let w = random_pruned(rows, cols, 0.5, 1);
+        let sp = SparseTensor::pack_f32(&w, rows, cols);
+        let back = sp.to_dense_f32();
+        let expect: Vec<f32> = w.iter().map(|&x| Bf16::from_f32(x).to_f32()).collect();
+        assert_eq!(back, expect);
+    }
+
+    #[test]
+    fn roundtrip_bf16_unaligned_pads() {
+        // 50x37: not multiples of 32/16 — padding must be transparent.
+        let (rows, cols) = (50, 37);
+        let w = random_pruned(rows, cols, 0.3, 2);
+        let sp = SparseTensor::pack_f32(&w, rows, cols);
+        assert_eq!(sp.rows_padded % 32, 0);
+        assert_eq!(sp.cols_padded % 16, 0);
+        let back = sp.to_dense_f32();
+        let expect: Vec<f32> = w.iter().map(|&x| Bf16::from_f32(x).to_f32()).collect();
+        assert_eq!(back, expect);
+    }
+
+    #[test]
+    fn roundtrip_int8() {
+        let mut g = XorShift::new(3);
+        let (rows, cols) = (128, 48);
+        let w: Vec<i8> = (0..rows * cols)
+            .map(|_| {
+                if g.next_f64() < 0.6 {
+                    0
+                } else {
+                    (g.below(253) as i32 - 126) as i8
+                }
+            })
+            .collect();
+        let sp: SparseTensor<i8> = SparseTensor::pack(&w, rows, cols);
+        assert_eq!(sp.to_dense(), w);
+        assert_eq!(sp.order.row_elems, 64);
+        assert_eq!(sp.order.k_per_tile, 64);
+    }
+
+    #[test]
+    fn sparsity_and_nnz_accounting() {
+        let (rows, cols) = (32, 16);
+        let mut w = vec![0.0f32; rows * cols];
+        w[0] = 1.0;
+        w[5 * cols + 3] = 2.0;
+        let sp = SparseTensor::pack_f32(&w, rows, cols);
+        assert_eq!(sp.nnz(), 2);
+        let expect = 1.0 - 2.0 / (rows * cols) as f64;
+        assert!((sp.sparsity() - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bytes_sparse_beats_dense_at_high_sparsity() {
+        let (rows, cols) = (4096, 1024);
+        let w = random_pruned(rows, cols, 0.7, 4);
+        let sp = SparseTensor::pack_f32(&w, rows, cols);
+        // bitmap = 1/16 of dense bf16; values ≈ 0.3 dense → ~0.36 total
+        assert!(sp.bytes_sparse() < sp.bytes_dense() * 2 / 5);
+    }
+
+    #[test]
+    fn bytes_sparse_exceeds_dense_when_dense_matrix() {
+        let (rows, cols) = (64, 16);
+        let w = vec![1.0f32; rows * cols];
+        let sp = SparseTensor::pack_f32(&w, rows, cols);
+        // 1 bit/element bitmap overhead: 17/16 of dense
+        assert!(sp.bytes_sparse() > sp.bytes_dense());
+    }
+
+    #[test]
+    fn tile_stream_is_contiguous_per_column_block() {
+        let (rows, cols) = (96, 64);
+        let w = random_pruned(rows, cols, 0.5, 5);
+        let sp = SparseTensor::pack_f32(&w, rows, cols);
+        assert_eq!(sp.num_tiles(), (96 / 32) * (64 / 16));
+        // prefix array is monotone and consistent with per-tile values
+        for t in 0..sp.num_tiles() {
+            let (vals, start) = sp.tile_values(t);
+            assert_eq!(start, sp.tile_nnz_prefix[t] as usize);
+            let meta_pop: u32 = sp.tile_metadata(t).iter().map(|w| w.count_ones()).sum();
+            assert_eq!(meta_pop as usize, vals.len());
+        }
+        assert_eq!(*sp.tile_nnz_prefix.last().unwrap() as usize, sp.nnz());
+    }
+
+    #[test]
+    fn vnni_interleave_positions() {
+        // Element (k=1, n=0) must land in tile row 0, col 1 (pair of k0,k1).
+        let (rows, cols) = (32, 16);
+        let mut w = vec![0.0f32; rows * cols];
+        w[cols] = 7.0; // k=1, n=0
+        let sp = SparseTensor::pack_f32(&w, rows, cols);
+        assert_eq!(sp.tile_metadata(0)[0], 0b10); // row 0, bit 1
+        assert_eq!(sp.tile_pos_to_kn(0, 0, 0, 1), Some((1, 0)));
+    }
+
+    #[test]
+    fn empty_matrix_edge() {
+        let sp = SparseTensor::pack_f32(&[], 0, 0);
+        assert_eq!(sp.nnz(), 0);
+        assert_eq!(sp.num_tiles(), 0);
+        assert_eq!(sp.sparsity(), 0.0);
+        assert!(sp.to_dense_f32().is_empty());
+    }
+}

@@ -1,0 +1,15 @@
+//! The paper's unstructured-sparsity weight format and tooling.
+//!
+//! * [`format`] — the bitmap (`weight_metadata`) + packed non-zeros
+//!   (`weight_values`) representation of Figure 6, with tile-ordered
+//!   layouts for the AMX kernels.
+//! * [`prune`] — magnitude pruning (weights and KV cache, §6.1).
+//! * [`partition`] — the `weight_value_index` per-thread start table of
+//!   Figure 9, precomputed at model-load time.
+
+pub mod format;
+pub mod prune;
+pub mod partition;
+
+pub use format::{SparseTensor, TileOrder};
+pub use partition::ThreadPartition;

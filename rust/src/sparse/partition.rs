@@ -1,0 +1,163 @@
+//! Thread partitioning of the sparse stream (paper Figure 9).
+//!
+//! Unstructured sparsity means a worker cannot compute where its share of
+//! `weight_values` begins without scanning every preceding bitmap word.
+//! The paper's fix: at model-load time, precompute `weight_value_index` —
+//! the starting offset into `weight_values` for each thread — and fix the
+//! thread count for the lifetime of the packed model. This module builds
+//! that table from a [`SparseTensor`]'s tile-nnz prefix sums.
+
+use super::format::{Element, SparseTensor};
+use crate::util::threadpool::partition_ranges;
+
+/// Per-thread work assignment over a sparse weight stream.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ThreadPartition {
+    /// Number of threads the table was built for (fixed thereafter).
+    pub threads: usize,
+    /// Column-block range `[start, end)` owned by each thread.
+    pub col_block_ranges: Vec<(usize, usize)>,
+    /// `weight_value_index[t]`: offset into `weight_values` where thread
+    /// `t` begins consuming. One extra tail entry = total nnz.
+    pub weight_value_index: Vec<usize>,
+}
+
+impl ThreadPartition {
+    /// Build the partition for `threads` workers over `sp`. Column blocks
+    /// (16 neurons each) are split contiguously and as evenly as possible;
+    /// each thread's value offset is read from the tile prefix table —
+    /// O(threads), not O(nnz), at load time (the prefix table itself is
+    /// built during packing).
+    pub fn build<T: Element>(sp: &SparseTensor<T>, threads: usize) -> ThreadPartition {
+        let threads = threads.max(1);
+        let ranges = partition_ranges(sp.col_blocks(), threads);
+        let k_chunks = sp.k_chunks();
+        let mut col_block_ranges = Vec::with_capacity(threads);
+        let mut weight_value_index = Vec::with_capacity(threads + 1);
+        for r in &ranges {
+            col_block_ranges.push((r.start, r.end));
+            let first_tile = r.start * k_chunks;
+            weight_value_index.push(sp.tile_nnz_prefix[first_tile] as usize);
+        }
+        weight_value_index.push(sp.nnz());
+        ThreadPartition {
+            threads,
+            col_block_ranges,
+            weight_value_index,
+        }
+    }
+
+    /// Values consumed by thread `t`.
+    pub fn values_for(&self, t: usize) -> std::ops::Range<usize> {
+        self.weight_value_index[t]..self.weight_value_index[t + 1]
+    }
+
+    /// Verify the table against a full scan of the stream — the invariant
+    /// the paper's correctness depends on. Used by tests and debug builds.
+    pub fn validate<T: Element>(&self, sp: &SparseTensor<T>) -> Result<(), String> {
+        let k_chunks = sp.k_chunks();
+        let mut running = 0usize;
+        let mut t = 0usize;
+        for cb in 0..sp.col_blocks() {
+            while t < self.threads && self.col_block_ranges[t].0 == cb {
+                if self.weight_value_index[t] != running {
+                    return Err(format!(
+                        "thread {t}: index {} != scanned {running}",
+                        self.weight_value_index[t]
+                    ));
+                }
+                t += 1;
+            }
+            for kc in 0..k_chunks {
+                let tile = sp.tile_index(cb, kc);
+                running += sp
+                    .tile_metadata(tile)
+                    .iter()
+                    .map(|w| w.count_ones() as usize)
+                    .sum::<usize>();
+            }
+        }
+        // threads assigned empty ranges at the tail
+        while t < self.threads {
+            if self.weight_value_index[t] != running {
+                return Err(format!("tail thread {t} index mismatch"));
+            }
+            t += 1;
+        }
+        if *self.weight_value_index.last().unwrap() != sp.nnz() {
+            return Err("tail sentinel != nnz".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::prune::magnitude_prune;
+    use crate::util::XorShift;
+
+    fn sample(rows: usize, cols: usize, sparsity: f64, seed: u64) -> SparseTensor {
+        let mut g = XorShift::new(seed);
+        let w: Vec<f32> = (0..rows * cols).map(|_| g.next_normal() + 2.0).collect();
+        let w = magnitude_prune(&w, sparsity);
+        SparseTensor::pack_f32(&w, rows, cols)
+    }
+
+    #[test]
+    fn offsets_match_full_scan() {
+        let sp = sample(128, 256, 0.5, 1);
+        for threads in [1, 2, 3, 8, 16, 32] {
+            let part = ThreadPartition::build(&sp, threads);
+            part.validate(&sp).expect("partition invariant");
+        }
+    }
+
+    #[test]
+    fn ranges_cover_all_values_disjointly() {
+        let sp = sample(64, 320, 0.7, 2);
+        let part = ThreadPartition::build(&sp, 5);
+        let mut covered = 0;
+        for t in 0..5 {
+            let r = part.values_for(t);
+            assert_eq!(r.start, covered);
+            covered = r.end;
+        }
+        assert_eq!(covered, sp.nnz());
+    }
+
+    #[test]
+    fn more_threads_than_blocks() {
+        let sp = sample(32, 32, 0.5, 3); // only 2 column blocks
+        let part = ThreadPartition::build(&sp, 8);
+        part.validate(&sp).expect("valid with idle threads");
+        let nonempty = part
+            .col_block_ranges
+            .iter()
+            .filter(|(s, e)| e > s)
+            .count();
+        assert_eq!(nonempty, 2);
+    }
+
+    #[test]
+    fn dense_matrix_partitions_by_element_count() {
+        let w = vec![1.0f32; 64 * 64];
+        let sp = SparseTensor::pack_f32(&w, 64, 64);
+        let part = ThreadPartition::build(&sp, 4);
+        // 4 column blocks, 1 per thread, each 64*16 values
+        for t in 0..4 {
+            assert_eq!(part.values_for(t).len(), 64 * 16);
+        }
+    }
+
+    #[test]
+    fn rebuild_with_different_thread_count_changes_table() {
+        // the paper: changing thread count requires recomputation
+        let sp = sample(96, 96, 0.4, 4);
+        let p2 = ThreadPartition::build(&sp, 2);
+        let p3 = ThreadPartition::build(&sp, 3);
+        assert_ne!(p2.weight_value_index, p3.weight_value_index);
+        p2.validate(&sp).unwrap();
+        p3.validate(&sp).unwrap();
+    }
+}

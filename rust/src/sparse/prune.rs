@@ -1,0 +1,149 @@
+//! Magnitude pruning for weights and the KV cache (paper §6.1).
+//!
+//! The paper prunes by magnitude: within a tensor (per layer for KV), the
+//! smallest-|x| fraction is zeroed. Pruning a *sorted-threshold* fraction
+//! exactly matches the paper's "values with the lowest magnitudes are
+//! dropped within each layer".
+
+/// Zero out the smallest-magnitude `sparsity` fraction of `w` (returns a
+/// new vector). `sparsity` is clamped to [0, 1].
+pub fn magnitude_prune(w: &[f32], sparsity: f64) -> Vec<f32> {
+    let mut out = w.to_vec();
+    magnitude_prune_inplace(&mut out, sparsity);
+    out
+}
+
+/// In-place variant of [`magnitude_prune`].
+pub fn magnitude_prune_inplace(w: &mut [f32], sparsity: f64) {
+    let sparsity = sparsity.clamp(0.0, 1.0);
+    let k = (w.len() as f64 * sparsity).round() as usize;
+    if k == 0 {
+        return;
+    }
+    if k >= w.len() {
+        w.fill(0.0);
+        return;
+    }
+    let thresh = kth_magnitude(w, k);
+    // Zero strictly-below-threshold first, then zero ties until exactly k
+    // elements are pruned (deterministic: earliest ties first).
+    let mut pruned = 0;
+    for x in w.iter_mut() {
+        if x.abs() < thresh {
+            *x = 0.0;
+            pruned += 1;
+        }
+    }
+    if pruned < k {
+        for x in w.iter_mut() {
+            if pruned == k {
+                break;
+            }
+            if *x != 0.0 && x.abs() == thresh {
+                *x = 0.0;
+                pruned += 1;
+            }
+        }
+    }
+}
+
+/// The k-th smallest |x| (1-based: k=1 gives the smallest). Uses
+/// quickselect on a scratch copy — O(n) expected.
+pub fn kth_magnitude(w: &[f32], k: usize) -> f32 {
+    assert!(k >= 1 && k <= w.len());
+    let mut mags: Vec<f32> = w.iter().map(|x| x.abs()).collect();
+    let (_, kth, _) = mags.select_nth_unstable_by(k - 1, |a, b| {
+        a.partial_cmp(b).expect("NaN magnitude")
+    });
+    *kth
+}
+
+/// Observed sparsity of a tensor.
+pub fn sparsity_of(w: &[f32]) -> f64 {
+    if w.is_empty() {
+        return 0.0;
+    }
+    w.iter().filter(|&&x| x == 0.0).count() as f64 / w.len() as f64
+}
+
+/// Per-group magnitude pruning: prune each contiguous group of
+/// `group_len` elements independently (used per-head / per-layer for the
+/// KV cache so one head's outliers don't shield another head's values).
+pub fn magnitude_prune_grouped(w: &[f32], group_len: usize, sparsity: f64) -> Vec<f32> {
+    assert!(group_len > 0);
+    let mut out = Vec::with_capacity(w.len());
+    for chunk in w.chunks(group_len) {
+        out.extend(magnitude_prune(chunk, sparsity));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShift;
+
+    #[test]
+    fn prunes_exact_fraction() {
+        let mut g = XorShift::new(1);
+        let w: Vec<f32> = (0..1000).map(|_| g.next_normal()).collect();
+        for s in [0.0, 0.1, 0.5, 0.9, 1.0] {
+            let p = magnitude_prune(&w, s);
+            let zeros = p.iter().filter(|&&x| x == 0.0).count();
+            assert_eq!(zeros, (1000.0 * s).round() as usize, "sparsity {s}");
+        }
+    }
+
+    #[test]
+    fn keeps_largest_magnitudes() {
+        let w = vec![0.1, -5.0, 0.2, 3.0, -0.05, 1.0];
+        let p = magnitude_prune(&w, 0.5);
+        assert_eq!(p, vec![0.0, -5.0, 0.0, 3.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn handles_ties_deterministically() {
+        let w = vec![1.0f32; 8];
+        let p = magnitude_prune(&w, 0.5);
+        let zeros = p.iter().filter(|&&x| x == 0.0).count();
+        assert_eq!(zeros, 4);
+        // earliest ties pruned first
+        assert_eq!(&p[..4], &[0.0; 4]);
+        assert_eq!(&p[4..], &[1.0; 4]);
+    }
+
+    #[test]
+    fn grouped_prunes_each_group() {
+        // group 1 has huge values, group 2 tiny — global pruning would wipe
+        // group 2 entirely; grouped pruning keeps half of each.
+        let w = vec![100.0, 200.0, 300.0, 400.0, 0.01, 0.02, 0.03, 0.04];
+        let p = magnitude_prune_grouped(&w, 4, 0.5);
+        assert_eq!(
+            p,
+            vec![0.0, 0.0, 300.0, 400.0, 0.0, 0.0, 0.03, 0.04]
+        );
+    }
+
+    #[test]
+    fn kth_magnitude_matches_sort() {
+        let mut g = XorShift::new(2);
+        let w: Vec<f32> = (0..257).map(|_| g.next_normal()).collect();
+        let mut sorted: Vec<f32> = w.iter().map(|x| x.abs()).collect();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for k in [1, 7, 128, 257] {
+            assert_eq!(kth_magnitude(&w, k), sorted[k - 1]);
+        }
+    }
+
+    #[test]
+    fn sparsity_of_reports() {
+        assert_eq!(sparsity_of(&[0.0, 1.0, 0.0, 2.0]), 0.5);
+        assert_eq!(sparsity_of(&[]), 0.0);
+    }
+
+    #[test]
+    fn full_prune_zeroes_everything() {
+        let w = vec![1.0, 2.0, 3.0];
+        assert_eq!(magnitude_prune(&w, 1.0), vec![0.0; 3]);
+    }
+}

@@ -1,0 +1,145 @@
+//! Bfloat16 (BF16) numerics.
+//!
+//! AMX `tdpbf16ps` consumes BF16 operands and accumulates in FP32; the
+//! paper stores weights, inputs, and the KV cache in BF16. This module is
+//! the software model of that datatype: truncation from f32 (with
+//! round-to-nearest-even, matching AVX-512 `vcvtneps2bf16`) and exact
+//! widening back to f32.
+
+/// A bfloat16 value: the top 16 bits of an IEEE-754 f32.
+#[derive(Clone, Copy, PartialEq, Default)]
+pub struct Bf16(pub u16);
+
+impl Bf16 {
+    pub const ZERO: Bf16 = Bf16(0);
+    pub const ONE: Bf16 = Bf16(0x3F80);
+
+    /// Convert from f32 with round-to-nearest-even (the hardware behaviour
+    /// of `vcvtneps2bf16`; plain truncation loses ~0.5 bit of accuracy).
+    #[inline]
+    pub fn from_f32(x: f32) -> Self {
+        let bits = x.to_bits();
+        if x.is_nan() {
+            // quiet NaN, preserve sign
+            return Bf16(((bits >> 16) as u16) | 0x0040);
+        }
+        let round_bit = 0x0000_8000u32;
+        let lsb = (bits >> 16) & 1;
+        let rounded = bits.wrapping_add(0x0000_7FFF + lsb);
+        let _ = round_bit;
+        Bf16((rounded >> 16) as u16)
+    }
+
+    /// Exact widening conversion back to f32.
+    #[inline]
+    pub fn to_f32(self) -> f32 {
+        f32::from_bits((self.0 as u32) << 16)
+    }
+
+    /// Reinterpret raw bits.
+    #[inline]
+    pub fn from_bits(b: u16) -> Self {
+        Bf16(b)
+    }
+
+    #[inline]
+    pub fn to_bits(self) -> u16 {
+        self.0
+    }
+
+    #[inline]
+    pub fn is_zero(self) -> bool {
+        self.0 & 0x7FFF == 0
+    }
+}
+
+impl std::fmt::Debug for Bf16 {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}bf", self.to_f32())
+    }
+}
+
+impl From<f32> for Bf16 {
+    fn from(x: f32) -> Self {
+        Bf16::from_f32(x)
+    }
+}
+
+impl From<Bf16> for f32 {
+    fn from(x: Bf16) -> f32 {
+        x.to_f32()
+    }
+}
+
+/// Convert a slice of f32 to BF16 (used when packing weights).
+pub fn vec_from_f32(xs: &[f32]) -> Vec<Bf16> {
+    xs.iter().map(|&x| Bf16::from_f32(x)).collect()
+}
+
+/// Convert a slice of BF16 back to f32.
+pub fn vec_to_f32(xs: &[Bf16]) -> Vec<f32> {
+    xs.iter().map(|x| x.to_f32()).collect()
+}
+
+/// Round a f32 through BF16 precision (simulates storing + reloading).
+#[inline]
+pub fn round_f32(x: f32) -> f32 {
+    Bf16::from_f32(x).to_f32()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_values_roundtrip() {
+        for &x in &[0.0f32, 1.0, -1.0, 0.5, 2.0, -3.25, 65280.0] {
+            assert_eq!(Bf16::from_f32(x).to_f32(), x, "{x} should be exact in bf16");
+        }
+    }
+
+    #[test]
+    fn rounding_is_nearest_even() {
+        // 1.0 + 2^-9 is exactly halfway between two bf16 values around 1.0;
+        // nearest-even rounds down to 1.0 (even mantissa).
+        let halfway = f32::from_bits(0x3F80_8000);
+        assert_eq!(Bf16::from_f32(halfway).to_f32(), 1.0);
+        // Just above halfway rounds up.
+        let above = f32::from_bits(0x3F80_8001);
+        assert_eq!(Bf16::from_f32(above).to_f32(), f32::from_bits(0x3F81_0000));
+    }
+
+    #[test]
+    fn relative_error_bounded() {
+        let mut g = crate::util::XorShift::new(123);
+        for _ in 0..10_000 {
+            let x = (g.next_f32() - 0.5) * 100.0;
+            if x == 0.0 {
+                continue;
+            }
+            let y = round_f32(x);
+            let rel = ((x - y) / x).abs();
+            assert!(rel <= 1.0 / 256.0 + 1e-7, "x={x} y={y} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn nan_and_inf() {
+        assert!(Bf16::from_f32(f32::NAN).to_f32().is_nan());
+        assert_eq!(Bf16::from_f32(f32::INFINITY).to_f32(), f32::INFINITY);
+        assert_eq!(Bf16::from_f32(f32::NEG_INFINITY).to_f32(), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn is_zero_covers_negative_zero() {
+        assert!(Bf16::from_f32(0.0).is_zero());
+        assert!(Bf16::from_f32(-0.0).is_zero());
+        assert!(!Bf16::from_f32(1e-3).is_zero());
+    }
+
+    #[test]
+    fn vec_roundtrip() {
+        let xs = vec![0.25f32, -8.0, 3.0, 0.0];
+        assert_eq!(vec_to_f32(&vec_from_f32(&xs)), xs);
+    }
+}

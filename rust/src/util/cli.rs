@@ -1,0 +1,149 @@
+//! Minimal CLI argument parser (clap is not vendored offline).
+//!
+//! Supports `command --flag value --bool-flag positional` style used by
+//! the `sparamx` binary and the examples.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: a subcommand, `--key value` options, bare `--switch`
+/// flags, and positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub command: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = args.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().expect("peeked");
+                    out.options.insert(name.to_string(), v);
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else if out.command.is_none() && out.positional.is_empty() {
+                out.command = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// String option with default.
+    pub fn get(&self, key: &str, default: &str) -> String {
+        self.options
+            .get(key)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    /// Typed option with default; panics with a clear message on a
+    /// malformed value (CLI misuse should fail loudly).
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> T
+    where
+        T::Err: std::fmt::Debug,
+    {
+        match self.options.get(key) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|e| panic!("--{key}={v}: invalid value: {e:?}")),
+        }
+    }
+
+    /// Whether a bare `--switch` was passed.
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    /// Comma-separated list option, e.g. `--cores 8,16,32`.
+    pub fn get_list<T: std::str::FromStr>(&self, key: &str, default: &[T]) -> Vec<T>
+    where
+        T: Clone,
+        T::Err: std::fmt::Debug,
+    {
+        match self.options.get(key) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .unwrap_or_else(|e| panic!("--{key}: bad item {s:?}: {e:?}"))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("serve --port 7070 --model artifacts --verbose");
+        assert_eq!(a.command.as_deref(), Some("serve"));
+        assert_eq!(a.get("port", "0"), "7070");
+        assert_eq!(a.get("model", ""), "artifacts");
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse("bench --sparsity=0.5");
+        assert_eq!(a.get_parse::<f64>("sparsity", 0.0), 0.5);
+    }
+
+    #[test]
+    fn typed_defaults() {
+        let a = parse("run");
+        assert_eq!(a.get_parse::<u32>("iters", 10), 10);
+    }
+
+    #[test]
+    fn list_option() {
+        let a = parse("sweep --cores 8,16,32");
+        assert_eq!(a.get_list::<usize>("cores", &[1]), vec![8, 16, 32]);
+        assert_eq!(a.get_list::<usize>("absent", &[4]), vec![4]);
+    }
+
+    #[test]
+    fn positionals_after_command() {
+        let a = parse("generate hello world");
+        assert_eq!(a.command.as_deref(), Some("generate"));
+        assert_eq!(a.positional, vec!["hello", "world"]);
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid value")]
+    fn malformed_typed_option_panics() {
+        let a = parse("x --iters abc");
+        let _ = a.get_parse::<u32>("iters", 1);
+    }
+}

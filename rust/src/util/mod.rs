@@ -1,0 +1,17 @@
+//! Shared substrates: PRNG, bf16 numerics, statistics, a scoped thread
+//! pool, a tiny CLI argument parser, and leveled logging.
+//!
+//! These exist because the build is fully offline: the only vendored crates
+//! are `xla` and `anyhow`, so the usual ecosystem pieces (rand, half,
+//! rayon, clap, criterion) are reimplemented here at the scale this
+//! project needs.
+
+pub mod prng;
+pub mod bf16;
+pub mod stats;
+pub mod threadpool;
+pub mod cli;
+pub mod log;
+
+pub use bf16::Bf16;
+pub use prng::XorShift;

@@ -1,0 +1,159 @@
+//! A small fixed-size thread pool with scoped parallel-for.
+//!
+//! The paper's kernels parallelize over output columns with a *fixed*
+//! thread count chosen at model-load time (the `weight_value_index`
+//! partitioning bakes the count in). This pool mirrors that contract: the
+//! worker count is fixed at construction, and `parallel_for` dispatches
+//! index ranges to the workers.
+//!
+//! rayon is not vendored in this offline image, so this is a minimal
+//! std-only implementation built on `std::thread::scope`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Fixed-size pool. Workers are spawned per `parallel_for` call using
+/// scoped threads, which keeps the API simple and borrows safe; on the
+/// 1-core CI container thread reuse would not be measurable anyway, and
+/// the simulated-core experiments never spawn real threads.
+#[derive(Clone, Debug)]
+pub struct ThreadPool {
+    threads: usize,
+}
+
+impl ThreadPool {
+    /// Create a pool with `threads` workers (minimum 1).
+    pub fn new(threads: usize) -> Self {
+        ThreadPool {
+            threads: threads.max(1),
+        }
+    }
+
+    /// Number of worker threads.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(i)` for every `i in 0..n`, work-stealing via an atomic
+    /// cursor. `f` must be `Sync` because all workers share it.
+    pub fn parallel_for<F>(&self, n: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        if n == 0 {
+            return;
+        }
+        if self.threads == 1 || n == 1 {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+        let cursor = Arc::new(AtomicUsize::new(0));
+        let workers = self.threads.min(n);
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                let cursor = Arc::clone(&cursor);
+                let f = &f;
+                s.spawn(move || loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    f(i);
+                });
+            }
+        });
+    }
+
+    /// Map `f` over `0..n` collecting results in order.
+    pub fn parallel_map<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send + Default + Clone,
+        F: Fn(usize) -> T + Sync,
+    {
+        let mut out = vec![T::default(); n];
+        {
+            let slots: Vec<std::sync::Mutex<&mut T>> =
+                out.iter_mut().map(std::sync::Mutex::new).collect();
+            self.parallel_for(n, |i| {
+                **slots[i].lock().expect("slot lock") = f(i);
+            });
+        }
+        out
+    }
+}
+
+/// Partition `n` items into `parts` contiguous ranges, sizes differing by
+/// at most one. Used both by the pool and by the sparse-format thread
+/// partitioner (Figure 9 of the paper).
+pub fn partition_ranges(n: usize, parts: usize) -> Vec<std::ops::Range<usize>> {
+    let parts = parts.max(1);
+    let base = n / parts;
+    let extra = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for p in 0..parts {
+        let len = base + usize::from(p < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    #[test]
+    fn parallel_for_visits_every_index_once() {
+        let pool = ThreadPool::new(4);
+        let hits: Vec<AtomicU64> = (0..100).map(|_| AtomicU64::new(0)).collect();
+        pool.parallel_for(100, |i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let pool = ThreadPool::new(3);
+        let v = pool.parallel_map(50, |i| i * i);
+        assert_eq!(v, (0..50).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_thread_pool_works() {
+        let pool = ThreadPool::new(1);
+        let v = pool.parallel_map(10, |i| i + 1);
+        assert_eq!(v[9], 10);
+    }
+
+    #[test]
+    fn zero_items_is_noop() {
+        ThreadPool::new(2).parallel_for(0, |_| panic!("should not run"));
+    }
+
+    #[test]
+    fn partition_ranges_cover_exactly() {
+        for n in [0usize, 1, 7, 16, 100] {
+            for parts in [1usize, 2, 3, 8, 32] {
+                let rs = partition_ranges(n, parts);
+                assert_eq!(rs.len(), parts);
+                let total: usize = rs.iter().map(|r| r.len()).sum();
+                assert_eq!(total, n);
+                // contiguous and ordered
+                let mut pos = 0;
+                for r in &rs {
+                    assert_eq!(r.start, pos);
+                    pos = r.end;
+                }
+                // balanced within 1
+                let lens: Vec<usize> = rs.iter().map(|r| r.len()).collect();
+                let (mn, mx) = (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+                assert!(mx - mn <= 1);
+            }
+        }
+    }
+}

@@ -1,0 +1,86 @@
+//! Live TCP serving test: engine + server + client over a real socket,
+//! including malformed-request and backpressure failure injection.
+//! Requires artifacts (skips otherwise).
+
+use sparamx::cfg::RuntimeConfig;
+use sparamx::coordinator::batcher::AdmissionQueue;
+use sparamx::coordinator::engine::Engine;
+use sparamx::coordinator::server;
+use sparamx::runtime::artifact::Bundle;
+use sparamx::runtime::executor::Runtime;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+fn artifacts_dir() -> Option<String> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json")
+        .exists()
+        .then(|| dir.to_string_lossy().into_owned())
+}
+
+#[test]
+fn tcp_round_trip_with_failure_injection() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    };
+    let cfg = RuntimeConfig {
+        artifacts_dir: dir,
+        weight_sparsity: 0.0,
+        max_new_tokens: 6,
+        ..Default::default()
+    };
+    let bundle = Bundle::load(&cfg.artifacts_dir).expect("bundle");
+    let rt = Runtime::cpu().expect("client");
+    let mut engine = Engine::load(&rt, &bundle, cfg).expect("engine");
+    let queue = Arc::new(AdmissionQueue::new(16));
+
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().unwrap();
+    let q_srv = Arc::clone(&queue);
+    std::thread::spawn(move || server::serve(listener, q_srv, 6));
+
+    // The PJRT executable is not Send, so the engine stays on this
+    // thread; the TCP client runs on a helper thread and closes the
+    // queue when it is done, which lets `engine.run` drain and return.
+    let q_client = Arc::clone(&queue);
+    let client = std::thread::spawn(move || {
+        let mut stream = TcpStream::connect(addr).expect("connect");
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+
+        // failure injection: malformed JSON → error response, connection lives
+        stream.write_all(b"this is not json\n").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("error"), "malformed request must error: {line}");
+
+        // failure injection: missing prompt
+        line.clear();
+        stream.write_all(b"{\"max_new_tokens\": 3}\n").unwrap();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("error"));
+
+        // happy path: two sequential generations on one connection
+        for prompt in ["the cat ", "a dog "] {
+            line.clear();
+            let req = format!("{{\"prompt\": \"{prompt}\", \"max_new_tokens\": 6}}\n");
+            stream.write_all(req.as_bytes()).unwrap();
+            reader.read_line(&mut line).unwrap();
+            let v = sparamx::cfg::Json::parse(line.trim()).expect("json response");
+            assert_eq!(v.get("tokens").and_then(|t| t.as_usize()), Some(6), "{line}");
+            assert!(v.get("latency_ms").and_then(|t| t.as_f64()).unwrap() > 0.0);
+        }
+        q_client.close();
+    });
+
+    engine.run(&queue).expect("engine");
+    client.join().expect("client thread");
+    assert_eq!(
+        engine
+            .metrics
+            .requests_completed
+            .load(std::sync::atomic::Ordering::Relaxed),
+        2
+    );
+}

