@@ -8,12 +8,15 @@
 //! ```
 
 use sparamx::amx::EventCounters;
+use sparamx::backend::{BackendRegistry, CpuCaps, Dtype, GemmShape};
 use sparamx::kvcache::attention::{attend_dense_ref, attend_sparse};
 use sparamx::kvcache::cache::HeadCache;
 use sparamx::perf::{cost::KernelCost, Machine};
+use sparamx::util::cli::Args;
 use sparamx::util::XorShift;
 
 fn main() {
+    let args = Args::from_env();
     // one kv-head of a Llama-scale model at 16K context, scaled-down
     // functional check at 2K (the full 16K runs through the analytic
     // model; the numerics are context-length independent)
@@ -31,11 +34,17 @@ fn main() {
         2 * ctx * hd * 2
     );
 
+    // resolve the attention backend (the static segment's QKᵀ / R·V are
+    // sparse GEMMs of shape head_dim × ctx)
+    let registry = BackendRegistry::with_caps(CpuCaps::modeled());
+    let sel = registry.resolve(args.backend(), GemmShape::new(1, hd, ctx), 0.4, Dtype::Bf16);
+    println!("attention backend: {}", sel.describe());
+
     // decode 4 tokens into the dynamic tail
     let mut ctr = EventCounters::default();
     let mut out = Vec::new();
     for _ in 0..4 {
-        out = attend_sparse(&hc, &q, &mut ctr);
+        out = attend_sparse(&hc, &q, &sel.backend, &mut ctr);
         let new_k = g.normal_vec(hd, 1.0);
         let new_v = g.normal_vec(hd, 1.0);
         hc.append(&new_k, &new_v);

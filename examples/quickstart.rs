@@ -1,25 +1,33 @@
-//! Quickstart: prune → pack → run the sparse kernel → verify vs dense.
+//! Quickstart: prune → pack → dispatch through the backend layer →
+//! verify vs dense.
 //!
 //! ```sh
-//! cargo run --release --offline --example quickstart
+//! cargo run --release --offline --example quickstart -- --backend auto
 //! ```
+//!
+//! `--backend {auto,amx,avx,ref}` pins the kernel backend; `auto` lets
+//! the capability-probed registry pick dense-vs-sparse per the cost
+//! model (override detection with `SPARAMX_CAPS=all|none|...`).
 
-use sparamx::amx::kernels::{
-    dense_amx_gemm_bf16, ref_gemm_bf16, sparse_amx_gemm_bf16, DenseWeights, GemmCounters,
-};
+use sparamx::amx::kernels::{DenseWeights, GemmCounters};
+use sparamx::backend::{BackendRegistry, Dtype, GemmShape, RefBackend};
 use sparamx::perf::{cost::KernelCost, Machine};
 use sparamx::sparse::format::SparseTensor;
 use sparamx::sparse::prune::magnitude_prune;
+use sparamx::util::cli::Args;
 use sparamx::util::XorShift;
 
 fn main() {
+    let args = Args::from_env();
+
     // 1. a dense weight matrix (say, one projection of a small model)
     let (k, n) = (256usize, 512usize);
     let mut rng = XorShift::new(7);
     let dense = rng.normal_vec(k * n, 0.5);
 
     // 2. magnitude-prune to 50% unstructured sparsity (paper §6.1)
-    let pruned = magnitude_prune(&dense, 0.5);
+    let sparsity = 0.5;
+    let pruned = magnitude_prune(&dense, sparsity);
 
     // 3. pack into the SparAMX bitmap + values format (paper Fig 6)
     let sp = SparseTensor::pack_f32(&pruned, k, n);
@@ -32,16 +40,36 @@ fn main() {
         sp.bytes_dense() as f64 / sp.bytes_sparse() as f64
     );
 
-    // 4. run the simulated AMX sparse kernel and the dense kernel
+    // 4. resolve the backend and run both kernel classes through it
+    // (modeled caps: full Sapphire Rapids unless SPARAMX_CAPS overrides
+    // — the simulated kernels run on any host)
+    let registry = BackendRegistry::with_caps(sparamx::backend::CpuCaps::modeled());
+    let shape = GemmShape::new(1, k, n);
+    let sel = registry.resolve(args.backend(), shape, sparsity, Dtype::Bf16);
+    if sel.backend.kind() == sparamx::backend::BackendKind::Reference {
+        println!(
+            "backend: ref (caps [{}], reference oracle — no modeled time)",
+            registry.caps().describe()
+        );
+    } else {
+        println!(
+            "backend: {} (caps [{}], predicted {:.1} µs)",
+            sel.describe(),
+            registry.caps().describe(),
+            sel.predicted_s * 1e6
+        );
+    }
+    let backend = &sel.backend;
+
     let x = rng.normal_vec(k, 1.0);
     let mut sparse_ctr = GemmCounters::default();
-    let y_sparse = sparse_amx_gemm_bf16(&x, 1, &sp, &mut sparse_ctr);
+    let y_sparse = backend.sparse_gemm_bf16(&x, 1, &sp, &mut sparse_ctr);
     let dw = DenseWeights::pack_f32(&pruned, k, n);
     let mut dense_ctr = GemmCounters::default();
-    let y_dense = dense_amx_gemm_bf16(&x, 1, &dw, &mut dense_ctr);
+    let y_dense = backend.gemm_bf16(&x, 1, &dw, &mut dense_ctr);
 
-    // 5. verify numerics against the reference GEMM
-    let want = ref_gemm_bf16(&x, 1, &pruned, k, n);
+    // 5. verify numerics against the reference oracle
+    let want = RefBackend::matmul_f32(&x, 1, &pruned, k, n);
     let tol = 0.02 * (k as f32).sqrt();
     for i in 0..n {
         assert!((y_sparse[i] - want[i]).abs() <= tol + want[i].abs() * 0.02);
@@ -50,19 +78,23 @@ fn main() {
     println!("numerics: sparse == dense == reference ✓");
 
     // 6. what the hardware would see (the paper's core claim)
-    println!(
-        "weight bytes streamed: dense {} vs sparse {} ({:.2}x less traffic)",
-        dense_ctr.weight_stream_bytes,
-        sparse_ctr.weight_stream_bytes,
-        dense_ctr.weight_stream_bytes as f64 / sparse_ctr.weight_stream_bytes as f64
-    );
-    let m = Machine::sapphire_rapids(32);
-    let td = KernelCost::from_counters(&dense_ctr, &m);
-    let ts = KernelCost::from_counters(&sparse_ctr, &m);
-    println!(
-        "modeled on 32-core Sapphire Rapids: dense {:.1} µs, sparse {:.1} µs → {:.2}x",
-        td.time * 1e6,
-        ts.time * 1e6,
-        td.time / ts.time
-    );
+    if sparse_ctr.weight_stream_bytes > 0 && dense_ctr.weight_stream_bytes > 0 {
+        println!(
+            "weight bytes streamed: dense {} vs sparse {} ({:.2}x less traffic)",
+            dense_ctr.weight_stream_bytes,
+            sparse_ctr.weight_stream_bytes,
+            dense_ctr.weight_stream_bytes as f64 / sparse_ctr.weight_stream_bytes as f64
+        );
+        let m = Machine::sapphire_rapids(32);
+        let td = KernelCost::from_counters(&dense_ctr, &m);
+        let ts = KernelCost::from_counters(&sparse_ctr, &m);
+        println!(
+            "modeled on 32-core Sapphire Rapids: dense {:.1} µs, sparse {:.1} µs → {:.2}x",
+            td.time * 1e6,
+            ts.time * 1e6,
+            td.time / ts.time
+        );
+    } else {
+        println!("(reference backend models no hardware events — pick amx/avx for traffic stats)");
+    }
 }

@@ -20,7 +20,7 @@ use sparamx::runtime::executor::Runtime;
 use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> sparamx::util::error::Result<()> {
     let cfg = RuntimeConfig {
         weight_sparsity: 0.5,
         max_new_tokens: 24,
@@ -31,9 +31,10 @@ fn main() -> anyhow::Result<()> {
     println!("PJRT platform: {}", rt.platform());
     let mut engine = Engine::load(&rt, &bundle, cfg.clone())?;
     println!(
-        "engine: {} decode slots, weights pruned to {:.0}%",
+        "engine: {} decode slots, weights pruned to {:.0}%, backend {}",
         engine.geometry().decode_batch,
-        cfg.weight_sparsity * 100.0
+        cfg.weight_sparsity * 100.0,
+        engine.backend().name()
     );
 
     // workload: 12 prompts drawn from the corpus grammar

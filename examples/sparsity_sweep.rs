@@ -1,11 +1,18 @@
 //! Reproduce-your-own Fig 11: sweep sparsity × cores for any model
-//! config from the CLI.
+//! config from the CLI, with the registry's per-layer auto-selection
+//! shown alongside the fixed kernel classes.
 //!
 //! ```sh
 //! cargo run --release --offline --example sparsity_sweep -- \
-//!     --model llama3-8b --cores 8,16,32 --sparsities 0.3,0.5,0.7,0.9
+//!     --model llama3-8b --cores 8,16,32 --sparsities 0.3,0.5,0.7,0.9 \
+//!     --backend auto
 //! ```
+//!
+//! `--backend {auto,amx,avx,ref}`: `auto` reports what the registry
+//! would dispatch for the model's up_proj at each sparsity; a pinned
+//! backend restricts the selection column to that backend's best plan.
 
+use sparamx::backend::{BackendRegistry, CpuCaps, Dtype, GemmShape};
 use sparamx::baselines::systems::{decode_step_cost, Baseline, Precision};
 use sparamx::bench::harness::{report_header, report_row};
 use sparamx::models::ModelConfig;
@@ -19,29 +26,48 @@ fn main() {
         eprintln!("unknown model {model_name}; options: llama3-8b, llama3.2-3b, llama3.2-1b, llama2-7b, tiny");
         std::process::exit(2);
     };
+    let choice = args.backend();
     let cores = args.get_list("cores", &[8usize, 16, 32]);
     let sparsities = args.get_list("sparsities", &[0.0, 0.3, 0.5, 0.7, 0.9]);
     let ctx: usize = args.get_parse("ctx", 512);
     let batch: usize = args.get_parse("batch", 1);
 
+    // the selection column models the paper's testbed (full caps unless
+    // SPARAMX_CAPS overrides); the host's real caps only matter when
+    // actually deploying
+    let up = cfg
+        .layer_linears()
+        .into_iter()
+        .find(|l| l.name == "up_proj")
+        .expect("every config has up_proj");
     for &c in &cores {
         let m = Machine::sapphire_rapids(c);
+        let registry = BackendRegistry::with_caps(CpuCaps::modeled()).with_machine(m);
         let py = decode_step_cost(&cfg, Baseline::PyTorch, Precision::Bf16, batch, ctx, 0.0, &m);
         report_header(
-            &format!("{model_name} — {c} cores, ctx {ctx}, batch {batch}"),
-            &["sparsity", "pytorch ms/tok", "AMX sparse ms/tok", "AVX sparse ms/tok", "AMX speedup"],
+            &format!("{model_name} — {c} cores, ctx {ctx}, batch {batch}, --backend {choice}"),
+            &[
+                "sparsity",
+                "pytorch ms/tok",
+                "AMX sparse ms/tok",
+                "AVX sparse ms/tok",
+                "AMX speedup",
+                "selected (up_proj)",
+            ],
         );
         for &s in &sparsities {
             let amx =
                 decode_step_cost(&cfg, Baseline::SparAmxSparse, Precision::Bf16, batch, ctx, s, &m);
             let avx =
                 decode_step_cost(&cfg, Baseline::SparAvxSparse, Precision::Bf16, batch, ctx, s, &m);
+            let sel = registry.resolve(choice, GemmShape::for_linear(&up, batch), s, Dtype::Bf16);
             report_row(&[
                 format!("{:.0}%", s * 100.0),
                 format!("{:.2}", py * 1e3 / batch as f64),
                 format!("{:.2}", amx * 1e3 / batch as f64),
                 format!("{:.2}", avx * 1e3 / batch as f64),
                 format!("{:.2}x", py / amx),
+                format!("{} ({:.0} µs)", sel.describe(), sel.predicted_s * 1e6),
             ]);
         }
     }

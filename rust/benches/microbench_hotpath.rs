@@ -3,7 +3,8 @@
 //! pack/prune pipeline, and the engine-adjacent pieces. These are the
 //! before/after numbers tracked in EXPERIMENTS.md §Perf.
 
-use sparamx::amx::kernels::{dense_amx_gemm_bf16, sparse_amx_gemm_bf16, DenseWeights, GemmCounters};
+use sparamx::amx::kernels::{DenseWeights, GemmCounters};
+use sparamx::backend::Backend;
 use sparamx::bench::harness::{bench_auto, fmt_time, report_header, report_row};
 use sparamx::sparse::format::SparseTensor;
 use sparamx::sparse::prune::magnitude_prune;
@@ -16,6 +17,7 @@ fn main() {
     let x = g.normal_vec(k, 1.0);
     let sp = SparseTensor::pack_f32(&w, k, n);
     let dw = DenseWeights::pack_f32(&w, k, n);
+    let amx = Backend::amx();
 
     report_header(
         "§Perf — hot-path wall clock (1024x1024, batch 1, this container)",
@@ -42,7 +44,7 @@ fn main() {
 
     let r = bench_auto("sim-sparse-gemm", 1.0, || {
         let mut ctr = GemmCounters::default();
-        std::hint::black_box(sparse_amx_gemm_bf16(&x, 1, &sp, &mut ctr));
+        std::hint::black_box(amx.sparse_gemm_bf16(&x, 1, &sp, &mut ctr));
     });
     report_row(&[
         "simulated sparse AMX GEMM".into(),
@@ -52,7 +54,7 @@ fn main() {
 
     let r = bench_auto("sim-dense-gemm", 1.0, || {
         let mut ctr = GemmCounters::default();
-        std::hint::black_box(dense_amx_gemm_bf16(&x, 1, &dw, &mut ctr));
+        std::hint::black_box(amx.gemm_bf16(&x, 1, &dw, &mut ctr));
     });
     report_row(&[
         "simulated dense AMX GEMM".into(),
@@ -63,7 +65,7 @@ fn main() {
     // decompression stream rate: bitmap+values bytes consumed per second
     let r = bench_auto("decompress-only", 1.0, || {
         let mut ctr = GemmCounters::default();
-        std::hint::black_box(sparse_amx_gemm_bf16(&x, 1, &sp, &mut ctr));
+        std::hint::black_box(amx.sparse_gemm_bf16(&x, 1, &sp, &mut ctr));
     });
     let stream = sp.bytes_sparse() as f64;
     report_row(&[

@@ -100,6 +100,37 @@ impl<T: Element> DenseWeights<T> {
     }
 }
 
+impl<T: Element> DenseWeights<T> {
+    /// Reconstruct the logical row-major matrix from the tile stream
+    /// (reverse of [`DenseWeights::pack`]; used by backends that need the
+    /// unpacked operand, e.g. the reference oracle).
+    pub fn to_dense(&self) -> Vec<T> {
+        let mut out = vec![T::default(); self.rows * self.cols];
+        let v = T::VNNI;
+        for cb in 0..self.col_blocks() {
+            for kc in 0..self.k_chunks() {
+                let tile = self.tile_index(cb, kc);
+                let bytes = self.tile_bytes(tile);
+                for r in 0..self.order.tile_rows {
+                    for c in 0..self.order.row_elems {
+                        let k = kc * self.order.k_per_tile + r * v + c % v;
+                        let n = cb * self.order.cols_per_tile + c / v;
+                        if k < self.rows && n < self.cols {
+                            out[k * self.cols + n] = read_elem::<T>(&bytes[r * 64..], c);
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// The logical matrix as f32 (reference path).
+    pub fn to_dense_f32(&self) -> Vec<f32> {
+        self.to_dense().iter().map(|x| x.to_f32()).collect()
+    }
+}
+
 impl DenseWeights<Bf16> {
     pub fn pack_f32(w: &[f32], rows: usize, cols: usize) -> DenseWeights<Bf16> {
         let wb: Vec<Bf16> = w.iter().map(|&x| Bf16::from_f32(x)).collect();
@@ -116,6 +147,17 @@ fn write_elem<T: Element>(row: &mut [u8], c: usize, x: T) {
         1 => {
             row[c] = x.to_f32() as i8 as u8;
         }
+        _ => unreachable!(),
+    }
+}
+
+fn read_elem<T: Element>(row: &[u8], c: usize) -> T {
+    match T::BYTES {
+        2 => {
+            let bits = u16::from_le_bytes([row[2 * c], row[2 * c + 1]]);
+            T::from_f32(Bf16::from_bits(bits).to_f32())
+        }
+        1 => T::from_f32(row[c] as i8 as f32),
         _ => unreachable!(),
     }
 }
@@ -872,6 +914,22 @@ mod tests {
         let mut cs = EventCounters::default();
         assert_eq!(sparse_amx_gemm_int8(&x, batch, &sp, &mut cs), want);
         assert!(cs.weight_stream_bytes < cd.weight_stream_bytes);
+    }
+
+    #[test]
+    fn dense_weights_pack_to_dense_roundtrip() {
+        let mut g = XorShift::new(18);
+        // unaligned shape so padding must be stripped on the way back
+        let (rows, cols) = (50usize, 37usize);
+        let w = rand_mat(&mut g, rows * cols);
+        let dw = DenseWeights::pack_f32(&w, rows, cols);
+        let back = dw.to_dense_f32();
+        let expect: Vec<f32> = w.iter().map(|&x| crate::util::bf16::round_f32(x)).collect();
+        assert_eq!(back, expect);
+
+        let wi: Vec<i8> = (0..rows * cols).map(|i| (i % 251) as i8).collect();
+        let dwi: DenseWeights<i8> = DenseWeights::pack(&wi, rows, cols);
+        assert_eq!(dwi.to_dense(), wi);
     }
 
     #[test]

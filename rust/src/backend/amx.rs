@@ -1,0 +1,98 @@
+//! [`AmxBackend`]: the paper's AMX tile kernels (§4.1 dense, §4.3
+//! sparse, §4.5 INT8) behind the [`LinearBackend`] API.
+
+use super::{BackendKind, CpuCaps, Dtype, GemmShape, LinearBackend};
+use crate::amx::kernels::{
+    dense_amx_gemm_bf16, dense_amx_gemm_int8, sparse_amx_gemm_bf16, sparse_amx_gemm_int8,
+    DenseWeights,
+};
+use crate::amx::EventCounters;
+use crate::perf::cost::{
+    dense_gemm_cost, dense_int8_gemm_cost, sparse_gemm_cost, sparse_int8_gemm_cost,
+};
+use crate::perf::Machine;
+use crate::sparse::format::SparseTensor;
+use crate::util::bf16::Bf16;
+
+/// The AMX tile-kernel backend (stateless; the kernels own their
+/// scratch).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AmxBackend;
+
+impl LinearBackend for AmxBackend {
+    fn name(&self) -> &'static str {
+        "amx"
+    }
+
+    fn kind(&self) -> BackendKind {
+        BackendKind::Amx
+    }
+
+    fn supported(&self, caps: &CpuCaps) -> bool {
+        caps.amx_bf16
+    }
+
+    fn supported_dtype(&self, caps: &CpuCaps, dtype: Dtype) -> bool {
+        match dtype {
+            Dtype::Bf16 => caps.amx_bf16,
+            Dtype::Int8 => caps.amx_int8,
+        }
+    }
+
+    fn gemm_bf16(
+        &self,
+        input: &[f32],
+        batch: usize,
+        w: &DenseWeights<Bf16>,
+        ctr: &mut EventCounters,
+    ) -> Vec<f32> {
+        dense_amx_gemm_bf16(input, batch, w, ctr)
+    }
+
+    fn sparse_gemm_bf16(
+        &self,
+        input: &[f32],
+        batch: usize,
+        sp: &SparseTensor<Bf16>,
+        ctr: &mut EventCounters,
+    ) -> Vec<f32> {
+        sparse_amx_gemm_bf16(input, batch, sp, ctr)
+    }
+
+    fn gemm_int8(
+        &self,
+        input: &[i8],
+        batch: usize,
+        w: &DenseWeights<i8>,
+        ctr: &mut EventCounters,
+    ) -> Vec<i32> {
+        dense_amx_gemm_int8(input, batch, w, ctr)
+    }
+
+    fn sparse_gemm_int8(
+        &self,
+        input: &[i8],
+        batch: usize,
+        sp: &SparseTensor<i8>,
+        ctr: &mut EventCounters,
+    ) -> Vec<i32> {
+        sparse_amx_gemm_int8(input, batch, sp, ctr)
+    }
+
+    fn predict(
+        &self,
+        shape: GemmShape,
+        sparsity: f64,
+        dtype: Dtype,
+        sparse: bool,
+        m: &Machine,
+    ) -> f64 {
+        let GemmShape { batch, k, n } = shape;
+        match (dtype, sparse) {
+            (Dtype::Bf16, false) => dense_gemm_cost(batch, k, n, m).time,
+            (Dtype::Bf16, true) => sparse_gemm_cost(batch, k, n, sparsity, m).time,
+            (Dtype::Int8, false) => dense_int8_gemm_cost(batch, k, n, m).time,
+            (Dtype::Int8, true) => sparse_int8_gemm_cost(batch, k, n, sparsity, m).time,
+        }
+    }
+}

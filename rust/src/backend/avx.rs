@@ -1,0 +1,159 @@
+//! [`AvxBackend`]: the Appendix-B AVX-512 column-group kernel behind the
+//! [`LinearBackend`] API.
+//!
+//! AVX-512 has no tile unit, so the "dense" entry points run the sparse
+//! kernel over an all-elements pack — the same modeling the baselines
+//! use for llama.cpp's dense AVX class. INT8 on AVX is modeled coarsely:
+//! numerics come from the exact reference GEMM and the cost prediction
+//! halves the value-stream bytes (the same adjustment
+//! [`crate::baselines::systems::linear_cost`] applies).
+
+use super::{BackendKind, CpuCaps, Dtype, GemmShape, LinearBackend, RefBackend};
+use crate::amx::kernels::{avx_sparse_gemm_bf16, DenseWeights};
+use crate::amx::EventCounters;
+use crate::perf::cost::avx_sparse_gemm_cost;
+use crate::perf::{KernelCost, Machine};
+use crate::sparse::format::SparseTensor;
+use crate::util::bf16::Bf16;
+
+/// Column groups the paper found best on its testbed (Appendix B).
+pub const DEFAULT_COLUMN_GROUPS: usize = 16;
+
+/// The AVX-512 backend; `column_groups` is the Appendix-B
+/// `num_neuron_groups` knob baked into the packed layout at load time.
+#[derive(Clone, Copy, Debug)]
+pub struct AvxBackend {
+    pub column_groups: usize,
+}
+
+impl Default for AvxBackend {
+    fn default() -> AvxBackend {
+        AvxBackend {
+            column_groups: DEFAULT_COLUMN_GROUPS,
+        }
+    }
+}
+
+impl AvxBackend {
+    pub fn with_groups(column_groups: usize) -> AvxBackend {
+        AvxBackend {
+            column_groups: column_groups.max(1),
+        }
+    }
+}
+
+impl LinearBackend for AvxBackend {
+    fn name(&self) -> &'static str {
+        "avx"
+    }
+
+    fn kind(&self) -> BackendKind {
+        BackendKind::Avx
+    }
+
+    fn supported(&self, caps: &CpuCaps) -> bool {
+        caps.avx512f && caps.avx512_vbmi2
+    }
+
+    fn gemm_bf16(
+        &self,
+        input: &[f32],
+        batch: usize,
+        w: &DenseWeights<Bf16>,
+        ctr: &mut EventCounters,
+    ) -> Vec<f32> {
+        // dense on AVX = the sparse kernel over an all-elements pack.
+        // `pack_dense` keeps zeros so every value streams and the
+        // counters show genuine dense traffic (matching this backend's
+        // dense-plan prediction, nnz = k·n). The tile-stream → vector
+        // layout conversion here is O(k·n) per call: hot paths should
+        // pre-pack with `SparseTensor::pack_dense` and call
+        // `sparse_gemm_bf16` instead (the model-level `PackCache` does).
+        let sp = SparseTensor::pack_dense(&w.to_dense(), w.rows, w.cols);
+        avx_sparse_gemm_bf16(input, batch, &sp, self.column_groups, ctr)
+    }
+
+    fn sparse_gemm_bf16(
+        &self,
+        input: &[f32],
+        batch: usize,
+        sp: &SparseTensor<Bf16>,
+        ctr: &mut EventCounters,
+    ) -> Vec<f32> {
+        avx_sparse_gemm_bf16(input, batch, sp, self.column_groups, ctr)
+    }
+
+    fn gemm_int8(
+        &self,
+        input: &[i8],
+        batch: usize,
+        w: &DenseWeights<i8>,
+        ctr: &mut EventCounters,
+    ) -> Vec<i32> {
+        tick_int8(ctr, batch, w.rows, w.cols, w.rows * w.cols, self.column_groups);
+        RefBackend::matmul_i8(input, batch, &w.to_dense(), w.rows, w.cols)
+    }
+
+    fn sparse_gemm_int8(
+        &self,
+        input: &[i8],
+        batch: usize,
+        sp: &SparseTensor<i8>,
+        ctr: &mut EventCounters,
+    ) -> Vec<i32> {
+        tick_int8(ctr, batch, sp.rows, sp.cols, sp.nnz(), self.column_groups);
+        RefBackend::matmul_i8(input, batch, &sp.to_dense(), sp.rows, sp.cols)
+    }
+
+    fn predict(
+        &self,
+        shape: GemmShape,
+        sparsity: f64,
+        dtype: Dtype,
+        sparse: bool,
+        m: &Machine,
+    ) -> f64 {
+        let GemmShape { batch, k, n } = shape;
+        // dense plan: all elements stream (no bitmap saving)
+        let s = if sparse { sparsity } else { 0.0 };
+        let cost = avx_sparse_gemm_cost(batch, k, n, s, self.column_groups, m);
+        match dtype {
+            Dtype::Bf16 => cost.time,
+            // INT8 halves the weight-value bytes of the BF16 stream
+            Dtype::Int8 => int8_time(&cost),
+        }
+    }
+}
+
+/// The baselines' INT8-on-AVX adjustment, shared with
+/// [`crate::baselines::systems`].
+pub(crate) fn int8_time(cost: &KernelCost) -> f64 {
+    (cost.dram_time * 0.5).max(cost.core_time)
+}
+
+/// Coarse event ticks for the INT8-on-AVX path (`vpdpbusd`-class FMA:
+/// 64 MACs per op; bitmap + values stream once per batch row).
+fn tick_int8(
+    ctr: &mut EventCounters,
+    batch: usize,
+    rows: usize,
+    cols: usize,
+    nnz: usize,
+    groups: usize,
+) {
+    let col_blocks = cols.div_ceil(16);
+    // INT8 bitmap: one 64-bit word per tile row, 16 rows per tile →
+    // 128 B per (col_block, k_chunk) tile, k padded to 64.
+    let bitmap_bytes = col_blocks * rows.div_ceil(64) * 128;
+    ctr.input_unique_bytes += (batch * rows) as u64;
+    ctr.input_bytes += (batch * rows) as u64;
+    ctr.weight_unique_bytes += (bitmap_bytes + nnz) as u64;
+    ctr.weight_stream_bytes += ((bitmap_bytes + nnz) * batch) as u64;
+    ctr.avx_fma += ((batch * rows * cols).div_ceil(64)) as u64;
+    ctr.output_bytes += (batch * cols * 4) as u64;
+    let tasks = (col_blocks.div_ceil(groups.max(1))) as u64;
+    ctr.parallel_tasks = match (ctr.parallel_tasks, tasks) {
+        (0, x) => x,
+        (a, b) => a.min(b),
+    };
+}

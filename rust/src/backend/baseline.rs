@@ -1,0 +1,199 @@
+//! [`BaselineBackend`]: adapter putting the comparison-system cost
+//! models of [`crate::baselines::systems`] behind the same
+//! [`LinearBackend`] API as our kernels, so figure benches and A/B
+//! tests dispatch baselines exactly like SparAMX backends.
+//!
+//! Numerics map each baseline to the kernel class the paper attributes
+//! to it (§5, §7): stock PyTorch runs dense AMX GEMMs (on pruned
+//! weights, densified — what eager PyTorch actually does with a pruned
+//! checkpoint); DeepSparse runs the sparse AVX class; llama.cpp runs
+//! dense AVX. Cost predictions delegate to
+//! [`crate::baselines::systems::linear_cost`], which adds each system's
+//! framework overhead / fusion factor.
+
+use super::{AmxBackend, AvxBackend, BackendKind, CpuCaps, Dtype, GemmShape, LinearBackend};
+use crate::amx::kernels::DenseWeights;
+use crate::amx::EventCounters;
+use crate::baselines::systems::{linear_cost, Baseline, Precision};
+use crate::perf::Machine;
+use crate::sparse::format::{Element, SparseTensor};
+use crate::util::bf16::Bf16;
+
+/// Adapter over one comparison system.
+#[derive(Clone, Copy, Debug)]
+pub struct BaselineBackend {
+    pub baseline: Baseline,
+    amx: AmxBackend,
+    avx: AvxBackend,
+}
+
+/// Which kernel class executes a baseline's numerics.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Class {
+    AmxDense,
+    AmxSparse,
+    AvxDense,
+    AvxSparse,
+}
+
+impl BaselineBackend {
+    pub fn new(baseline: Baseline) -> BaselineBackend {
+        BaselineBackend {
+            baseline,
+            amx: AmxBackend,
+            avx: AvxBackend::default(),
+        }
+    }
+
+    fn class(&self) -> Class {
+        match self.baseline {
+            Baseline::PyTorch | Baseline::SparAmxDense => Class::AmxDense,
+            Baseline::SparAmxSparse => Class::AmxSparse,
+            Baseline::SparAvxSparse | Baseline::DeepSparse => Class::AvxSparse,
+            Baseline::LlamaCpp => Class::AvxDense,
+        }
+    }
+
+    /// Densify a sparse operand for the dense-system classes.
+    fn densify<T: Element>(sp: &SparseTensor<T>) -> DenseWeights<T> {
+        DenseWeights::pack(&sp.to_dense(), sp.rows, sp.cols)
+    }
+}
+
+impl LinearBackend for BaselineBackend {
+    fn name(&self) -> &'static str {
+        match self.baseline {
+            Baseline::PyTorch => "baseline-pytorch",
+            Baseline::SparAmxDense => "baseline-amx-dense",
+            Baseline::SparAmxSparse => "baseline-amx-sparse",
+            Baseline::SparAvxSparse => "baseline-avx-sparse",
+            Baseline::DeepSparse => "baseline-deepsparse",
+            Baseline::LlamaCpp => "baseline-llamacpp",
+        }
+    }
+
+    fn kind(&self) -> BackendKind {
+        BackendKind::Baseline
+    }
+
+    fn supported(&self, _caps: &CpuCaps) -> bool {
+        // comparison systems carry their own runtime fallbacks; they are
+        // never candidates for our auto-selection anyway
+        true
+    }
+
+    fn gemm_bf16(
+        &self,
+        input: &[f32],
+        batch: usize,
+        w: &DenseWeights<Bf16>,
+        ctr: &mut EventCounters,
+    ) -> Vec<f32> {
+        match self.class() {
+            Class::AmxDense | Class::AmxSparse => self.amx.gemm_bf16(input, batch, w, ctr),
+            Class::AvxDense | Class::AvxSparse => self.avx.gemm_bf16(input, batch, w, ctr),
+        }
+    }
+
+    fn sparse_gemm_bf16(
+        &self,
+        input: &[f32],
+        batch: usize,
+        sp: &SparseTensor<Bf16>,
+        ctr: &mut EventCounters,
+    ) -> Vec<f32> {
+        match self.class() {
+            Class::AmxDense => self.amx.gemm_bf16(input, batch, &Self::densify(sp), ctr),
+            Class::AmxSparse => self.amx.sparse_gemm_bf16(input, batch, sp, ctr),
+            Class::AvxDense => self.avx.gemm_bf16(input, batch, &Self::densify(sp), ctr),
+            Class::AvxSparse => self.avx.sparse_gemm_bf16(input, batch, sp, ctr),
+        }
+    }
+
+    fn gemm_int8(
+        &self,
+        input: &[i8],
+        batch: usize,
+        w: &DenseWeights<i8>,
+        ctr: &mut EventCounters,
+    ) -> Vec<i32> {
+        match self.class() {
+            Class::AmxDense | Class::AmxSparse => self.amx.gemm_int8(input, batch, w, ctr),
+            Class::AvxDense | Class::AvxSparse => self.avx.gemm_int8(input, batch, w, ctr),
+        }
+    }
+
+    fn sparse_gemm_int8(
+        &self,
+        input: &[i8],
+        batch: usize,
+        sp: &SparseTensor<i8>,
+        ctr: &mut EventCounters,
+    ) -> Vec<i32> {
+        match self.class() {
+            Class::AmxDense => self.amx.gemm_int8(input, batch, &Self::densify(sp), ctr),
+            Class::AmxSparse => self.amx.sparse_gemm_int8(input, batch, sp, ctr),
+            Class::AvxDense => self.avx.gemm_int8(input, batch, &Self::densify(sp), ctr),
+            Class::AvxSparse => self.avx.sparse_gemm_int8(input, batch, sp, ctr),
+        }
+    }
+
+    fn predict(
+        &self,
+        shape: GemmShape,
+        sparsity: f64,
+        dtype: Dtype,
+        sparse: bool,
+        m: &Machine,
+    ) -> f64 {
+        // the kernel class (and hence dense/sparse) is inherent to the
+        // baseline, so the `sparse` plan flag only zeroes the sparsity
+        // for dense plans
+        let s = if sparse { sparsity } else { 0.0 };
+        let precision = match dtype {
+            Dtype::Bf16 => Precision::Bf16,
+            Dtype::Int8 => Precision::Int8,
+        };
+        linear_cost(self.baseline, precision, shape.batch, shape.k, shape.n, s, m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::RefBackend;
+    use crate::sparse::prune::magnitude_prune;
+    use crate::util::XorShift;
+
+    #[test]
+    fn dense_system_densifies_sparse_operands() {
+        // stock PyTorch runs pruned weights through its dense kernel:
+        // the adapter must produce reference numerics and zero vpexpand.
+        let mut g = XorShift::new(71);
+        let (k, n) = (64usize, 48usize);
+        let w = magnitude_prune(&g.normal_vec(k * n, 1.0), 0.5);
+        let x = g.normal_vec(k, 1.0);
+        let sp = SparseTensor::pack_f32(&w, k, n);
+        let py = BaselineBackend::new(Baseline::PyTorch);
+        let mut ctr = EventCounters::default();
+        let got = py.sparse_gemm_bf16(&x, 1, &sp, &mut ctr);
+        let want = RefBackend::matmul_f32(&x, 1, &w, k, n);
+        let tol = 0.02 * (k as f32).sqrt();
+        for i in 0..n {
+            assert!((got[i] - want[i]).abs() <= tol + want[i].abs() * 0.02);
+        }
+        assert_eq!(ctr.vpexpand, 0, "dense class never decompresses");
+        assert!(ctr.tdp_bf16 > 0, "dense AMX class uses tile compute");
+    }
+
+    #[test]
+    fn pytorch_prediction_carries_framework_overhead() {
+        let m = Machine::default();
+        let shape = GemmShape::new(1, 1024, 1024);
+        let py = BaselineBackend::new(Baseline::PyTorch)
+            .predict(shape, 0.0, Dtype::Bf16, false, &m);
+        let ours = BaselineBackend::new(Baseline::SparAmxDense)
+            .predict(shape, 0.0, Dtype::Bf16, false, &m);
+        assert!(py > ours, "framework overhead must show: {py} vs {ours}");
+    }
+}

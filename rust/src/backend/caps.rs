@@ -1,0 +1,199 @@
+//! CPU capability probing for backend eligibility.
+//!
+//! The functional kernels in this crate run anywhere — what capabilities
+//! gate is *auto-selection*: on a host without AMX the registry must not
+//! plan an AMX kernel for a real deployment. Detection uses
+//! `is_x86_feature_detected!` for AVX-512 and `/proc/cpuinfo` flags for
+//! AMX (the `amx-*` detection tokens require newer toolchains than this
+//! offline build targets), with a `SPARAMX_CAPS` environment override so
+//! CI machines without AMX can still exercise every selection path:
+//!
+//! ```sh
+//! SPARAMX_CAPS=all    cargo test            # pretend full Sapphire Rapids
+//! SPARAMX_CAPS=none   cargo run ...         # force the reference fallback
+//! SPARAMX_CAPS=avx512 cargo run ...         # AVX-512 but no AMX
+//! ```
+
+/// Capability bits the backends care about.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CpuCaps {
+    /// AMX tiles with BF16 `tdpbf16ps`.
+    pub amx_bf16: bool,
+    /// AMX tiles with INT8 `tdpbssd`.
+    pub amx_int8: bool,
+    /// AVX-512 foundation.
+    pub avx512f: bool,
+    /// AVX-512 VBMI2 (`vpexpandw`/`vpexpandb`, the decompression core).
+    pub avx512_vbmi2: bool,
+}
+
+/// Environment variable overriding detection (see module docs).
+pub const CAPS_ENV: &str = "SPARAMX_CAPS";
+
+impl CpuCaps {
+    /// Everything the paper's Sapphire Rapids testbed has.
+    pub const fn all() -> CpuCaps {
+        CpuCaps {
+            amx_bf16: true,
+            amx_int8: true,
+            avx512f: true,
+            avx512_vbmi2: true,
+        }
+    }
+
+    /// No relevant ISA extensions (forces the reference fallback).
+    pub const fn none() -> CpuCaps {
+        CpuCaps {
+            amx_bf16: false,
+            amx_int8: false,
+            avx512f: false,
+            avx512_vbmi2: false,
+        }
+    }
+
+    /// Probe at startup: `SPARAMX_CAPS` override if set, else the host.
+    pub fn detect() -> CpuCaps {
+        match std::env::var(CAPS_ENV) {
+            Ok(list) => CpuCaps::from_list(&list),
+            Err(_) => CpuCaps::host(),
+        }
+    }
+
+    /// Capabilities for *modeling* runs (examples, cost tables, the
+    /// eval CLI): the paper's full Sapphire Rapids testbed unless
+    /// `SPARAMX_CAPS` overrides. Host detection ([`CpuCaps::detect`])
+    /// is for deployment decisions; the simulated kernels themselves
+    /// run anywhere, so a dev laptop without AVX-512 should still see
+    /// the modeled AMX numbers by default.
+    pub fn modeled() -> CpuCaps {
+        match std::env::var(CAPS_ENV) {
+            Ok(list) => CpuCaps::from_list(&list),
+            Err(_) => CpuCaps::all(),
+        }
+    }
+
+    /// Detect the actual host CPU.
+    pub fn host() -> CpuCaps {
+        #[cfg(target_arch = "x86_64")]
+        {
+            CpuCaps {
+                amx_bf16: cpuinfo_has("amx_bf16"),
+                amx_int8: cpuinfo_has("amx_int8"),
+                avx512f: std::is_x86_feature_detected!("avx512f"),
+                avx512_vbmi2: cpuinfo_has("avx512_vbmi2"),
+            }
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            CpuCaps::none()
+        }
+    }
+
+    /// Parse a comma-separated capability list: `all`, `none`, or any of
+    /// `amx` (both AMX bits), `amx-bf16`, `amx-int8`, `avx512`
+    /// (foundation + VBMI2), `avx512f`, `vbmi2`. Unknown tokens are
+    /// ignored so the override stays forward-compatible.
+    pub fn from_list(list: &str) -> CpuCaps {
+        let mut caps = CpuCaps::none();
+        for tok in list.split(',') {
+            match tok.trim().to_ascii_lowercase().replace('_', "-").as_str() {
+                "all" => caps = CpuCaps::all(),
+                "none" => caps = CpuCaps::none(),
+                "amx" => {
+                    caps.amx_bf16 = true;
+                    caps.amx_int8 = true;
+                }
+                "amx-bf16" => caps.amx_bf16 = true,
+                "amx-int8" => caps.amx_int8 = true,
+                "avx512" => {
+                    caps.avx512f = true;
+                    caps.avx512_vbmi2 = true;
+                }
+                "avx512f" => caps.avx512f = true,
+                "vbmi2" | "avx512-vbmi2" => caps.avx512_vbmi2 = true,
+                _ => {}
+            }
+        }
+        caps
+    }
+
+    /// Human-readable summary for banners/logs.
+    pub fn describe(&self) -> String {
+        let mut parts = Vec::new();
+        if self.amx_bf16 {
+            parts.push("amx-bf16");
+        }
+        if self.amx_int8 {
+            parts.push("amx-int8");
+        }
+        if self.avx512f {
+            parts.push("avx512f");
+        }
+        if self.avx512_vbmi2 {
+            parts.push("avx512-vbmi2");
+        }
+        if parts.is_empty() {
+            "none".into()
+        } else {
+            parts.join(",")
+        }
+    }
+}
+
+/// Whole-word membership in the `/proc/cpuinfo` flags line (Linux; other
+/// platforms report false and rely on the env override).
+#[cfg(target_arch = "x86_64")]
+fn cpuinfo_has(flag: &str) -> bool {
+    #[cfg(target_os = "linux")]
+    {
+        if let Ok(text) = std::fs::read_to_string("/proc/cpuinfo") {
+            for line in text.lines() {
+                let Some((key, rest)) = line.split_once(':') else {
+                    continue;
+                };
+                if key.trim() == "flags" {
+                    return rest.split_whitespace().any(|f| f == flag);
+                }
+            }
+        }
+        false
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        let _ = flag;
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn list_parsing() {
+        assert_eq!(CpuCaps::from_list("all"), CpuCaps::all());
+        assert_eq!(CpuCaps::from_list("none"), CpuCaps::none());
+        let amx_only = CpuCaps::from_list("amx");
+        assert!(amx_only.amx_bf16 && amx_only.amx_int8);
+        assert!(!amx_only.avx512f && !amx_only.avx512_vbmi2);
+        let mixed = CpuCaps::from_list(" amx-bf16 , avx512 ");
+        assert!(mixed.amx_bf16 && !mixed.amx_int8);
+        assert!(mixed.avx512f && mixed.avx512_vbmi2);
+        // underscores and unknown tokens tolerated
+        let ub = CpuCaps::from_list("amx_bf16,quantum");
+        assert!(ub.amx_bf16 && !ub.amx_int8);
+    }
+
+    #[test]
+    fn describe_roundtrips_through_from_list() {
+        for caps in [CpuCaps::all(), CpuCaps::none(), CpuCaps::from_list("amx")] {
+            assert_eq!(CpuCaps::from_list(&caps.describe()), caps);
+        }
+    }
+
+    #[test]
+    fn host_detection_does_not_panic() {
+        let _ = CpuCaps::host();
+        let _ = CpuCaps::detect();
+    }
+}

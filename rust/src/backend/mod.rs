@@ -1,0 +1,352 @@
+//! Unified linear-layer dispatch: one kernel API, capability-detected
+//! backends, sparsity-aware auto-selection.
+//!
+//! SparAMX's headline feature (paper §1, §4) is *automatic* replacement
+//! of every linear layer with the best kernel for the hardware. This
+//! module is that extension point for the Rust port: instead of call
+//! sites hard-wiring `dense_amx_gemm_bf16` / `sparse_amx_gemm_bf16` /
+//! `avx_sparse_gemm_bf16`, everything routes through a [`LinearBackend`]
+//! trait object held in a cheap, cloneable [`Backend`] handle.
+//!
+//! * [`LinearBackend`] — the kernel API: dense + sparse GEMM in BF16 and
+//!   INT8, a name, a capability gate, and a cost prediction used for
+//!   auto-selection.
+//! * [`AmxBackend`] / [`AvxBackend`] / [`RefBackend`] — the paper's AMX
+//!   tile kernels, the Appendix-B AVX-512 kernel, and the f32 reference
+//!   oracle, each wrapping the simulated kernels in
+//!   [`crate::amx::kernels`].
+//! * [`BaselineBackend`] — an adapter over the comparison-system cost
+//!   models in [`crate::baselines::systems`] (stock PyTorch, DeepSparse,
+//!   llama.cpp), so the figure benches and A/B tests can run baselines
+//!   through the same API.
+//! * [`CpuCaps`] / [`BackendRegistry`] — startup capability probing
+//!   (AVX-512 via `is_x86_feature_detected!`, AMX via `/proc/cpuinfo`,
+//!   `SPARAMX_CAPS` env override for CI machines without AMX) and the
+//!   per-layer `select(shape, sparsity, dtype)` policy that reproduces
+//!   the paper's dense-vs-sparse crossover (Table 2 / Figure 11) using
+//!   the [`crate::perf::cost`] model.
+//!
+//! New backends (a NUMA-partitioned or sharded one, say) implement
+//! [`LinearBackend`], register in the [`BackendRegistry`], and every
+//! call site — attention, model forward, engine, benches — picks them up
+//! without modification.
+
+pub mod amx;
+pub mod avx;
+pub mod baseline;
+pub mod caps;
+pub mod reference;
+pub mod registry;
+
+pub use amx::AmxBackend;
+pub use avx::AvxBackend;
+pub use baseline::BaselineBackend;
+pub use caps::CpuCaps;
+pub use reference::RefBackend;
+pub use registry::{BackendRegistry, Selection};
+
+use crate::amx::kernels::DenseWeights;
+use crate::amx::EventCounters;
+use crate::perf::Machine;
+use crate::sparse::format::SparseTensor;
+use crate::util::bf16::Bf16;
+use std::fmt;
+use std::sync::Arc;
+
+/// Weight/activation precision of a dispatched GEMM.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    Bf16,
+    Int8,
+}
+
+/// The logical shape of one linear-layer GEMM: `batch × k` activations
+/// against a `k × n` weight matrix.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GemmShape {
+    pub batch: usize,
+    pub k: usize,
+    pub n: usize,
+}
+
+impl GemmShape {
+    pub fn new(batch: usize, k: usize, n: usize) -> GemmShape {
+        GemmShape { batch, k, n }
+    }
+
+    /// Shape of a named model linear at the given batch.
+    pub fn for_linear(l: &crate::models::llama::LinearShape, batch: usize) -> GemmShape {
+        GemmShape::new(batch, l.in_features, l.out_features)
+    }
+}
+
+/// Kernel-class identity of a backend.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// AMX tile kernels (paper §4.1/§4.3/§4.5).
+    Amx,
+    /// AVX-512 column-group kernel (paper §4.4, Appendix B).
+    Avx,
+    /// f32 reference oracle (always available; never auto-selected).
+    Reference,
+    /// Comparison-system adapter over [`crate::baselines::systems`].
+    Baseline,
+}
+
+/// User-facing backend directive (`--backend` / config `"backend"`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BackendChoice {
+    /// Let [`BackendRegistry::select`] pick per layer.
+    #[default]
+    Auto,
+    Amx,
+    Avx,
+    Reference,
+}
+
+impl BackendChoice {
+    /// All accepted spellings, for help text.
+    pub const HELP: &'static str = "auto|amx|avx|ref";
+}
+
+impl std::str::FromStr for BackendChoice {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<BackendChoice, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Ok(BackendChoice::Auto),
+            "amx" => Ok(BackendChoice::Amx),
+            "avx" => Ok(BackendChoice::Avx),
+            "ref" | "reference" => Ok(BackendChoice::Reference),
+            other => Err(format!("unknown backend '{other}' (expected {})", Self::HELP)),
+        }
+    }
+}
+
+impl fmt::Display for BackendChoice {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            BackendChoice::Auto => "auto",
+            BackendChoice::Amx => "amx",
+            BackendChoice::Avx => "avx",
+            BackendChoice::Reference => "ref",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// The kernel API every backend implements. Object-safe so call sites
+/// hold `dyn LinearBackend` behind a [`Backend`] handle.
+///
+/// All four GEMM entry points return numerics identical (up to
+/// BF16/INT8 rounding) to the dense reference and tick the
+/// [`EventCounters`] the perf model consumes — the same contract the
+/// free-function kernels had.
+pub trait LinearBackend: Send + Sync {
+    /// Short stable name ("amx", "avx", "ref", "baseline-pytorch", ...).
+    fn name(&self) -> &'static str;
+
+    /// Kernel-class identity.
+    fn kind(&self) -> BackendKind;
+
+    /// Whether this backend's native instruction stream could run on a
+    /// machine with the given capabilities. The simulated kernels
+    /// themselves execute anywhere; this gates *auto-selection* so a
+    /// deployment on a non-AMX host models what it could actually run.
+    fn supported(&self, caps: &CpuCaps) -> bool;
+
+    /// Dtype-refined capability gate (e.g. AMX INT8 needs `amx-int8`).
+    fn supported_dtype(&self, caps: &CpuCaps, dtype: Dtype) -> bool {
+        let _ = dtype;
+        self.supported(caps)
+    }
+
+    /// Dense BF16 GEMM on pre-packed weights.
+    fn gemm_bf16(
+        &self,
+        input: &[f32],
+        batch: usize,
+        w: &DenseWeights<Bf16>,
+        ctr: &mut EventCounters,
+    ) -> Vec<f32>;
+
+    /// Sparse BF16 GEMM on the bitmap+values format.
+    fn sparse_gemm_bf16(
+        &self,
+        input: &[f32],
+        batch: usize,
+        sp: &SparseTensor<Bf16>,
+        ctr: &mut EventCounters,
+    ) -> Vec<f32>;
+
+    /// Dense INT8 GEMM (INT32 accumulation).
+    fn gemm_int8(
+        &self,
+        input: &[i8],
+        batch: usize,
+        w: &DenseWeights<i8>,
+        ctr: &mut EventCounters,
+    ) -> Vec<i32>;
+
+    /// Sparse INT8 GEMM.
+    fn sparse_gemm_int8(
+        &self,
+        input: &[i8],
+        batch: usize,
+        sp: &SparseTensor<i8>,
+        ctr: &mut EventCounters,
+    ) -> Vec<i32>;
+
+    /// Modeled wall seconds for one GEMM of `shape` at `sparsity` on
+    /// machine `m`, running this backend's dense (`sparse == false`) or
+    /// sparse kernel class. Drives [`BackendRegistry::select`]; must
+    /// agree with [`crate::perf::cost`] so the selection reproduces the
+    /// paper's crossover points.
+    fn predict(&self, shape: GemmShape, sparsity: f64, dtype: Dtype, sparse: bool, m: &Machine)
+        -> f64;
+}
+
+/// Cheap, cloneable handle to a [`LinearBackend`] — what call sites
+/// carry (engine, attention, model forward, benches).
+#[derive(Clone)]
+pub struct Backend(Arc<dyn LinearBackend>);
+
+impl Backend {
+    /// Wrap any backend implementation.
+    pub fn from_impl(b: impl LinearBackend + 'static) -> Backend {
+        Backend(Arc::new(b))
+    }
+
+    /// The AMX tile-kernel backend.
+    pub fn amx() -> Backend {
+        Backend::from_impl(AmxBackend)
+    }
+
+    /// The AVX-512 backend with the paper's default 16 column groups.
+    pub fn avx() -> Backend {
+        Backend::from_impl(AvxBackend::default())
+    }
+
+    /// The AVX-512 backend with an explicit column-group count.
+    pub fn avx_with_groups(column_groups: usize) -> Backend {
+        Backend::from_impl(AvxBackend::with_groups(column_groups))
+    }
+
+    /// The f32 reference oracle.
+    pub fn reference() -> Backend {
+        Backend::from_impl(RefBackend)
+    }
+
+    /// A comparison-system adapter.
+    pub fn baseline(b: crate::baselines::systems::Baseline) -> Backend {
+        Backend::from_impl(BaselineBackend::new(b))
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.0.name()
+    }
+
+    pub fn kind(&self) -> BackendKind {
+        self.0.kind()
+    }
+
+    pub fn supported(&self, caps: &CpuCaps) -> bool {
+        self.0.supported(caps)
+    }
+
+    pub fn supported_dtype(&self, caps: &CpuCaps, dtype: Dtype) -> bool {
+        self.0.supported_dtype(caps, dtype)
+    }
+
+    pub fn gemm_bf16(
+        &self,
+        input: &[f32],
+        batch: usize,
+        w: &DenseWeights<Bf16>,
+        ctr: &mut EventCounters,
+    ) -> Vec<f32> {
+        self.0.gemm_bf16(input, batch, w, ctr)
+    }
+
+    pub fn sparse_gemm_bf16(
+        &self,
+        input: &[f32],
+        batch: usize,
+        sp: &SparseTensor<Bf16>,
+        ctr: &mut EventCounters,
+    ) -> Vec<f32> {
+        self.0.sparse_gemm_bf16(input, batch, sp, ctr)
+    }
+
+    pub fn gemm_int8(
+        &self,
+        input: &[i8],
+        batch: usize,
+        w: &DenseWeights<i8>,
+        ctr: &mut EventCounters,
+    ) -> Vec<i32> {
+        self.0.gemm_int8(input, batch, w, ctr)
+    }
+
+    pub fn sparse_gemm_int8(
+        &self,
+        input: &[i8],
+        batch: usize,
+        sp: &SparseTensor<i8>,
+        ctr: &mut EventCounters,
+    ) -> Vec<i32> {
+        self.0.sparse_gemm_int8(input, batch, sp, ctr)
+    }
+
+    pub fn predict(
+        &self,
+        shape: GemmShape,
+        sparsity: f64,
+        dtype: Dtype,
+        sparse: bool,
+        m: &Machine,
+    ) -> f64 {
+        self.0.predict(shape, sparsity, dtype, sparse, m)
+    }
+}
+
+impl fmt::Debug for Backend {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Backend({})", self.name())
+    }
+}
+
+impl PartialEq for Backend {
+    fn eq(&self, other: &Backend) -> bool {
+        self.kind() == other.kind() && self.name() == other.name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_choice_parses() {
+        assert_eq!("auto".parse::<BackendChoice>().unwrap(), BackendChoice::Auto);
+        assert_eq!("AMX".parse::<BackendChoice>().unwrap(), BackendChoice::Amx);
+        assert_eq!("avx".parse::<BackendChoice>().unwrap(), BackendChoice::Avx);
+        assert_eq!("ref".parse::<BackendChoice>().unwrap(), BackendChoice::Reference);
+        assert_eq!(
+            "reference".parse::<BackendChoice>().unwrap(),
+            BackendChoice::Reference
+        );
+        assert!("mkl".parse::<BackendChoice>().is_err());
+        assert_eq!(BackendChoice::default(), BackendChoice::Auto);
+        assert_eq!(BackendChoice::Reference.to_string(), "ref");
+    }
+
+    #[test]
+    fn handle_identity_and_debug() {
+        let a = Backend::amx();
+        assert_eq!(a, a.clone());
+        assert_ne!(a, Backend::avx());
+        assert_eq!(format!("{a:?}"), "Backend(amx)");
+        assert_eq!(Backend::reference().kind(), BackendKind::Reference);
+    }
+}

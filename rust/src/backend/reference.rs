@@ -1,0 +1,109 @@
+//! [`RefBackend`]: the f32 reference oracle behind the
+//! [`LinearBackend`] API.
+//!
+//! Always available, never auto-selected: [`LinearBackend::predict`]
+//! returns a sentinel far above any modeled kernel time, so
+//! [`crate::backend::BackendRegistry::select`] only falls back to it
+//! when no hardware backend is eligible. The oracle models no
+//! architectural events — counters are left untouched.
+
+use super::{BackendKind, CpuCaps, Dtype, GemmShape, LinearBackend};
+use crate::amx::kernels::{ref_gemm_bf16, ref_gemm_int8, DenseWeights};
+use crate::amx::EventCounters;
+use crate::perf::Machine;
+use crate::sparse::format::SparseTensor;
+use crate::util::bf16::Bf16;
+
+/// Sentinel predicted time (seconds) keeping the oracle out of
+/// auto-selection while remaining finite for comparisons.
+pub const REF_PREDICT_S: f64 = 1e9;
+
+/// The reference oracle backend.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RefBackend;
+
+impl RefBackend {
+    /// Reference BF16-rounded GEMM on a raw row-major f32 matrix — the
+    /// oracle every simulated kernel is validated against. Exposed as an
+    /// inherent method so oracle call sites (attention's dense
+    /// reference, parity tests) route through the backend layer too.
+    pub fn matmul_f32(
+        input: &[f32],
+        batch: usize,
+        w: &[f32],
+        rows: usize,
+        cols: usize,
+    ) -> Vec<f32> {
+        ref_gemm_bf16(input, batch, w, rows, cols)
+    }
+
+    /// Reference exact INT8 GEMM on a raw row-major i8 matrix.
+    pub fn matmul_i8(input: &[i8], batch: usize, w: &[i8], rows: usize, cols: usize) -> Vec<i32> {
+        ref_gemm_int8(input, batch, w, rows, cols)
+    }
+}
+
+impl LinearBackend for RefBackend {
+    fn name(&self) -> &'static str {
+        "ref"
+    }
+
+    fn kind(&self) -> BackendKind {
+        BackendKind::Reference
+    }
+
+    fn supported(&self, _caps: &CpuCaps) -> bool {
+        true
+    }
+
+    fn gemm_bf16(
+        &self,
+        input: &[f32],
+        batch: usize,
+        w: &DenseWeights<Bf16>,
+        _ctr: &mut EventCounters,
+    ) -> Vec<f32> {
+        Self::matmul_f32(input, batch, &w.to_dense_f32(), w.rows, w.cols)
+    }
+
+    fn sparse_gemm_bf16(
+        &self,
+        input: &[f32],
+        batch: usize,
+        sp: &SparseTensor<Bf16>,
+        _ctr: &mut EventCounters,
+    ) -> Vec<f32> {
+        Self::matmul_f32(input, batch, &sp.to_dense_f32(), sp.rows, sp.cols)
+    }
+
+    fn gemm_int8(
+        &self,
+        input: &[i8],
+        batch: usize,
+        w: &DenseWeights<i8>,
+        _ctr: &mut EventCounters,
+    ) -> Vec<i32> {
+        Self::matmul_i8(input, batch, &w.to_dense(), w.rows, w.cols)
+    }
+
+    fn sparse_gemm_int8(
+        &self,
+        input: &[i8],
+        batch: usize,
+        sp: &SparseTensor<i8>,
+        _ctr: &mut EventCounters,
+    ) -> Vec<i32> {
+        Self::matmul_i8(input, batch, &sp.to_dense(), sp.rows, sp.cols)
+    }
+
+    fn predict(
+        &self,
+        _shape: GemmShape,
+        _sparsity: f64,
+        _dtype: Dtype,
+        _sparse: bool,
+        _m: &Machine,
+    ) -> f64 {
+        REF_PREDICT_S
+    }
+}

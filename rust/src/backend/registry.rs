@@ -1,0 +1,291 @@
+//! [`BackendRegistry`]: capability-probed backend inventory plus the
+//! sparsity-aware per-layer selection policy.
+//!
+//! `select(shape, sparsity, dtype)` enumerates every (backend, plan)
+//! pair eligible under the probed [`CpuCaps`] and picks the one with the
+//! lowest [`LinearBackend::predict`] time on the registry's modeled
+//! [`Machine`]. Because `predict` is the same [`crate::perf::cost`]
+//! model that regenerates the paper's tables, the selection reproduces
+//! the per-layer dense-vs-sparse crossover of Table 2 / Figure 11: at
+//! batch 1 the memory-bound linears go sparse, at high batch the
+//! compute-bound regime flips them back to dense, and on hosts without
+//! AMX the AVX kernel (or ultimately [`RefBackend`]) takes over.
+
+use super::{Backend, BackendChoice, BackendKind, CpuCaps, Dtype, GemmShape};
+use crate::perf::Machine;
+
+/// Outcome of one selection: which backend, which kernel class, and the
+/// modeled time that won.
+#[derive(Clone, Debug)]
+pub struct Selection {
+    pub backend: Backend,
+    /// `true` → the sparse kernel (bitmap+values operand); `false` → the
+    /// dense kernel on densified weights.
+    pub use_sparse: bool,
+    /// Modeled seconds of the winning plan.
+    pub predicted_s: f64,
+}
+
+impl Selection {
+    /// Human-readable plan, e.g. `amx/sparse`.
+    pub fn describe(&self) -> String {
+        format!(
+            "{}/{}",
+            self.backend.name(),
+            if self.use_sparse { "sparse" } else { "dense" }
+        )
+    }
+}
+
+/// The startup-probed backend inventory.
+pub struct BackendRegistry {
+    caps: CpuCaps,
+    machine: Machine,
+    backends: Vec<Backend>,
+}
+
+impl BackendRegistry {
+    /// Probe the host (honouring the `SPARAMX_CAPS` override) and build
+    /// the standard inventory: AMX, AVX, reference.
+    pub fn probe() -> BackendRegistry {
+        BackendRegistry::with_caps(CpuCaps::detect())
+    }
+
+    /// Build with explicit capabilities (tests, what-if modeling).
+    pub fn with_caps(caps: CpuCaps) -> BackendRegistry {
+        BackendRegistry {
+            caps,
+            machine: Machine::default(),
+            backends: vec![Backend::amx(), Backend::avx(), Backend::reference()],
+        }
+    }
+
+    /// Use a different modeled machine for selection.
+    pub fn with_machine(mut self, machine: Machine) -> BackendRegistry {
+        self.machine = machine;
+        self
+    }
+
+    pub fn caps(&self) -> &CpuCaps {
+        &self.caps
+    }
+
+    pub fn machine(&self) -> &Machine {
+        &self.machine
+    }
+
+    pub fn backends(&self) -> &[Backend] {
+        &self.backends
+    }
+
+    /// Backends whose native instruction stream the probed CPU supports
+    /// (the reference oracle is always included).
+    pub fn available(&self) -> Vec<Backend> {
+        self.backends
+            .iter()
+            .filter(|b| b.supported(&self.caps))
+            .cloned()
+            .collect()
+    }
+
+    /// Fetch a backend by kind from the inventory.
+    pub fn get(&self, kind: BackendKind) -> Option<Backend> {
+        self.backends.iter().find(|b| b.kind() == kind).cloned()
+    }
+
+    /// Pick the fastest eligible (backend, plan) pair for one layer.
+    pub fn select(&self, shape: GemmShape, sparsity: f64, dtype: Dtype) -> Selection {
+        let mut best: Option<Selection> = None;
+        for b in &self.backends {
+            if b.kind() == BackendKind::Reference {
+                continue; // fallback only, handled below
+            }
+            if !b.supported_dtype(&self.caps, dtype) {
+                continue;
+            }
+            for sparse in [false, true] {
+                if sparse && sparsity <= 0.0 {
+                    continue;
+                }
+                let t = b.predict(shape, sparsity, dtype, sparse, &self.machine);
+                if best.as_ref().map_or(true, |s| t < s.predicted_s) {
+                    best = Some(Selection {
+                        backend: b.clone(),
+                        use_sparse: sparse,
+                        predicted_s: t,
+                    });
+                }
+            }
+        }
+        best.unwrap_or_else(|| self.reference_fallback(shape, sparsity, dtype))
+    }
+
+    /// Resolve a user directive: `auto` selects, anything else pins the
+    /// named backend (the simulated kernels run anywhere, so pinning is
+    /// honoured even when the probed CPU lacks the ISA — the plan is
+    /// still chosen by modeled time within that backend).
+    pub fn resolve(
+        &self,
+        choice: BackendChoice,
+        shape: GemmShape,
+        sparsity: f64,
+        dtype: Dtype,
+    ) -> Selection {
+        let kind = match choice {
+            BackendChoice::Auto => return self.select(shape, sparsity, dtype),
+            BackendChoice::Amx => BackendKind::Amx,
+            BackendChoice::Avx => BackendKind::Avx,
+            BackendChoice::Reference => BackendKind::Reference,
+        };
+        let backend = self
+            .get(kind)
+            .expect("standard inventory always holds amx/avx/ref");
+        if kind == BackendKind::Reference {
+            return self.reference_fallback(shape, sparsity, dtype);
+        }
+        let dense_t = backend.predict(shape, sparsity, dtype, false, &self.machine);
+        let (use_sparse, predicted_s) = if sparsity > 0.0 {
+            let sparse_t = backend.predict(shape, sparsity, dtype, true, &self.machine);
+            if sparse_t < dense_t {
+                (true, sparse_t)
+            } else {
+                (false, dense_t)
+            }
+        } else {
+            (false, dense_t)
+        };
+        Selection {
+            backend,
+            use_sparse,
+            predicted_s,
+        }
+    }
+
+    fn reference_fallback(&self, shape: GemmShape, sparsity: f64, dtype: Dtype) -> Selection {
+        let backend = self
+            .get(BackendKind::Reference)
+            .expect("standard inventory always holds ref");
+        let predicted_s = backend.predict(shape, sparsity, dtype, false, &self.machine);
+        Selection {
+            backend,
+            use_sparse: false,
+            predicted_s,
+        }
+    }
+}
+
+impl Default for BackendRegistry {
+    fn default() -> BackendRegistry {
+        BackendRegistry::probe()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perf::cost::{dense_gemm_cost, sparse_gemm_cost};
+
+    fn amx_only() -> BackendRegistry {
+        BackendRegistry::with_caps(CpuCaps::from_list("amx"))
+    }
+
+    #[test]
+    fn fallback_to_reference_without_any_isa() {
+        let reg = BackendRegistry::with_caps(CpuCaps::none());
+        let sel = reg.select(GemmShape::new(1, 4096, 4096), 0.5, Dtype::Bf16);
+        assert_eq!(sel.backend.kind(), BackendKind::Reference);
+        assert!(!sel.use_sparse);
+        assert_eq!(reg.available().len(), 1, "only ref is available");
+    }
+
+    #[test]
+    fn memory_bound_decode_selects_sparse_amx() {
+        // Llama 3 8B up_proj at batch 1 / 50% sparsity: the Table 1
+        // regime where sparse wins on bandwidth.
+        let reg = amx_only();
+        let shape = GemmShape::new(1, 4096, 14336);
+        let sel = reg.select(shape, 0.5, Dtype::Bf16);
+        assert_eq!(sel.backend.kind(), BackendKind::Amx);
+        assert!(sel.use_sparse, "batch-1 decode must go sparse");
+        // the winning prediction IS the cost model's number
+        let expect = sparse_gemm_cost(1, 4096, 14336, 0.5, reg.machine()).time;
+        assert!((sel.predicted_s - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn compute_bound_batch_selects_dense() {
+        // §7: compute-bound high batch flips the crossover back to dense.
+        let reg = amx_only();
+        let shape = GemmShape::new(256, 4096, 4096);
+        let sel = reg.select(shape, 0.5, Dtype::Bf16);
+        assert_eq!(sel.backend.kind(), BackendKind::Amx);
+        assert!(!sel.use_sparse, "compute-bound batch must go dense");
+        let expect = dense_gemm_cost(256, 4096, 4096, reg.machine()).time;
+        assert!((sel.predicted_s - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn selection_matches_cost_model_across_grid() {
+        // select()'s sparse/dense decision must equal the sign of the
+        // cost-model comparison at every (batch, sparsity) grid point.
+        let reg = amx_only();
+        let m = reg.machine();
+        for &batch in &[1usize, 8, 32, 128, 256] {
+            for &s in &[0.2f64, 0.5, 0.8] {
+                let sel = reg.select(GemmShape::new(batch, 4096, 4096), s, Dtype::Bf16);
+                let dense = dense_gemm_cost(batch, 4096, 4096, m).time;
+                let sparse = sparse_gemm_cost(batch, 4096, 4096, s, m).time;
+                assert_eq!(
+                    sel.use_sparse,
+                    sparse < dense,
+                    "batch {batch} sparsity {s}: selection disagrees with cost model"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn avx_only_host_selects_avx() {
+        let reg = BackendRegistry::with_caps(CpuCaps::from_list("avx512"));
+        let sel = reg.select(GemmShape::new(1, 4096, 14336), 0.5, Dtype::Bf16);
+        assert_eq!(sel.backend.kind(), BackendKind::Avx);
+        assert!(sel.use_sparse);
+    }
+
+    #[test]
+    fn int8_needs_amx_int8() {
+        let caps = CpuCaps::from_list("amx-bf16"); // BF16 tiles only
+        let reg = BackendRegistry::with_caps(caps);
+        let sel = reg.select(GemmShape::new(1, 4096, 4096), 0.5, Dtype::Int8);
+        assert_eq!(
+            sel.backend.kind(),
+            BackendKind::Reference,
+            "no amx-int8, no avx512 → reference fallback"
+        );
+        let full = BackendRegistry::with_caps(CpuCaps::from_list("amx"));
+        let sel = full.select(GemmShape::new(1, 4096, 4096), 0.5, Dtype::Int8);
+        assert_eq!(sel.backend.kind(), BackendKind::Amx);
+    }
+
+    #[test]
+    fn resolve_pins_and_auto_delegates() {
+        let reg = BackendRegistry::with_caps(CpuCaps::all());
+        let shape = GemmShape::new(1, 4096, 14336);
+        let pinned = reg.resolve(BackendChoice::Avx, shape, 0.5, Dtype::Bf16);
+        assert_eq!(pinned.backend.kind(), BackendKind::Avx);
+        assert!(pinned.use_sparse, "sparse beats dense within AVX at batch 1");
+        let auto = reg.resolve(BackendChoice::Auto, shape, 0.5, Dtype::Bf16);
+        let direct = reg.select(shape, 0.5, Dtype::Bf16);
+        assert_eq!(auto.backend, direct.backend);
+        assert_eq!(auto.use_sparse, direct.use_sparse);
+        let r = reg.resolve(BackendChoice::Reference, shape, 0.5, Dtype::Bf16);
+        assert_eq!(r.backend.kind(), BackendKind::Reference);
+    }
+
+    #[test]
+    fn dense_weights_select_dense_plan() {
+        let reg = amx_only();
+        let sel = reg.select(GemmShape::new(1, 1024, 1024), 0.0, Dtype::Bf16);
+        assert!(!sel.use_sparse, "zero sparsity must never plan sparse");
+    }
+}

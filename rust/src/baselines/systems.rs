@@ -10,6 +10,10 @@
 //!   proprietary fusion (modeled as a fixed efficiency factor), no AMX.
 //! * **llama.cpp** — dense AVX INT8 kernels, minimal overhead.
 //! * **SparAMX** (ours) — the simulated sparse/dense AMX kernels.
+//!
+//! To *execute* a baseline's kernel class through the unified dispatch
+//! API (not just cost it), wrap it in
+//! [`crate::backend::BaselineBackend`].
 
 use crate::models::llama::ModelConfig;
 use crate::perf::analytic;
@@ -113,10 +117,12 @@ pub fn linear_cost(
     let cost = KernelCost::from_counters(&ctr, m);
     let mut time = cost.time;
     // INT8 on the AVX classes: half the weight-value bytes of bf16
+    // (shared with the AVX backend's prediction so `BaselineBackend`
+    // and `AvxBackend` agree)
     if precision == Precision::Int8
         && matches!(baseline, Baseline::SparAvxSparse | Baseline::DeepSparse)
     {
-        time = (cost.dram_time * 0.5).max(cost.core_time);
+        time = crate::backend::avx::int8_time(&cost);
     }
     match baseline {
         Baseline::PyTorch => time + m.framework_overhead_s,

@@ -1,6 +1,7 @@
 //! Typed runtime configuration for the serving coordinator.
 
 use super::json::Json;
+use crate::backend::BackendChoice;
 
 /// Serving-engine configuration. Loaded from JSON (file or inline) with
 /// defaults matching the paper's evaluation setup.
@@ -29,6 +30,10 @@ pub struct RuntimeConfig {
     /// Admission-queue capacity; requests beyond it are rejected
     /// (backpressure).
     pub queue_capacity: usize,
+    /// Kernel backend directive: `auto` lets the
+    /// [`crate::backend::BackendRegistry`] pick per layer; `amx`, `avx`,
+    /// `ref` pin one backend.
+    pub backend: BackendChoice,
 }
 
 impl Default for RuntimeConfig {
@@ -44,6 +49,7 @@ impl Default for RuntimeConfig {
             batch_window_us: 500,
             port: 7070,
             queue_capacity: 256,
+            backend: BackendChoice::Auto,
         }
     }
 }
@@ -84,6 +90,12 @@ impl RuntimeConfig {
                 }
                 "queue_capacity" => {
                     cfg.queue_capacity = val.as_usize().ok_or("queue_capacity: uint")?
+                }
+                "backend" => {
+                    cfg.backend = val
+                        .as_str()
+                        .ok_or("backend: string")?
+                        .parse::<BackendChoice>()?
                 }
                 other => return Err(format!("unknown config field '{other}'")),
             }
@@ -156,5 +168,14 @@ mod tests {
     #[test]
     fn rejects_wrong_type() {
         assert!(RuntimeConfig::from_json(r#"{"threads": "four"}"#).is_err());
+    }
+
+    #[test]
+    fn parses_backend_choice() {
+        assert_eq!(RuntimeConfig::default().backend, BackendChoice::Auto);
+        let cfg = RuntimeConfig::from_json(r#"{"backend": "avx"}"#).unwrap();
+        assert_eq!(cfg.backend, BackendChoice::Avx);
+        assert!(RuntimeConfig::from_json(r#"{"backend": "mkl"}"#).is_err());
+        assert!(RuntimeConfig::from_json(r#"{"backend": 3}"#).is_err());
     }
 }

@@ -14,11 +14,13 @@
 use super::batcher::AdmissionQueue;
 use super::metrics::Metrics;
 use super::request::{Request, Response};
+use crate::backend::{Backend, BackendRegistry, Dtype, GemmShape, Selection};
 use crate::cfg::RuntimeConfig;
+use crate::log_info;
 use crate::runtime::artifact::Bundle;
-use crate::runtime::executor::{lit_f32, lit_i32, to_f32, Executable, Runtime};
+use crate::runtime::executor::{lit_f32, lit_i32, to_f32, Executable, Literal, Runtime};
 use crate::sparse::prune::magnitude_prune_inplace;
-use anyhow::{anyhow, Context, Result};
+use crate::util::error::{anyhow, Context, Result};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -108,11 +110,19 @@ pub struct Engine {
     v_cache: Vec<f32>,
     slots: Vec<Slot>,
     pub metrics: Arc<Metrics>,
+    /// Kernel-backend selection resolved from `cfg.backend` at load
+    /// time (the paper's automatic linear-layer replacement happens
+    /// once, here — "preprocessing happens once", §7). The PJRT
+    /// artifacts execute the tiny model today; native decode paths take
+    /// the handle in `selection.backend` so new backends drop in
+    /// without touching engine code.
+    selection: Selection,
     cfg: RuntimeConfig,
 }
 
 impl Engine {
-    /// Load artifacts, prune weights, compile executables.
+    /// Load artifacts, prune weights, compile executables, resolve the
+    /// kernel backend.
     pub fn load(rt: &Runtime, bundle: &Bundle, cfg: RuntimeConfig) -> Result<Engine> {
         let geo = Geometry::from_bundle(bundle)?;
         let decode = rt.load_hlo(&bundle.hlo_path("decode_step"))?;
@@ -128,6 +138,19 @@ impl Engine {
             let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
             param_data.push((data, dims));
         }
+        // resolve the kernel backend against the model's widest linear
+        // (hidden × vocab, the LM head) — the shape that dominates a
+        // tiny-model decode step
+        let hidden = bundle.config_usize("hidden").unwrap_or(geo.head_dim * geo.kv_heads);
+        let registry = BackendRegistry::probe();
+        let shape = GemmShape::new(geo.decode_batch, hidden, geo.vocab);
+        let selection = registry.resolve(cfg.backend, shape, cfg.weight_sparsity, Dtype::Bf16);
+        log_info!(
+            "engine backend: {} (caps {}, directive {})",
+            selection.describe(),
+            registry.caps().describe(),
+            cfg.backend
+        );
         let metrics = Arc::new(Metrics::new());
         let slots = (0..geo.decode_batch).map(|_| Slot::empty()).collect();
         Ok(Engine {
@@ -139,6 +162,7 @@ impl Engine {
             param_data,
             slots,
             metrics,
+            selection,
             cfg,
         })
     }
@@ -147,7 +171,17 @@ impl Engine {
         self.geo
     }
 
-    fn param_literals(&self) -> Result<Vec<xla::Literal>> {
+    /// The kernel backend this engine dispatches linears through.
+    pub fn backend(&self) -> &Backend {
+        &self.selection.backend
+    }
+
+    /// The load-time backend selection (plan + modeled time).
+    pub fn selection(&self) -> &Selection {
+        &self.selection
+    }
+
+    fn param_literals(&self) -> Result<Vec<Literal>> {
         self.param_data
             .iter()
             .map(|(data, dims)| lit_f32(data, dims))

@@ -10,7 +10,7 @@ use super::batcher::{AdmissionQueue, AdmitError};
 use super::request::Request;
 use crate::cfg::json::Json;
 use crate::log_info;
-use anyhow::Result;
+use crate::util::error::Result;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicU64, Ordering};

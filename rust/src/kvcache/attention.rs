@@ -1,11 +1,12 @@
 //! Decode attention over the split cache (paper §6): the static segment's
-//! QKᵀ and R·V matmuls run through the **sparse AMX kernel**; the dynamic
-//! tail is dense (it is small and changes every token, so compressing it
-//! would cost more than it saves — §7 "not suitable for dynamic KV").
+//! QKᵀ and R·V matmuls run through the configured [`Backend`]'s sparse
+//! kernel; the dynamic tail is dense (it is small and changes every
+//! token, so compressing it would cost more than it saves — §7 "not
+//! suitable for dynamic KV").
 
 use super::cache::HeadCache;
-use crate::amx::kernels::{ref_gemm_bf16, sparse_amx_gemm_bf16};
 use crate::amx::EventCounters;
+use crate::backend::{Backend, RefBackend};
 use crate::util::bf16::round_f32;
 
 /// Numerically-stable softmax in place.
@@ -26,10 +27,16 @@ pub fn softmax(xs: &mut [f32]) {
     }
 }
 
-/// One query head's decode attention over a [`HeadCache`], using the
-/// sparse kernel for the static segment. Returns the `head_dim` output
-/// and ticks `ctr` with the kernel events (for the Fig 15 cost model).
-pub fn attend_sparse(hc: &HeadCache, q: &[f32], ctr: &mut EventCounters) -> Vec<f32> {
+/// One query head's decode attention over a [`HeadCache`], running the
+/// static segment through `backend`'s sparse kernel. Returns the
+/// `head_dim` output and ticks `ctr` with the kernel events (for the
+/// Fig 15 cost model).
+pub fn attend_sparse(
+    hc: &HeadCache,
+    q: &[f32],
+    backend: &Backend,
+    ctr: &mut EventCounters,
+) -> Vec<f32> {
     assert_eq!(q.len(), hc.head_dim);
     let scale = 1.0 / (hc.head_dim as f32).sqrt();
     let n_static = hc.n_static;
@@ -38,7 +45,7 @@ pub fn attend_sparse(hc: &HeadCache, q: &[f32], ctr: &mut EventCounters) -> Vec<
 
     // QKᵀ static: q (1 × head_dim) × Kᵀ (head_dim × n_static), sparse
     if n_static > 0 {
-        let s = sparse_amx_gemm_bf16(q, 1, &hc.k_static, ctr);
+        let s = backend.sparse_gemm_bf16(q, 1, &hc.k_static, ctr);
         scores[..n_static].copy_from_slice(&s);
     }
     // QKᵀ dynamic tail: dense dot products
@@ -60,7 +67,7 @@ pub fn attend_sparse(hc: &HeadCache, q: &[f32], ctr: &mut EventCounters) -> Vec<
     // R·V static: r (1 × n_static) × V (n_static × head_dim), sparse
     let mut out = vec![0f32; hc.head_dim];
     if n_static > 0 {
-        let o = sparse_amx_gemm_bf16(&scores[..n_static], 1, &hc.v_static, ctr);
+        let o = backend.sparse_gemm_bf16(&scores[..n_static], 1, &hc.v_static, ctr);
         out.copy_from_slice(&o);
     }
     // R·V dynamic tail
@@ -76,7 +83,8 @@ pub fn attend_sparse(hc: &HeadCache, q: &[f32], ctr: &mut EventCounters) -> Vec<
 }
 
 /// Dense-reference attention (the Fig 15 baseline and the numerics
-/// oracle): same math on the *unpruned-layout* dense matrices.
+/// oracle): same math on the *unpruned-layout* dense matrices, through
+/// the reference backend's oracle matmul.
 pub fn attend_dense_ref(
     k: &[f32],
     v: &[f32],
@@ -92,12 +100,12 @@ pub fn attend_dense_ref(
             kt[d * ctx + t] = k[t * head_dim + d];
         }
     }
-    let mut scores = ref_gemm_bf16(q, 1, &kt, head_dim, ctx);
+    let mut scores = RefBackend::matmul_f32(q, 1, &kt, head_dim, ctx);
     for s in scores.iter_mut() {
         *s *= scale;
     }
     softmax(&mut scores);
-    ref_gemm_bf16(&scores, 1, v, ctx, head_dim)
+    RefBackend::matmul_f32(&scores, 1, v, ctx, head_dim)
 }
 
 #[cfg(test)]
@@ -131,12 +139,36 @@ mod tests {
         let q = g.normal_vec(d, 1.0);
         let hc = super::super::cache::HeadCache::from_prefill(&k, &v, ctx, d, 0.0, 0.0);
         let mut ctr = EventCounters::default();
-        let got = attend_sparse(&hc, &q, &mut ctr);
+        let got = attend_sparse(&hc, &q, &Backend::amx(), &mut ctr);
         let want = attend_dense_ref(&k, &v, ctx, d, &q);
         for (a, b) in got.iter().zip(want.iter()) {
             assert!((a - b).abs() < 0.05, "{a} vs {b}");
         }
         assert!(ctr.vpexpand > 0, "static path must use the sparse kernel");
+    }
+
+    #[test]
+    fn attention_backends_agree() {
+        // The attention path must be backend-agnostic: AMX, AVX, and the
+        // reference oracle produce the same output up to bf16 noise.
+        let mut g = XorShift::new(34);
+        let (ctx, d) = (64, 32);
+        let k = g.normal_vec(ctx * d, 1.0);
+        let v = g.normal_vec(ctx * d, 1.0);
+        let q = g.normal_vec(d, 1.0);
+        let hc = super::super::cache::HeadCache::from_prefill(&k, &v, ctx, d, 0.3, 0.5);
+        let mut c_amx = EventCounters::default();
+        let amx = attend_sparse(&hc, &q, &Backend::amx(), &mut c_amx);
+        let mut c_avx = EventCounters::default();
+        let avx = attend_sparse(&hc, &q, &Backend::avx(), &mut c_avx);
+        let mut c_ref = EventCounters::default();
+        let oracle = attend_sparse(&hc, &q, &Backend::reference(), &mut c_ref);
+        for i in 0..d {
+            assert!((amx[i] - avx[i]).abs() < 0.05, "amx vs avx at {i}");
+            assert!((amx[i] - oracle[i]).abs() < 0.05, "amx vs ref at {i}");
+        }
+        assert!(c_amx.tdp_bf16 > 0, "AMX path uses tile compute");
+        assert!(c_avx.tdp_bf16 == 0 && c_avx.avx_fma > 0, "AVX path is vector-only");
     }
 
     #[test]
@@ -157,7 +189,7 @@ mod tests {
         vall.extend_from_slice(&v2);
         let want = attend_dense_ref(&kall, &vall, ctx + 1, d, &q);
         let mut ctr = EventCounters::default();
-        let got = attend_sparse(&hc, &q, &mut ctr);
+        let got = attend_sparse(&hc, &q, &Backend::amx(), &mut ctr);
         for (a, b) in got.iter().zip(want.iter()) {
             assert!((a - b).abs() < 0.05, "{a} vs {b}");
         }
@@ -174,7 +206,7 @@ mod tests {
         let dense = attend_dense_ref(&k, &v, ctx, d, &q);
         let hc = super::super::cache::HeadCache::from_prefill(&k, &v, ctx, d, 0.3, 0.5);
         let mut ctr = EventCounters::default();
-        let pruned = attend_sparse(&hc, &q, &mut ctr);
+        let pruned = attend_sparse(&hc, &q, &Backend::amx(), &mut ctr);
         let rms_base: f32 =
             (dense.iter().map(|x| x * x).sum::<f32>() / d as f32).sqrt();
         let rms_err: f32 = (dense
@@ -194,7 +226,7 @@ mod tests {
     fn empty_cache_attention() {
         let hc = super::super::cache::HeadCache::from_prefill(&[], &[], 0, 8, 0.0, 0.0);
         let mut ctr = EventCounters::default();
-        let out = attend_sparse(&hc, &[1.0; 8], &mut ctr);
+        let out = attend_sparse(&hc, &[1.0; 8], &Backend::amx(), &mut ctr);
         assert_eq!(out, vec![0.0; 8]);
     }
 }

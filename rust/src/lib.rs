@@ -20,6 +20,7 @@
 //! | [`cfg`] | config structs + minimal JSON parser |
 //! | [`sparse`] | bitmap+values format, magnitude pruning, thread partition |
 //! | [`amx`] | AMX tile + AVX-512 instruction simulator and the four kernels |
+//! | [`backend`] | `LinearBackend` dispatch: capability probing, registry, sparsity-aware selection |
 //! | [`perf`] | Sapphire Rapids memory/cost model, pipeline slots, roofline |
 //! | [`models`] | Llama-family shape configs + synthetic weight store |
 //! | [`kvcache`] | §6.2 static-sparse + dynamic-dense KV cache manager |
@@ -32,6 +33,7 @@ pub mod util;
 pub mod cfg;
 pub mod sparse;
 pub mod amx;
+pub mod backend;
 pub mod perf;
 pub mod models;
 pub mod kvcache;

@@ -7,6 +7,8 @@
 //!               weight and KV sparsity (the paper's §6 experiments)
 //!   info      — print artifact + machine-model information
 
+use sparamx::amx::EventCounters;
+use sparamx::backend::{BackendChoice, BackendRegistry, CpuCaps, Dtype, GemmShape};
 use sparamx::cfg::RuntimeConfig;
 use sparamx::coordinator::batcher::AdmissionQueue;
 use sparamx::coordinator::engine::Engine;
@@ -28,8 +30,9 @@ fn main() {
         Some("info") => cmd_info(&args),
         _ => {
             eprintln!(
-                "sparamx {} — usage:\n  sparamx serve    [--artifacts DIR] [--port P] [--sparsity S]\n  sparamx generate [--artifacts DIR] [--max-tokens N] PROMPT...\n  sparamx eval     [--artifacts DIR] [--sparsity S] [--k-sparsity S] [--v-sparsity S] [--int8-kv]\n  sparamx info     [--artifacts DIR] [--cores N]",
-                sparamx::VERSION
+                "sparamx {} — usage:\n  sparamx serve    [--artifacts DIR] [--port P] [--sparsity S] [--backend {b}]\n  sparamx generate [--artifacts DIR] [--max-tokens N] [--backend {b}] PROMPT...\n  sparamx eval     [--artifacts DIR] [--sparsity S] [--k-sparsity S] [--v-sparsity S] [--int8-kv] [--backend {b}]\n  sparamx info     [--artifacts DIR] [--cores N]",
+                sparamx::VERSION,
+                b = BackendChoice::HELP
             );
             2
         }
@@ -46,6 +49,9 @@ fn config_from(args: &Args) -> RuntimeConfig {
     cfg.port = args.get_parse("port", cfg.port);
     cfg.weight_sparsity = args.get_parse("sparsity", cfg.weight_sparsity);
     cfg.max_new_tokens = args.get_parse("max-tokens", cfg.max_new_tokens);
+    if args.options.contains_key("backend") {
+        cfg.backend = args.backend();
+    }
     cfg.validate().expect("config");
     cfg
 }
@@ -120,10 +126,36 @@ fn cmd_eval(args: &Args) -> i32 {
     };
     let chunk: usize = args.get_parse("chunk", 128);
     let limit: usize = args.get_parse("limit", bundle.eval_tokens.len());
-    let r = model.evaluate(&bundle.eval_tokens[..limit.min(bundle.eval_tokens.len())], chunk, kv);
+    // resolve the kernel backend for the projections (auto = registry
+    // selection over the model's widest linear at the actual batch,
+    // i.e. the chunk length). Only the backend is taken from the
+    // selection: the dense-vs-sparse class is then chosen per
+    // projection from each matrix's measured sparsity. Eval is a
+    // modeling run, so caps default to the paper's testbed
+    // (SPARAMX_CAPS still overrides) rather than probing the host.
+    let registry = BackendRegistry::with_caps(CpuCaps::modeled());
+    let shape = GemmShape::new(chunk, model.hidden, model.vocab);
+    let sel = registry.resolve(args.backend(), shape, ws, Dtype::Bf16);
+    let mut ctr = EventCounters::default();
+    let r = model.evaluate_backend(
+        &bundle.eval_tokens[..limit.min(bundle.eval_tokens.len())],
+        chunk,
+        kv,
+        &sel.backend,
+        &mut ctr,
+    );
     println!(
-        "weight_sparsity={ws:.2} k={:.2} v={:.2} int8={} → ppl {:.3} nll {:.4} top1 {:.3} ({} tokens)",
-        kv.k_sparsity, kv.v_sparsity, kv.int8, r.ppl, r.nll, r.top1, r.tokens
+        "backend={} (per-projection dense/sparse) weight_sparsity={ws:.2} k={:.2} v={:.2} int8={} → ppl {:.3} nll {:.4} top1 {:.3} ({} tokens, {} kernel instrs, {} weight B streamed)",
+        sel.backend.name(),
+        kv.k_sparsity,
+        kv.v_sparsity,
+        kv.int8,
+        r.ppl,
+        r.nll,
+        r.top1,
+        r.tokens,
+        ctr.instructions(),
+        ctr.weight_stream_bytes
     );
     0
 }
@@ -151,6 +183,13 @@ fn cmd_info(args: &Args) -> i32 {
         m.freq_ghz,
         m.effective_bw_gbs(),
         m.peak_amx_bf16_flops() / 1e12
+    );
+    let registry = BackendRegistry::probe().with_machine(m);
+    let names: Vec<&str> = registry.available().iter().map(|b| b.name()).collect();
+    println!(
+        "backends: caps [{}], available [{}]",
+        registry.caps().describe(),
+        names.join(", ")
     );
     0
 }

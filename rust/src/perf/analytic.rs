@@ -188,7 +188,8 @@ pub fn gemm_flops(batch: usize, rows: usize, cols: usize) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::amx::kernels::*;
+    use crate::amx::kernels::{DenseWeights, GemmCounters};
+    use crate::backend::{AmxBackend, AvxBackend, LinearBackend};
     use crate::sparse::format::SparseTensor;
     use crate::sparse::prune::magnitude_prune;
     use crate::util::XorShift;
@@ -200,12 +201,13 @@ mod tests {
     #[test]
     fn dense_bf16_matches_simulator_exactly() {
         let mut g = XorShift::new(21);
+        let amx = AmxBackend;
         for &(b, k, n) in &[(1usize, 32usize, 16usize), (1, 64, 48), (4, 96, 80), (17, 32, 32), (33, 64, 16), (40, 50, 37)] {
             let w = rand_mat(&mut g, k * n);
             let x = rand_mat(&mut g, b * k);
             let dw = DenseWeights::pack_f32(&w, k, n);
             let mut sim = GemmCounters::default();
-            dense_amx_gemm_bf16(&x, b, &dw, &mut sim);
+            amx.gemm_bf16(&x, b, &dw, &mut sim);
             let ana = dense_bf16(b, k, n);
             assert_eq!(ana, sim, "shape ({b},{k},{n})");
         }
@@ -214,6 +216,7 @@ mod tests {
     #[test]
     fn sparse_bf16_matches_simulator_exactly() {
         let mut g = XorShift::new(22);
+        let amx = AmxBackend;
         for &(b, k, n, s) in &[
             (1usize, 64usize, 32usize, 0.5f64),
             (2, 96, 48, 0.8),
@@ -225,7 +228,7 @@ mod tests {
             let x = rand_mat(&mut g, b * k);
             let sp = SparseTensor::pack_f32(&w, k, n);
             let mut sim = GemmCounters::default();
-            sparse_amx_gemm_bf16(&x, b, &sp, &mut sim);
+            amx.sparse_gemm_bf16(&x, b, &sp, &mut sim);
             let ana = sparse_bf16(b, k, n, sp.nnz());
             assert_eq!(ana, sim, "shape ({b},{k},{n},{s})");
         }
@@ -240,11 +243,12 @@ mod tests {
             (2, 50, 37, 0.7, 8),
             (3, 32, 160, 0.2, 3),
         ] {
+            let avx = AvxBackend::with_groups(grp);
             let w = magnitude_prune(&rand_mat(&mut g, k * n), s);
             let x = rand_mat(&mut g, b * k);
             let sp = SparseTensor::pack_f32(&w, k, n);
             let mut sim = GemmCounters::default();
-            avx_sparse_gemm_bf16(&x, b, &sp, grp, &mut sim);
+            avx.sparse_gemm_bf16(&x, b, &sp, &mut sim);
             let ana = avx_sparse_bf16(b, k, n, sp.nnz(), grp);
             assert_eq!(ana, sim, "shape ({b},{k},{n},{s},g{grp})");
         }
@@ -253,6 +257,7 @@ mod tests {
     #[test]
     fn int8_matches_simulator_exactly() {
         let mut g = XorShift::new(24);
+        let amx = AmxBackend;
         for &(b, k, n, s) in &[(1usize, 64usize, 32usize, 0.5f64), (5, 128, 48, 0.7), (2, 70, 20, 0.4)] {
             let w: Vec<i8> = (0..k * n)
                 .map(|_| if g.next_f64() < s { 0 } else { (g.below(200) as i32 - 100).max(1) as i8 })
@@ -261,10 +266,10 @@ mod tests {
             let dw: DenseWeights<i8> = DenseWeights::pack(&w, k, n);
             let sp: SparseTensor<i8> = SparseTensor::pack(&w, k, n);
             let mut simd = GemmCounters::default();
-            dense_amx_gemm_int8(&x, b, &dw, &mut simd);
+            amx.gemm_int8(&x, b, &dw, &mut simd);
             assert_eq!(dense_int8(b, k, n), simd, "dense ({b},{k},{n})");
             let mut sims = GemmCounters::default();
-            sparse_amx_gemm_int8(&x, b, &sp, &mut sims);
+            amx.sparse_gemm_int8(&x, b, &sp, &mut sims);
             assert_eq!(sparse_int8(b, k, n, sp.nnz()), sims, "sparse ({b},{k},{n})");
         }
     }

@@ -115,6 +115,23 @@ pub fn sparse_gemm_cost(
     KernelCost::from_counters(&super::analytic::sparse_bf16(batch, rows, cols, nnz), m)
 }
 
+/// Convenience: cost of a dense INT8 GEMM of the given shape.
+pub fn dense_int8_gemm_cost(batch: usize, rows: usize, cols: usize, m: &Machine) -> KernelCost {
+    KernelCost::from_counters(&super::analytic::dense_int8(batch, rows, cols), m)
+}
+
+/// Convenience: cost of a sparse INT8 GEMM at `sparsity` (nnz derived).
+pub fn sparse_int8_gemm_cost(
+    batch: usize,
+    rows: usize,
+    cols: usize,
+    sparsity: f64,
+    m: &Machine,
+) -> KernelCost {
+    let nnz = ((1.0 - sparsity.clamp(0.0, 1.0)) * (rows * cols) as f64).round() as usize;
+    KernelCost::from_counters(&super::analytic::sparse_int8(batch, rows, cols, nnz), m)
+}
+
 /// Convenience: AVX sparse GEMM cost.
 pub fn avx_sparse_gemm_cost(
     batch: usize,
@@ -212,6 +229,16 @@ mod tests {
         let amx = sparse_gemm_cost(32, 4096, 14336, 0.5, &m);
         let avx = avx_sparse_gemm_cost(32, 4096, 14336, 0.5, 16, &m);
         assert!(amx.time < avx.time, "AMX {amx:?} !< AVX {avx:?}");
+    }
+
+    #[test]
+    fn int8_sparse_beats_dense_when_memory_bound() {
+        // Fig 13 regime: Llama 2 7B gate_proj, batch 1, 50% sparse INT8.
+        let m = m32();
+        let d = dense_int8_gemm_cost(1, 4096, 11008, &m);
+        let s = sparse_int8_gemm_cost(1, 4096, 11008, 0.5, &m);
+        assert!(d.memory_bound(), "batch-1 INT8 decode is DRAM bound");
+        assert!(s.time < d.time, "sparse {s:?} !< dense {d:?}");
     }
 
     #[test]

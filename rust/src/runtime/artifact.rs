@@ -2,7 +2,7 @@
 //! `eval_tokens.bin` produced by `python/compile/aot.py`.
 
 use crate::cfg::json::Json;
-use anyhow::{anyhow, bail, Context, Result};
+use crate::util::error::{anyhow, bail, Context, Result};
 use std::io::Read;
 use std::path::{Path, PathBuf};
 

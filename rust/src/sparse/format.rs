@@ -193,8 +193,22 @@ impl<T: Element> SparseTensor<T> {
         (k < self.rows && n < self.cols).then_some((k, n))
     }
 
-    /// Pack a dense row-major `rows x cols` matrix (`w[k * cols + n]`).
+    /// Pack a dense row-major `rows x cols` matrix (`w[k * cols + n]`),
+    /// storing only the non-zero elements (the compressed format).
     pub fn pack(w: &[T], rows: usize, cols: usize) -> SparseTensor<T> {
+        Self::pack_impl(w, rows, cols, false)
+    }
+
+    /// Pack *all* logical elements — bitmap fully set inside the logical
+    /// bounds, zeros stored explicitly. This is the operand layout a
+    /// vector kernel uses to execute a matrix *densely*: every value
+    /// streams, so event counters reflect dense traffic (used by the
+    /// AVX backend's dense entry point; `sparsity()` reports 0).
+    pub fn pack_dense(w: &[T], rows: usize, cols: usize) -> SparseTensor<T> {
+        Self::pack_impl(w, rows, cols, true)
+    }
+
+    fn pack_impl(w: &[T], rows: usize, cols: usize, keep_zeros: bool) -> SparseTensor<T> {
         assert_eq!(w.len(), rows * cols, "shape mismatch");
         let order = TileOrder::for_elem::<T>();
         let rows_padded = rows.div_ceil(order.k_per_tile) * order.k_per_tile;
@@ -218,7 +232,7 @@ impl<T: Element> SparseTensor<T> {
                         let n = cb * order.cols_per_tile + c / v;
                         if k < rows && n < cols {
                             let x = w[k * cols + n];
-                            if !x.is_zero() {
+                            if keep_zeros || !x.is_zero() {
                                 word |= 1 << c;
                                 values.push(x);
                             }
@@ -276,6 +290,12 @@ impl SparseTensor<Bf16> {
     pub fn pack_f32(w: &[f32], rows: usize, cols: usize) -> SparseTensor<Bf16> {
         let wb: Vec<Bf16> = w.iter().map(|&x| Bf16::from_f32(x)).collect();
         SparseTensor::pack(&wb, rows, cols)
+    }
+
+    /// [`SparseTensor::pack_dense`] from f32 (all elements stored).
+    pub fn pack_dense_f32(w: &[f32], rows: usize, cols: usize) -> SparseTensor<Bf16> {
+        let wb: Vec<Bf16> = w.iter().map(|&x| Bf16::from_f32(x)).collect();
+        SparseTensor::pack_dense(&wb, rows, cols)
     }
 
     /// Dense matrix as f32 (reference path).
@@ -400,6 +420,20 @@ mod tests {
         let sp = SparseTensor::pack_f32(&w, rows, cols);
         assert_eq!(sp.tile_metadata(0)[0], 0b10); // row 0, bit 1
         assert_eq!(sp.tile_pos_to_kn(0, 0, 0, 1), Some((1, 0)));
+    }
+
+    #[test]
+    fn pack_dense_streams_every_element() {
+        let (rows, cols) = (64, 32);
+        let w = random_pruned(rows, cols, 0.5, 6);
+        let full = SparseTensor::pack_f32(&w, rows, cols); // compressed
+        let all: Vec<Bf16> = w.iter().map(|&x| Bf16::from_f32(x)).collect();
+        let dense = SparseTensor::pack_dense(&all, rows, cols);
+        assert_eq!(dense.nnz(), rows * cols, "every element stored");
+        assert_eq!(dense.sparsity(), 0.0);
+        assert!(dense.nnz() > full.nnz());
+        // reconstruction identical either way
+        assert_eq!(dense.to_dense_f32(), full.to_dense_f32());
     }
 
     #[test]

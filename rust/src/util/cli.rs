@@ -75,6 +75,18 @@ impl Args {
         self.switches.iter().any(|s| s == switch)
     }
 
+    /// The `--backend {auto,amx,avx,ref}` directive shared by the
+    /// `sparamx` binary and the examples; defaults to `auto` (registry
+    /// selection). Panics with the accepted spellings on a bad value.
+    pub fn backend(&self) -> crate::backend::BackendChoice {
+        match self.options.get("backend") {
+            None => crate::backend::BackendChoice::Auto,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|e: String| panic!("--backend={v}: {e}")),
+        }
+    }
+
     /// Comma-separated list option, e.g. `--cores 8,16,32`.
     pub fn get_list<T: std::str::FromStr>(&self, key: &str, default: &[T]) -> Vec<T>
     where
@@ -145,5 +157,19 @@ mod tests {
     fn malformed_typed_option_panics() {
         let a = parse("x --iters abc");
         let _ = a.get_parse::<u32>("iters", 1);
+    }
+
+    #[test]
+    fn backend_flag_parses_with_auto_default() {
+        use crate::backend::BackendChoice;
+        assert_eq!(parse("run").backend(), BackendChoice::Auto);
+        assert_eq!(parse("run --backend amx").backend(), BackendChoice::Amx);
+        assert_eq!(parse("run --backend=ref").backend(), BackendChoice::Reference);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown backend")]
+    fn backend_flag_rejects_unknown() {
+        let _ = parse("run --backend mkl").backend();
     }
 }

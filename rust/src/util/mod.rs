@@ -1,13 +1,13 @@
 //! Shared substrates: PRNG, bf16 numerics, statistics, a scoped thread
-//! pool, a tiny CLI argument parser, and leveled logging.
+//! pool, a tiny CLI argument parser, leveled logging, and error handling.
 //!
-//! These exist because the build is fully offline: the only vendored crates
-//! are `xla` and `anyhow`, so the usual ecosystem pieces (rand, half,
-//! rayon, clap, criterion) are reimplemented here at the scale this
-//! project needs.
+//! These exist because the build is fully offline: no crates are vendored,
+//! so the usual ecosystem pieces (rand, half, rayon, clap, criterion,
+//! anyhow) are reimplemented here at the scale this project needs.
 
 pub mod prng;
 pub mod bf16;
+pub mod error;
 pub mod stats;
 pub mod threadpool;
 pub mod cli;

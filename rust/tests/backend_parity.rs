@@ -1,0 +1,152 @@
+//! Backend parity matrix: every [`LinearBackend`] implementation must
+//! agree (within BF16/INT8 rounding) on random (shape, sparsity, dtype)
+//! combinations, and the registry must fall back / cross over exactly
+//! as the cost model predicts.
+
+use sparamx::amx::kernels::{DenseWeights, GemmCounters};
+use sparamx::backend::{
+    Backend, BackendChoice, BackendKind, BackendRegistry, CpuCaps, Dtype, GemmShape,
+};
+use sparamx::perf::cost::{dense_gemm_cost, sparse_gemm_cost};
+use sparamx::sparse::format::SparseTensor;
+use sparamx::sparse::prune::magnitude_prune;
+use sparamx::util::XorShift;
+
+fn backends() -> Vec<Backend> {
+    vec![Backend::amx(), Backend::avx(), Backend::reference()]
+}
+
+#[test]
+fn bf16_backends_agree_across_shape_sparsity_matrix() {
+    let mut g = XorShift::new(2001);
+    for case in 0..14 {
+        let batch = 1 + g.below(6);
+        let rows = 1 + g.below(110);
+        let cols = 1 + g.below(90);
+        let sparsity = g.next_f64();
+        let w = magnitude_prune(&g.normal_vec(rows * cols, 1.0), sparsity);
+        let x = g.normal_vec(batch * rows, 1.0);
+        let sp = SparseTensor::pack_f32(&w, rows, cols);
+        let dw = DenseWeights::pack_f32(&w, rows, cols);
+        let tol = 0.03 * (rows as f32).sqrt().max(1.0);
+
+        // reference output from the ref backend's sparse entry point
+        let mut rctr = GemmCounters::default();
+        let want = Backend::reference().sparse_gemm_bf16(&x, batch, &sp, &mut rctr);
+
+        for b in backends() {
+            let mut c1 = GemmCounters::default();
+            let got_sparse = b.sparse_gemm_bf16(&x, batch, &sp, &mut c1);
+            let mut c2 = GemmCounters::default();
+            let got_dense = b.gemm_bf16(&x, batch, &dw, &mut c2);
+            assert_eq!(got_sparse.len(), want.len());
+            assert_eq!(got_dense.len(), want.len());
+            for i in 0..want.len() {
+                assert!(
+                    (got_sparse[i] - want[i]).abs() <= tol + want[i].abs() * 0.03,
+                    "case {case} {} sparse idx {i}: {} vs {}",
+                    b.name(),
+                    got_sparse[i],
+                    want[i]
+                );
+                assert!(
+                    (got_dense[i] - want[i]).abs() <= tol + want[i].abs() * 0.03,
+                    "case {case} {} dense idx {i}: {} vs {}",
+                    b.name(),
+                    got_dense[i],
+                    want[i]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn int8_backends_agree_exactly() {
+    let mut g = XorShift::new(2002);
+    for _case in 0..8 {
+        let batch = 1 + g.below(4);
+        let rows = 1 + g.below(100);
+        let cols = 1 + g.below(60);
+        let sparsity = g.next_f64() * 0.8;
+        let w: Vec<i8> = (0..rows * cols)
+            .map(|_| {
+                if g.next_f64() < sparsity {
+                    0
+                } else {
+                    (g.below(200) as i32 - 100) as i8
+                }
+            })
+            .collect();
+        let x: Vec<i8> = (0..batch * rows).map(|_| (g.below(200) as i32 - 100) as i8).collect();
+        let sp: SparseTensor<i8> = SparseTensor::pack(&w, rows, cols);
+        let dw: DenseWeights<i8> = DenseWeights::pack(&w, rows, cols);
+
+        let mut rctr = GemmCounters::default();
+        let want = Backend::reference().sparse_gemm_int8(&x, batch, &sp, &mut rctr);
+        for b in backends() {
+            let mut c1 = GemmCounters::default();
+            assert_eq!(b.sparse_gemm_int8(&x, batch, &sp, &mut c1), want, "{} sparse", b.name());
+            let mut c2 = GemmCounters::default();
+            assert_eq!(b.gemm_int8(&x, batch, &dw, &mut c2), want, "{} dense", b.name());
+        }
+    }
+}
+
+#[test]
+fn registry_falls_back_to_ref_without_amx_or_avx() {
+    let reg = BackendRegistry::with_caps(CpuCaps::none());
+    let sel = reg.select(GemmShape::new(1, 4096, 14336), 0.5, Dtype::Bf16);
+    assert_eq!(sel.backend.kind(), BackendKind::Reference);
+    // and the pinned directives still resolve
+    for choice in [BackendChoice::Amx, BackendChoice::Avx, BackendChoice::Reference] {
+        let pinned = reg.resolve(choice, GemmShape::new(1, 256, 256), 0.5, Dtype::Bf16);
+        assert_eq!(format!("{choice}") == "ref", pinned.backend.kind() == BackendKind::Reference);
+    }
+}
+
+#[test]
+fn selection_reproduces_cost_model_crossover() {
+    // The paper's Table 2 / §7 story end-to-end: batch-1 decode of the
+    // Llama 3 8B up_proj goes sparse; batch-256 (compute-bound) goes
+    // dense — and the predicted times are exactly the cost model's.
+    let reg = BackendRegistry::with_caps(CpuCaps::from_list("amx"));
+    let m = reg.machine();
+
+    let decode = reg.select(GemmShape::new(1, 4096, 14336), 0.5, Dtype::Bf16);
+    assert_eq!(decode.backend.kind(), BackendKind::Amx);
+    assert!(decode.use_sparse);
+    let sparse_cost = sparse_gemm_cost(1, 4096, 14336, 0.5, m).time;
+    let dense_cost = dense_gemm_cost(1, 4096, 14336, m).time;
+    assert!((decode.predicted_s - sparse_cost).abs() < 1e-12);
+    assert!(sparse_cost < dense_cost, "crossover premise");
+
+    let batched = reg.select(GemmShape::new(256, 4096, 4096), 0.5, Dtype::Bf16);
+    assert!(!batched.use_sparse);
+    let dense256 = dense_gemm_cost(256, 4096, 4096, m).time;
+    assert!((batched.predicted_s - dense256).abs() < 1e-12);
+}
+
+#[test]
+fn executed_counters_match_selected_plan_prediction_inputs() {
+    // select() says "sparse on AMX"; running that plan must actually
+    // stream fewer weight bytes than the dense plan it beat.
+    let mut g = XorShift::new(2003);
+    let (rows, cols) = (256usize, 128usize);
+    let w = magnitude_prune(&g.normal_vec(rows * cols, 1.0), 0.7);
+    let x = g.normal_vec(rows, 1.0);
+    let reg = BackendRegistry::with_caps(CpuCaps::from_list("amx"));
+    let sel = reg.select(GemmShape::new(1, rows, cols), 0.7, Dtype::Bf16);
+    assert!(sel.use_sparse);
+
+    let sp = SparseTensor::pack_f32(&w, rows, cols);
+    let dw = DenseWeights::pack_f32(&w, rows, cols);
+    let mut cs = GemmCounters::default();
+    sel.backend.sparse_gemm_bf16(&x, 1, &sp, &mut cs);
+    let mut cd = GemmCounters::default();
+    sel.backend.gemm_bf16(&x, 1, &dw, &mut cd);
+    assert!(
+        cs.weight_stream_bytes < cd.weight_stream_bytes,
+        "selected sparse plan must move fewer weight bytes"
+    );
+}

@@ -14,6 +14,10 @@ use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
 fn artifacts_dir() -> Option<String> {
+    if cfg!(not(feature = "pjrt")) {
+        eprintln!("skipping: built without the pjrt feature (stub executor)");
+        return None;
+    }
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     dir.join("manifest.json").exists().then(|| dir.to_string_lossy().into_owned())
 }
@@ -160,7 +164,7 @@ fn eval_logits_artifact_agrees_with_rust_forward() {
         .unwrap();
     let tokens: Vec<i32> = bundle.eval_tokens[..eval_len].iter().map(|&b| b as i32).collect();
 
-    let mut inputs: Vec<xla::Literal> = bundle
+    let mut inputs: Vec<sparamx::runtime::executor::Literal> = bundle
         .params
         .iter()
         .map(|t| {

@@ -13,6 +13,10 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
 
 fn artifacts_dir() -> Option<String> {
+    if cfg!(not(feature = "pjrt")) {
+        eprintln!("skipping: built without the pjrt feature (stub executor)");
+        return None;
+    }
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     dir.join("manifest.json")
         .exists()

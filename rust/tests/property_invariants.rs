@@ -10,7 +10,8 @@
 //!  P6  batcher: FIFO, no loss, no duplication under concurrency
 //!  P7  attention: softmax-weighted output stays in the convex hull of V
 
-use sparamx::amx::kernels::*;
+use sparamx::amx::kernels::{DenseWeights, GemmCounters};
+use sparamx::backend::{Backend, RefBackend};
 use sparamx::coordinator::batcher::AdmissionQueue;
 use sparamx::coordinator::request::Request;
 use sparamx::perf::analytic;
@@ -47,22 +48,24 @@ fn p1_pack_roundtrip_any_shape() {
 #[test]
 fn p2_kernels_agree_with_reference() {
     let mut g = XorShift::new(1002);
+    let amx = Backend::amx();
     for case in 0..12 {
         let (batch, rows, cols, s) = rand_case(&mut g);
         let batch = batch.min(8);
         let w = magnitude_prune(&g.normal_vec(rows * cols, 1.0), s);
         let x = g.normal_vec(batch * rows, 1.0);
-        let want = ref_gemm_bf16(&x, batch, &w, rows, cols);
+        let want = RefBackend::matmul_f32(&x, batch, &w, rows, cols);
         let tol = 0.03 * (rows as f32).sqrt().max(1.0);
 
         let sp = SparseTensor::pack_f32(&w, rows, cols);
         let mut c1 = GemmCounters::default();
-        let got_s = sparse_amx_gemm_bf16(&x, batch, &sp, &mut c1);
+        let got_s = amx.sparse_gemm_bf16(&x, batch, &sp, &mut c1);
         let dw = DenseWeights::pack_f32(&w, rows, cols);
         let mut c2 = GemmCounters::default();
-        let got_d = dense_amx_gemm_bf16(&x, batch, &dw, &mut c2);
+        let got_d = amx.gemm_bf16(&x, batch, &dw, &mut c2);
+        let avx = Backend::avx_with_groups(1 + g.below(8));
         let mut c3 = GemmCounters::default();
-        let got_a = avx_sparse_gemm_bf16(&x, batch, &sp, 1 + g.below(8), &mut c3);
+        let got_a = avx.sparse_gemm_bf16(&x, batch, &sp, &mut c3);
         for i in 0..want.len() {
             for (name, got) in [("sparse", &got_s), ("dense", &got_d), ("avx", &got_a)] {
                 assert!(
@@ -92,6 +95,7 @@ fn p3_partition_offsets_match_scan() {
 #[test]
 fn p4_analytic_equals_simulator_on_random_shapes() {
     let mut g = XorShift::new(1004);
+    let amx = Backend::amx();
     for case in 0..10 {
         let (batch, rows, cols, s) = rand_case(&mut g);
         let batch = batch.min(40);
@@ -99,7 +103,7 @@ fn p4_analytic_equals_simulator_on_random_shapes() {
         let x = g.normal_vec(batch * rows, 1.0);
         let sp = SparseTensor::pack_f32(&w, rows, cols);
         let mut sim = GemmCounters::default();
-        sparse_amx_gemm_bf16(&x, batch, &sp, &mut sim);
+        amx.sparse_gemm_bf16(&x, batch, &sp, &mut sim);
         assert_eq!(
             analytic::sparse_bf16(batch, rows, cols, sp.nnz()),
             sim,
@@ -107,7 +111,7 @@ fn p4_analytic_equals_simulator_on_random_shapes() {
         );
         let dw = DenseWeights::pack_f32(&w, rows, cols);
         let mut simd = GemmCounters::default();
-        dense_amx_gemm_bf16(&x, batch, &dw, &mut simd);
+        amx.gemm_bf16(&x, batch, &dw, &mut simd);
         assert_eq!(analytic::dense_bf16(batch, rows, cols), simd);
     }
 }
@@ -187,7 +191,8 @@ fn p7_attention_output_in_value_hull() {
             &k, &v, ctx, hd, g.next_f64() * 0.5, g.next_f64() * 0.5,
         );
         let mut ctr = sparamx::amx::EventCounters::default();
-        let out = sparamx::kvcache::attention::attend_sparse(&hc, &q, &mut ctr);
+        let out =
+            sparamx::kvcache::attention::attend_sparse(&hc, &q, &Backend::amx(), &mut ctr);
         // softmax-weighted mix of (pruned) V rows stays within min/max
         // of each coordinate of the pruned V, with bf16 slack
         let vp = hc.v_static.to_dense_f32();
