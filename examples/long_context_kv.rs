@@ -83,7 +83,11 @@ fn main() {
         )
         .time)
         * layers_heads as f64;
-    let dense_t = (KernelCost::from_counters(&sparamx::perf::analytic::dense_bf16(1, hd, big_ctx), &m).time
+    let dense_t = (KernelCost::from_counters(
+        &sparamx::perf::analytic::dense_bf16(1, hd, big_ctx),
+        &m,
+    )
+    .time
         + KernelCost::from_counters(&sparamx::perf::analytic::dense_bf16(1, big_ctx, hd), &m).time)
         * layers_heads as f64;
     println!(

@@ -1,6 +1,7 @@
 //! End-to-end serving driver (the DESIGN.md §6 validation run):
-//! loads the build-time-trained tiny model through the PJRT runtime,
-//! runs the continuous-batching engine over a workload of prompts, and
+//! loads the build-time-trained tiny model, compiles its per-layer
+//! decode plan, runs the continuous-batching engine over a workload of
+//! prompts entirely on the native kernel path (no PJRT required), and
 //! reports latency + throughput, plus the modeled Sapphire Rapids
 //! speedup of the sparse configuration.
 //!
@@ -16,7 +17,6 @@ use sparamx::coordinator::request::Request;
 use sparamx::models::ModelConfig;
 use sparamx::perf::Machine;
 use sparamx::runtime::artifact::Bundle;
-use sparamx::runtime::executor::Runtime;
 use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
@@ -24,17 +24,17 @@ fn main() -> sparamx::util::error::Result<()> {
     let cfg = RuntimeConfig {
         weight_sparsity: 0.5,
         max_new_tokens: 24,
+        k_sparsity: 0.0,
+        v_sparsity: 0.0,
         ..Default::default()
     };
     let bundle = Bundle::load(&cfg.artifacts_dir)?;
-    let rt = Runtime::cpu()?;
-    println!("PJRT platform: {}", rt.platform());
-    let mut engine = Engine::load(&rt, &bundle, cfg.clone())?;
+    let mut engine = Engine::load_native(&bundle, cfg.clone())?;
     println!(
-        "engine: {} decode slots, weights pruned to {:.0}%, backend {}",
+        "engine: {} decode slots, weights pruned to {:.0}%, {}",
         engine.geometry().decode_batch,
         cfg.weight_sparsity * 100.0,
-        engine.backend().name()
+        engine.describe()
     );
 
     // workload: 12 prompts drawn from the corpus grammar
@@ -76,6 +76,13 @@ fn main() -> sparamx::util::error::Result<()> {
         );
     }
     println!("\n{}", engine.metrics.report());
+    let ev = engine.kernel_events();
+    println!(
+        "kernel events: {} instrs, {} weight B streamed ({} decode path)",
+        ev.instructions(),
+        ev.weight_stream_bytes,
+        engine.engine_path()
+    );
     println!(
         "throughput: {:.1} tokens/s over {} requests in {:.2} s (1-core CPU container)",
         total_tokens as f64 / wall,

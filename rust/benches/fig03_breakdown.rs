@@ -2,7 +2,9 @@
 //! Llama 3 8B across context lengths. Paper shape: linear layers
 //! dominate at short contexts; attention grows with context.
 
-use sparamx::baselines::systems::{attention_cost, linear_stack_cost, other_cost, Baseline, Precision};
+use sparamx::baselines::systems::{
+    attention_cost, linear_stack_cost, other_cost, Baseline, Precision,
+};
 use sparamx::bench::harness::{report_header, report_row};
 use sparamx::models::ModelConfig;
 use sparamx::perf::Machine;

@@ -672,10 +672,22 @@ where
             }
             for kc in 0..k_chunks {
                 amx.config(4, m_hi, kp);
-                amx.tileloadd(4, &a[m0 * rows_padded + kc * kp..], rows_padded, LoadClass::Input, ctr);
+                amx.tileloadd(
+                    4,
+                    &a[m0 * rows_padded + kc * kp..],
+                    rows_padded,
+                    LoadClass::Input,
+                    ctr,
+                );
                 if m_lo > 0 {
                     amx.config(5, m_lo, kp);
-                    amx.tileloadd(5, &a[(m0 + 16) * rows_padded + kc * kp..], rows_padded, LoadClass::Input, ctr);
+                    amx.tileloadd(
+                        5,
+                        &a[(m0 + 16) * rows_padded + kc * kp..],
+                        rows_padded,
+                        LoadClass::Input,
+                        ctr,
+                    );
                 }
                 amx.config(6, 16, 64);
                 load_weight_tile(&mut amx, 6, n0 / 16, kc, ctr);
@@ -792,7 +804,9 @@ mod tests {
     #[test]
     fn dense_kernel_matches_reference() {
         let mut g = XorShift::new(10);
-        for &(batch, rows, cols) in &[(1usize, 64usize, 32usize), (4, 96, 48), (17, 32, 16), (33, 64, 80)] {
+        for &(batch, rows, cols) in
+            &[(1usize, 64usize, 32usize), (4, 96, 48), (17, 32, 16), (33, 64, 80)]
+        {
             let w = rand_mat(&mut g, rows * cols);
             let x = rand_mat(&mut g, batch * rows);
             let dw = DenseWeights::pack_f32(&w, rows, cols);

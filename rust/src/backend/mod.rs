@@ -310,6 +310,54 @@ impl Backend {
     }
 }
 
+/// A weight matrix packed once into the operand class one backend's
+/// kernel consumes — the single place the dense-vs-sparse packing
+/// decision (including the AVX dense-as-stream special case) lives, so
+/// the tinyforward dispatch and the decode-plan compiler cannot drift.
+pub enum PackedOperand {
+    /// Bitmap+values stream for the sparse kernel class.
+    Sparse(SparseTensor),
+    /// Tile stream for the dense kernel class.
+    Dense(DenseWeights<Bf16>),
+}
+
+impl PackedOperand {
+    /// Pack `w` (`rows × cols`, row-major f32) for `backend`'s
+    /// `use_sparse` kernel class. Dense-class operands for the AVX
+    /// backend are cached as an all-elements sparse stream
+    /// ([`AvxBackend`] executes dense matrices as a value stream and
+    /// would otherwise re-convert the tile layout on every call).
+    pub fn pack_f32(
+        backend: &Backend,
+        w: &[f32],
+        rows: usize,
+        cols: usize,
+        use_sparse: bool,
+    ) -> PackedOperand {
+        if use_sparse {
+            PackedOperand::Sparse(SparseTensor::pack_f32(w, rows, cols))
+        } else if backend.kind() == BackendKind::Avx {
+            PackedOperand::Sparse(SparseTensor::pack_dense_f32(w, rows, cols))
+        } else {
+            PackedOperand::Dense(DenseWeights::pack_f32(w, rows, cols))
+        }
+    }
+
+    /// Dispatch one BF16 GEMM on the packed operand through `backend`.
+    pub fn gemm_bf16(
+        &self,
+        backend: &Backend,
+        x: &[f32],
+        batch: usize,
+        ctr: &mut EventCounters,
+    ) -> Vec<f32> {
+        match self {
+            PackedOperand::Sparse(sp) => backend.sparse_gemm_bf16(x, batch, sp, ctr),
+            PackedOperand::Dense(dw) => backend.gemm_bf16(x, batch, dw, ctr),
+        }
+    }
+}
+
 impl fmt::Debug for Backend {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(f, "Backend({})", self.name())

@@ -13,6 +13,7 @@
 
 use super::{Backend, BackendChoice, BackendKind, CpuCaps, Dtype, GemmShape};
 use crate::perf::Machine;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Outcome of one selection: which backend, which kernel class, and the
 /// modeled time that won.
@@ -42,6 +43,12 @@ pub struct BackendRegistry {
     caps: CpuCaps,
     machine: Machine,
     backends: Vec<Backend>,
+    /// Selections computed through this registry (`select` + pinned
+    /// `resolve`). Lets tests assert selection happens at model load
+    /// and never in the token loop (ROADMAP invariant): snapshot after
+    /// plan compilation, decode, snapshot again — any re-selection on
+    /// the serving path ticks this counter.
+    resolutions: AtomicU64,
 }
 
 impl BackendRegistry {
@@ -57,7 +64,13 @@ impl BackendRegistry {
             caps,
             machine: Machine::default(),
             backends: vec![Backend::amx(), Backend::avx(), Backend::reference()],
+            resolutions: AtomicU64::new(0),
         }
+    }
+
+    /// How many selections this registry has computed so far.
+    pub fn selections_resolved(&self) -> u64 {
+        self.resolutions.load(Ordering::Relaxed)
     }
 
     /// Use a different modeled machine for selection.
@@ -95,6 +108,7 @@ impl BackendRegistry {
 
     /// Pick the fastest eligible (backend, plan) pair for one layer.
     pub fn select(&self, shape: GemmShape, sparsity: f64, dtype: Dtype) -> Selection {
+        self.resolutions.fetch_add(1, Ordering::Relaxed);
         let mut best: Option<Selection> = None;
         for b in &self.backends {
             if b.kind() == BackendKind::Reference {
@@ -132,11 +146,13 @@ impl BackendRegistry {
         dtype: Dtype,
     ) -> Selection {
         let kind = match choice {
+            // select() counts the resolution itself
             BackendChoice::Auto => return self.select(shape, sparsity, dtype),
             BackendChoice::Amx => BackendKind::Amx,
             BackendChoice::Avx => BackendKind::Avx,
             BackendChoice::Reference => BackendKind::Reference,
         };
+        self.resolutions.fetch_add(1, Ordering::Relaxed);
         let backend = self
             .get(kind)
             .expect("standard inventory always holds amx/avx/ref");

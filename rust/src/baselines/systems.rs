@@ -190,7 +190,8 @@ mod tests {
             ModelConfig::llama3_8b(),
         ] {
             let py = decode_step_cost(&cfg, Baseline::PyTorch, Precision::Bf16, 1, 512, 0.0, &m);
-            let ours = decode_step_cost(&cfg, Baseline::SparAmxSparse, Precision::Bf16, 1, 512, 0.5, &m);
+            let ours =
+                decode_step_cost(&cfg, Baseline::SparAmxSparse, Precision::Bf16, 1, 512, 0.5, &m);
             let speedup = py / ours;
             assert!(
                 speedup > 1.05 && speedup < 2.2,
@@ -232,9 +233,11 @@ mod tests {
         // INT8 sparse kernel wins at batch ≥ 16.
         let m = m32();
         let cfg = ModelConfig::llama2_7b();
-        let ours_b1 = decode_step_cost(&cfg, Baseline::SparAmxSparse, Precision::Int8, 1, 2, 0.5, &m);
+        let ours_b1 =
+            decode_step_cost(&cfg, Baseline::SparAmxSparse, Precision::Int8, 1, 2, 0.5, &m);
         let ds_b1 = decode_step_cost(&cfg, Baseline::DeepSparse, Precision::Int8, 1, 2, 0.5, &m);
-        let ours_b32 = decode_step_cost(&cfg, Baseline::SparAmxSparse, Precision::Int8, 32, 2, 0.5, &m);
+        let ours_b32 =
+            decode_step_cost(&cfg, Baseline::SparAmxSparse, Precision::Int8, 32, 2, 0.5, &m);
         let ds_b32 = decode_step_cost(&cfg, Baseline::DeepSparse, Precision::Int8, 32, 2, 0.5, &m);
         // throughput = batch / time
         let thr = |b: f64, t: f64| b / t;

@@ -6,4 +6,4 @@ pub mod json;
 pub mod runtime_config;
 
 pub use json::Json;
-pub use runtime_config::RuntimeConfig;
+pub use runtime_config::{EngineChoice, RuntimeConfig};

@@ -2,6 +2,62 @@
 
 use super::json::Json;
 use crate::backend::BackendChoice;
+use std::fmt;
+
+/// Which serving path runs the decode loop (`--engine` / config
+/// `"engine"`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum EngineChoice {
+    /// Currently always resolves to [`EngineChoice::Native`]: the PJRT
+    /// executor never wins auto-selection — it must be requested
+    /// explicitly (`--engine pjrt`), since it needs the `pjrt` feature
+    /// build plus a compiled artifact bundle. The variant exists so the
+    /// default can grow artifact-sensitive resolution without a config
+    /// break.
+    #[default]
+    Auto,
+    /// Plan-compiled native decode: every linear runs the selected
+    /// kernel backend end-to-end, no PJRT executor on the token path.
+    Native,
+    /// The AOT PJRT executables (requires the `pjrt` feature build).
+    Pjrt,
+}
+
+impl EngineChoice {
+    /// All accepted spellings, for help text.
+    pub const HELP: &'static str = "auto|native|pjrt";
+
+    /// Resolve the directive: `auto` serves natively — the PJRT
+    /// executor is opt-in only (it needs the `pjrt` feature and a
+    /// compiled artifact bundle).
+    pub fn resolved_native(self) -> bool {
+        !matches!(self, EngineChoice::Pjrt)
+    }
+}
+
+impl std::str::FromStr for EngineChoice {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<EngineChoice, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Ok(EngineChoice::Auto),
+            "native" => Ok(EngineChoice::Native),
+            "pjrt" => Ok(EngineChoice::Pjrt),
+            other => Err(format!("unknown engine '{other}' (expected {})", Self::HELP)),
+        }
+    }
+}
+
+impl fmt::Display for EngineChoice {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            EngineChoice::Auto => "auto",
+            EngineChoice::Native => "native",
+            EngineChoice::Pjrt => "pjrt",
+        };
+        write!(f, "{s}")
+    }
+}
 
 /// Serving-engine configuration. Loaded from JSON (file or inline) with
 /// defaults matching the paper's evaluation setup.
@@ -34,6 +90,13 @@ pub struct RuntimeConfig {
     /// [`crate::backend::BackendRegistry`] pick per layer; `amx`, `avx`,
     /// `ref` pin one backend.
     pub backend: BackendChoice,
+    /// Serving-path directive: `auto` (native unless PJRT is explicitly
+    /// requested), `native`, or `pjrt`.
+    pub engine: EngineChoice,
+    /// Context window of the native decode path (static KV segment +
+    /// dynamic tail per slot). The PJRT path reads its own `max_ctx`
+    /// from the artifact manifest instead.
+    pub max_ctx: usize,
 }
 
 impl Default for RuntimeConfig {
@@ -50,6 +113,8 @@ impl Default for RuntimeConfig {
             port: 7070,
             queue_capacity: 256,
             backend: BackendChoice::Auto,
+            engine: EngineChoice::Auto,
+            max_ctx: 256,
         }
     }
 }
@@ -97,6 +162,13 @@ impl RuntimeConfig {
                         .ok_or("backend: string")?
                         .parse::<BackendChoice>()?
                 }
+                "engine" => {
+                    cfg.engine = val
+                        .as_str()
+                        .ok_or("engine: string")?
+                        .parse::<EngineChoice>()?
+                }
+                "max_ctx" => cfg.max_ctx = val.as_usize().ok_or("max_ctx: uint")?,
                 other => return Err(format!("unknown config field '{other}'")),
             }
         }
@@ -130,6 +202,9 @@ impl RuntimeConfig {
         }
         if self.queue_capacity == 0 {
             return Err("queue_capacity must be >= 1".into());
+        }
+        if self.max_ctx < 2 {
+            return Err("max_ctx must be >= 2".into());
         }
         Ok(())
     }
@@ -168,6 +243,31 @@ mod tests {
     #[test]
     fn rejects_wrong_type() {
         assert!(RuntimeConfig::from_json(r#"{"threads": "four"}"#).is_err());
+    }
+
+    #[test]
+    fn parses_engine_choice() {
+        assert_eq!(RuntimeConfig::default().engine, EngineChoice::Auto);
+        let cfg = RuntimeConfig::from_json(r#"{"engine": "native", "max_ctx": 64}"#).unwrap();
+        assert_eq!(cfg.engine, EngineChoice::Native);
+        assert_eq!(cfg.max_ctx, 64);
+        assert_eq!(
+            RuntimeConfig::from_json(r#"{"engine": "pjrt"}"#).unwrap().engine,
+            EngineChoice::Pjrt
+        );
+        assert!(RuntimeConfig::from_json(r#"{"engine": "tpu"}"#).is_err());
+        assert!(RuntimeConfig::from_json(r#"{"engine": 1}"#).is_err());
+        assert!(RuntimeConfig::from_json(r#"{"max_ctx": 1}"#).is_err());
+    }
+
+    #[test]
+    fn engine_auto_resolves_native() {
+        assert!(EngineChoice::Auto.resolved_native());
+        assert!(EngineChoice::Native.resolved_native());
+        assert!(!EngineChoice::Pjrt.resolved_native());
+        assert_eq!("NATIVE".parse::<EngineChoice>().unwrap(), EngineChoice::Native);
+        assert_eq!(EngineChoice::Pjrt.to_string(), "pjrt");
+        assert!("xla".parse::<EngineChoice>().is_err());
     }
 
     #[test]

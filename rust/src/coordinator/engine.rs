@@ -1,11 +1,22 @@
-//! The generation engine: continuous batching over the AOT
-//! `prefill`/`decode_step` PJRT executables.
+//! The generation engine: continuous batching over one of two
+//! interchangeable decode paths.
 //!
-//! Shapes are static (AOT), so the engine owns `decode_batch` slots.
-//! Each slot holds one in-flight request's cache state; finished slots
-//! are refilled from the admission queue every step. Per-slot
-//! `cache_len` vectors make mixed-progress batches safe (the artifact
-//! masks attention per slot).
+//! * **Native** (the default): the model is compiled into a
+//!   [`DecodePlan`] at load — one cached kernel [`Selection`] per
+//!   distinct linear shape, weights pre-packed per layer — and every
+//!   prefill/decode projection runs the selected sparse/dense kernel
+//!   through the [`crate::backend`] dispatch layer end-to-end, with
+//!   attention on the split KV cache (`kvcache/attention.rs`). This is
+//!   the paper's serving configuration: all linears on the custom
+//!   kernels, preprocessing once at load (§7).
+//! * **PJRT**: the AOT `prefill`/`decode_step` executables (requires
+//!   the `pjrt` feature + a compiled artifact bundle). Kept as the
+//!   cross-check path; select it with `--engine pjrt`.
+//!
+//! Both paths share the same continuous-batching slots: the engine owns
+//! `decode_batch` slots, each holding one in-flight request's cache
+//! state; finished slots are refilled from the admission queue every
+//! step. Per-slot positions make mixed-progress batches safe.
 //!
 //! Weight handling follows the paper's deployment: parameters are
 //! magnitude-pruned to the configured sparsity at load time, then kept
@@ -14,9 +25,13 @@
 use super::batcher::AdmissionQueue;
 use super::metrics::Metrics;
 use super::request::{Request, Response};
+use crate::amx::EventCounters;
 use crate::backend::{Backend, BackendRegistry, Dtype, GemmShape, Selection};
 use crate::cfg::RuntimeConfig;
+use crate::kvcache::cache::KvCache;
 use crate::log_info;
+use crate::models::plan::{DecodePlan, NativeModel};
+use crate::models::tinyforward::TinyModel;
 use crate::runtime::artifact::Bundle;
 use crate::runtime::executor::{lit_f32, lit_i32, to_f32, Executable, Literal, Runtime};
 use crate::sparse::prune::magnitude_prune_inplace;
@@ -24,7 +39,8 @@ use crate::util::error::{anyhow, Context, Result};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-/// Static model geometry read from the manifest.
+/// Static model geometry (from the artifact manifest on the PJRT path,
+/// from the loaded weights + runtime config on the native path).
 #[derive(Clone, Copy, Debug)]
 pub struct Geometry {
     pub layers: usize,
@@ -57,6 +73,18 @@ impl Geometry {
                 .as_usize()
                 .ok_or_else(|| anyhow!("prefill_len"))?,
         })
+    }
+
+    fn for_model(model: &TinyModel, cfg: &RuntimeConfig) -> Geometry {
+        Geometry {
+            layers: model.layers.len(),
+            kv_heads: model.kv_heads,
+            head_dim: model.head_dim,
+            max_ctx: cfg.max_ctx,
+            vocab: model.vocab,
+            decode_batch: cfg.max_batch,
+            prefill_len: cfg.max_ctx,
+        }
     }
 
     fn cache_elems(&self) -> usize {
@@ -96,9 +124,8 @@ impl Slot {
     }
 }
 
-/// The serving engine.
-pub struct Engine {
-    geo: Geometry,
+/// The PJRT decode path: AOT executables + host-mirrored caches.
+struct PjrtPath {
     decode: Executable,
     prefill: Executable,
     /// Pruned parameter literals, fed to every call (PJRT copies
@@ -108,22 +135,111 @@ pub struct Engine {
     /// outputs: `[layers, B, kvh, max_ctx, hd]`.
     k_cache: Vec<f32>,
     v_cache: Vec<f32>,
+}
+
+impl PjrtPath {
+    fn param_literals(&self) -> Result<Vec<Literal>> {
+        self.param_data
+            .iter()
+            .map(|(data, dims)| lit_f32(data, dims))
+            .collect()
+    }
+}
+
+/// The native decode path: plan-compiled model + per-slot KV caches.
+struct NativePath {
+    model: NativeModel,
+    /// One split cache (sparse static + dense tail) per decode slot.
+    caches: Vec<Option<KvCache>>,
+    /// Accumulated kernel events across prefills and decode steps.
+    ctr: EventCounters,
+}
+
+enum EnginePath {
+    Pjrt(PjrtPath),
+    Native(NativePath),
+}
+
+/// The serving engine.
+pub struct Engine {
+    geo: Geometry,
     slots: Vec<Slot>,
     pub metrics: Arc<Metrics>,
-    /// Kernel-backend selection resolved from `cfg.backend` at load
-    /// time (the paper's automatic linear-layer replacement happens
-    /// once, here — "preprocessing happens once", §7). The PJRT
-    /// artifacts execute the tiny model today; native decode paths take
-    /// the handle in `selection.backend` so new backends drop in
-    /// without touching engine code.
+    /// Representative load-time selection: the LM-head plan on the
+    /// native path (the widest linear of a decode step), the resolved
+    /// ancillary backend on the PJRT path. Per-layer plans live in
+    /// [`Engine::plan`].
     selection: Selection,
+    /// Precomputed `"<path>/<backend>"` metrics label (constant for the
+    /// engine's lifetime; avoids per-step allocation).
+    step_label: String,
     cfg: RuntimeConfig,
+    path: EnginePath,
 }
 
 impl Engine {
-    /// Load artifacts, prune weights, compile executables, resolve the
-    /// kernel backend.
+    /// Load an engine from an artifact bundle, honouring
+    /// `cfg.engine`: `auto`/`native` serve through the plan-compiled
+    /// native path (the runtime handle is unused), `pjrt` compiles the
+    /// AOT executables.
     pub fn load(rt: &Runtime, bundle: &Bundle, cfg: RuntimeConfig) -> Result<Engine> {
+        if cfg.engine.resolved_native() {
+            Engine::load_native(bundle, cfg)
+        } else {
+            Engine::load_pjrt(rt, bundle, cfg)
+        }
+    }
+
+    /// Load the native engine: weights from the bundle, pruned to the
+    /// configured sparsity, plan-compiled against the probed registry.
+    pub fn load_native(bundle: &Bundle, cfg: RuntimeConfig) -> Result<Engine> {
+        let model = TinyModel::from_bundle(bundle)?;
+        Engine::from_tiny_model(model, cfg)
+    }
+
+    /// Build the native engine directly from a loaded model (tests and
+    /// benches construct synthetic models without artifacts on disk).
+    /// Prunes projections and LM head to `cfg.weight_sparsity`, then
+    /// compiles the [`DecodePlan`] — selection runs here, never in the
+    /// token loop.
+    pub fn from_tiny_model(mut model: TinyModel, cfg: RuntimeConfig) -> Result<Engine> {
+        if cfg.weight_sparsity > 0.0 {
+            model.prune_weights(cfg.weight_sparsity);
+            // the PJRT load prunes every 2-D matrix except the embedding;
+            // match it (norm gains and embeddings stay dense)
+            magnitude_prune_inplace(&mut model.lm_head, cfg.weight_sparsity);
+        }
+        let geo = Geometry::for_model(&model, &cfg);
+        let registry = BackendRegistry::probe();
+        let native = NativeModel::new(&registry, cfg.backend, model, cfg.weight_sparsity);
+        let selection = native.plan.lm_head.selection.clone();
+        log_info!(
+            "engine native: {} (caps {}, directive backend={} engine={})",
+            native.plan.describe(),
+            registry.caps().describe(),
+            cfg.backend,
+            cfg.engine
+        );
+        let slots = (0..geo.decode_batch).map(|_| Slot::empty()).collect();
+        let caches = (0..geo.decode_batch).map(|_| None).collect();
+        Ok(Engine {
+            geo,
+            slots,
+            metrics: Arc::new(Metrics::new()),
+            step_label: format!("native/{}", selection.backend.name()),
+            selection,
+            cfg,
+            path: EnginePath::Native(NativePath {
+                model: native,
+                caches,
+                ctr: EventCounters::default(),
+            }),
+        })
+    }
+
+    /// Load the PJRT engine: artifacts, pruned weight literals, compiled
+    /// executables, resolved ancillary backend.
+    pub fn load_pjrt(rt: &Runtime, bundle: &Bundle, cfg: RuntimeConfig) -> Result<Engine> {
         let geo = Geometry::from_bundle(bundle)?;
         let decode = rt.load_hlo(&bundle.hlo_path("decode_step"))?;
         let prefill = rt.load_hlo(&bundle.hlo_path("prefill"))?;
@@ -140,28 +256,34 @@ impl Engine {
         }
         // resolve the kernel backend against the model's widest linear
         // (hidden × vocab, the LM head) — the shape that dominates a
-        // tiny-model decode step
-        let hidden = bundle.config_usize("hidden").unwrap_or(geo.head_dim * geo.kv_heads);
+        // tiny-model decode step. Fallback reconstructs hidden from the
+        // *query* heads (kv_heads undersizes it under GQA).
+        let hidden = bundle
+            .config_usize("hidden")
+            .or_else(|_| bundle.config_usize("heads").map(|h| h * geo.head_dim))
+            .unwrap_or(geo.head_dim * geo.kv_heads);
         let registry = BackendRegistry::probe();
         let shape = GemmShape::new(geo.decode_batch, hidden, geo.vocab);
         let selection = registry.resolve(cfg.backend, shape, cfg.weight_sparsity, Dtype::Bf16);
         log_info!(
-            "engine backend: {} (caps {}, directive {})",
+            "engine pjrt: ancillary backend {} (caps {}, directive {})",
             selection.describe(),
             registry.caps().describe(),
             cfg.backend
         );
-        let metrics = Arc::new(Metrics::new());
         let slots = (0..geo.decode_batch).map(|_| Slot::empty()).collect();
         Ok(Engine {
-            k_cache: vec![0.0; geo.cache_elems()],
-            v_cache: vec![0.0; geo.cache_elems()],
+            path: EnginePath::Pjrt(PjrtPath {
+                decode,
+                prefill,
+                param_data,
+                k_cache: vec![0.0; geo.cache_elems()],
+                v_cache: vec![0.0; geo.cache_elems()],
+            }),
             geo,
-            decode,
-            prefill,
-            param_data,
             slots,
-            metrics,
+            metrics: Arc::new(Metrics::new()),
+            step_label: "pjrt/xla".to_string(),
             selection,
             cfg,
         })
@@ -171,21 +293,47 @@ impl Engine {
         self.geo
     }
 
-    /// The kernel backend this engine dispatches linears through.
+    /// The kernel backend this engine dispatches its widest linear
+    /// through (per-layer plans may differ — see [`Engine::plan`]).
     pub fn backend(&self) -> &Backend {
         &self.selection.backend
     }
 
-    /// The load-time backend selection (plan + modeled time).
+    /// The load-time representative selection (plan + modeled time).
     pub fn selection(&self) -> &Selection {
         &self.selection
     }
 
-    fn param_literals(&self) -> Result<Vec<Literal>> {
-        self.param_data
-            .iter()
-            .map(|(data, dims)| lit_f32(data, dims))
-            .collect()
+    /// Which decode path serves tokens: `"native"` or `"pjrt"`.
+    pub fn engine_path(&self) -> &'static str {
+        match self.path {
+            EnginePath::Native(_) => "native",
+            EnginePath::Pjrt(_) => "pjrt",
+        }
+    }
+
+    /// The compiled per-layer plan (native path only).
+    pub fn plan(&self) -> Option<&DecodePlan> {
+        match &self.path {
+            EnginePath::Native(np) => Some(&np.model.plan),
+            EnginePath::Pjrt(_) => None,
+        }
+    }
+
+    /// Kernel events accumulated by the native path (empty on PJRT).
+    pub fn kernel_events(&self) -> EventCounters {
+        match &self.path {
+            EnginePath::Native(np) => np.ctr.clone(),
+            EnginePath::Pjrt(_) => EventCounters::default(),
+        }
+    }
+
+    /// One-line engine description for banners and the stats endpoint.
+    pub fn describe(&self) -> String {
+        match &self.path {
+            EnginePath::Native(np) => format!("native [{}]", np.model.plan.describe()),
+            EnginePath::Pjrt(_) => format!("pjrt [ancillary {}]", self.selection.describe()),
+        }
     }
 
     /// Admit new requests into free slots (prefilling their caches).
@@ -214,9 +362,57 @@ impl Engine {
         Ok(true)
     }
 
-    /// Run the batched prefill artifact for newly admitted requests.
+    /// Prefill newly admitted requests (path-dispatched).
     fn prefill_into_slots(&mut self, free: &[usize], reqs: Vec<Request>) -> Result<()> {
+        if matches!(self.path, EnginePath::Native(_)) {
+            self.native_prefill(free, reqs)
+        } else {
+            self.pjrt_prefill(free, reqs)
+        }
+    }
+
+    /// Native prefill: per-request planned forward over the prompt
+    /// prefix, building the pruned static KV segment for the slot. The
+    /// final prompt token is fed by the first decode step (which
+    /// appends it to the dynamic tail and emits the first logits).
+    fn native_prefill(&mut self, free: &[usize], reqs: Vec<Request>) -> Result<()> {
         let g = self.geo;
+        let EnginePath::Native(np) = &mut self.path else {
+            unreachable!("native_prefill on pjrt path")
+        };
+        for (slot_idx, req) in free.iter().copied().zip(reqs.into_iter()) {
+            let t0 = Instant::now();
+            // leave room for at least one generated token
+            let plen = req.prompt.len().min(g.max_ctx - 1).max(1);
+            let prefix = if req.prompt.is_empty() {
+                &[][..]
+            } else {
+                &req.prompt[..plen - 1]
+            };
+            let cache =
+                np.model
+                    .prefill(prefix, self.cfg.k_sparsity, self.cfg.v_sparsity, &mut np.ctr);
+            np.caches[slot_idx] = Some(cache);
+            self.metrics.prefills.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            self.slots[slot_idx] = Slot {
+                token: *req.prompt.get(plen - 1).unwrap_or(&32),
+                pos: plen - 1,
+                cache_len: plen - 1,
+                generated: Vec::new(),
+                started: Some(Instant::now()),
+                decode_time: t0.elapsed().as_secs_f64(),
+                req: Some(req),
+            };
+        }
+        Ok(())
+    }
+
+    /// Run the batched PJRT prefill artifact for newly admitted requests.
+    fn pjrt_prefill(&mut self, free: &[usize], reqs: Vec<Request>) -> Result<()> {
+        let g = self.geo;
+        let EnginePath::Pjrt(pj) = &mut self.path else {
+            unreachable!("pjrt_prefill on native path")
+        };
         let b = g.decode_batch;
         let mut tokens = vec![32i32; b * g.prefill_len]; // pad with spaces
         let mut assigned: Vec<(usize, Request)> = Vec::new();
@@ -227,11 +423,14 @@ impl Engine {
             }
             assigned.push((slot_idx, req));
         }
-        let mut inputs = self.param_literals()?;
+        let mut inputs = pj.param_literals()?;
         inputs.push(lit_i32(&tokens, &[b as i64, g.prefill_len as i64])?);
         let t0 = Instant::now();
-        let outs = self.prefill.run(&inputs).context("prefill")?;
-        self.metrics.prefills.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let outs = pj.prefill.run(&inputs).context("prefill")?;
+        // count per request (like the native path), not per artifact call
+        self.metrics
+            .prefills
+            .fetch_add(assigned.len() as u64, std::sync::atomic::Ordering::Relaxed);
         let _logits = to_f32(&outs[0])?;
         let k = to_f32(&outs[1])?; // [L, B, kvh, S, hd]
         let v = to_f32(&outs[2])?;
@@ -243,8 +442,8 @@ impl Engine {
                     for t in 0..s {
                         let src = (((l * b + slot_idx) * kvh + h) * s + t) * hd;
                         let dst = (((l * b + slot_idx) * kvh + h) * maxc + t) * hd;
-                        self.k_cache[dst..dst + hd].copy_from_slice(&k[src..src + hd]);
-                        self.v_cache[dst..dst + hd].copy_from_slice(&v[src..src + hd]);
+                        pj.k_cache[dst..dst + hd].copy_from_slice(&k[src..src + hd]);
+                        pj.v_cache[dst..dst + hd].copy_from_slice(&v[src..src + hd]);
                     }
                 }
             }
@@ -263,50 +462,73 @@ impl Engine {
         Ok(())
     }
 
-    /// One batched decode step over all active slots. Returns the number
-    /// of active slots processed.
+    /// One decode step over all active slots (path-dispatched). Returns
+    /// the number of active slots processed.
     fn step(&mut self) -> Result<usize> {
-        let g = self.geo;
-        let b = g.decode_batch;
-        let active: Vec<usize> = (0..b).filter(|&i| self.slots[i].active()).collect();
+        let active: Vec<usize> = (0..self.slots.len())
+            .filter(|&i| self.slots[i].active())
+            .collect();
         if active.is_empty() {
             return Ok(0);
         }
-        let mut token = vec![0i32; b];
-        let mut pos = vec![0i32; b];
-        let mut cache_len = vec![1i32; b];
-        for &i in &active {
-            token[i] = self.slots[i].token as i32;
-            pos[i] = self.slots[i].pos as i32;
-            cache_len[i] = self.slots[i].cache_len as i32;
-        }
-        let dims_cache = [
-            g.layers as i64,
-            b as i64,
-            g.kv_heads as i64,
-            g.max_ctx as i64,
-            g.head_dim as i64,
-        ];
-        let mut inputs = self.param_literals()?;
-        inputs.push(lit_i32(&token, &[b as i64])?);
-        inputs.push(lit_i32(&pos, &[b as i64])?);
-        inputs.push(lit_f32(&self.k_cache, &dims_cache)?);
-        inputs.push(lit_f32(&self.v_cache, &dims_cache)?);
-        inputs.push(lit_i32(&cache_len, &[b as i64])?);
-        let t0 = Instant::now();
-        let outs = self.decode.run(&inputs).context("decode_step")?;
-        let dt = t0.elapsed().as_secs_f64();
-        self.metrics.record_step(dt);
+        // produce the next token per active slot
+        let (next_tokens, dt) = match &mut self.path {
+            EnginePath::Native(np) => {
+                let t0 = Instant::now();
+                let mut next = Vec::with_capacity(active.len());
+                for &i in &active {
+                    let slot = &self.slots[i];
+                    let cache = np.caches[i].as_mut().expect("active slot has a cache");
+                    let logits =
+                        np.model.decode_step(slot.token, slot.pos, cache, &mut np.ctr);
+                    next.push((i, argmax(&logits) as u8));
+                }
+                (next, t0.elapsed().as_secs_f64())
+            }
+            EnginePath::Pjrt(pj) => {
+                let g = self.geo;
+                let b = g.decode_batch;
+                let mut token = vec![0i32; b];
+                let mut pos = vec![0i32; b];
+                let mut cache_len = vec![1i32; b];
+                for &i in &active {
+                    token[i] = self.slots[i].token as i32;
+                    pos[i] = self.slots[i].pos as i32;
+                    cache_len[i] = self.slots[i].cache_len as i32;
+                }
+                let dims_cache = [
+                    g.layers as i64,
+                    b as i64,
+                    g.kv_heads as i64,
+                    g.max_ctx as i64,
+                    g.head_dim as i64,
+                ];
+                let mut inputs = pj.param_literals()?;
+                inputs.push(lit_i32(&token, &[b as i64])?);
+                inputs.push(lit_i32(&pos, &[b as i64])?);
+                inputs.push(lit_f32(&pj.k_cache, &dims_cache)?);
+                inputs.push(lit_f32(&pj.v_cache, &dims_cache)?);
+                inputs.push(lit_i32(&cache_len, &[b as i64])?);
+                let t0 = Instant::now();
+                let outs = pj.decode.run(&inputs).context("decode_step")?;
+                let dt = t0.elapsed().as_secs_f64();
+                let logits = to_f32(&outs[0])?; // [B, V]
+                pj.k_cache = to_f32(&outs[1])?;
+                pj.v_cache = to_f32(&outs[2])?;
+                let next: Vec<(usize, u8)> = active
+                    .iter()
+                    .map(|&i| (i, argmax(&logits[i * g.vocab..(i + 1) * g.vocab]) as u8))
+                    .collect();
+                (next, dt)
+            }
+        };
+        self.metrics.record_step(dt, &self.step_label);
         self.metrics
             .decode_steps
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        let logits = to_f32(&outs[0])?; // [B, V]
-        self.k_cache = to_f32(&outs[1])?;
-        self.v_cache = to_f32(&outs[2])?;
 
-        for &i in &active {
-            let row = &logits[i * g.vocab..(i + 1) * g.vocab];
-            let next = argmax(row) as u8;
+        let mut finished = Vec::new();
+        for (i, next) in next_tokens {
             let slot = &mut self.slots[i];
             slot.decode_time += dt;
             slot.generated.push(next);
@@ -323,15 +545,21 @@ impl Engine {
                     .map(|r| r.max_new_tokens)
                     .unwrap_or(0)
                     .min(self.cfg.max_new_tokens)
-                || slot.cache_len >= g.max_ctx;
+                || slot.cache_len >= self.geo.max_ctx;
             if done {
-                self.finish_slot(i);
+                finished.push(i);
             }
+        }
+        for i in finished {
+            self.finish_slot(i);
         }
         Ok(active.len())
     }
 
     fn finish_slot(&mut self, i: usize) {
+        if let EnginePath::Native(np) = &mut self.path {
+            np.caches[i] = None; // release the slot's KV memory
+        }
         let slot = std::mem::replace(&mut self.slots[i], Slot::empty());
         let Some(req) = slot.req else { return };
         let total = req.arrived.elapsed().as_secs_f64();

@@ -1,8 +1,43 @@
-//! Serving metrics: counters and latency distributions.
+//! Serving metrics: counters, latency distributions, a fixed-bucket
+//! per-decode-step histogram, and per-(engine path, backend) step
+//! accounting — all exposed through the server's stats output.
 
+use crate::cfg::Json;
 use crate::util::stats::Summary;
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
+
+/// Upper bounds (milliseconds) of the fixed step-latency buckets; one
+/// extra overflow bucket catches everything slower.
+pub const STEP_BUCKET_BOUNDS_MS: [f64; 10] =
+    [0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 50.0, 100.0];
+
+/// Lock-free fixed-bucket histogram of per-decode-step wall time.
+#[derive(Default)]
+pub struct StepHistogram {
+    counts: [AtomicU64; STEP_BUCKET_BOUNDS_MS.len() + 1],
+}
+
+impl StepHistogram {
+    pub fn record(&self, secs: f64) {
+        let ms = secs * 1e3;
+        let idx = STEP_BUCKET_BOUNDS_MS
+            .iter()
+            .position(|&b| ms <= b)
+            .unwrap_or(STEP_BUCKET_BOUNDS_MS.len());
+        self.counts[idx].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Snapshot of the bucket counts (last entry is the overflow bucket).
+    pub fn counts(&self) -> Vec<u64> {
+        self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+}
 
 /// Engine-wide metrics registry (thread-safe).
 #[derive(Default)]
@@ -15,6 +50,11 @@ pub struct Metrics {
     pub prefills: AtomicU64,
     latencies_s: Mutex<Vec<f64>>,
     step_times_s: Mutex<Vec<f64>>,
+    /// Fixed-bucket distribution of per-decode-step latency.
+    pub step_hist: StepHistogram,
+    /// Steps served, keyed by `"<engine path>/<backend>"` (e.g.
+    /// `native/amx`, `pjrt/xla`) — which path actually produced tokens.
+    steps_by_path: Mutex<BTreeMap<String, u64>>,
 }
 
 impl Metrics {
@@ -26,8 +66,26 @@ impl Metrics {
         self.latencies_s.lock().expect("metrics lock").push(secs);
     }
 
-    pub fn record_step(&self, secs: f64) {
+    /// Record one decode step: raw sample, histogram bucket, and the
+    /// `"<engine path>/<backend>"` label that served it. Callers
+    /// precompute the label once at load (the pair is constant for an
+    /// engine's lifetime), so the hot path allocates only on the first
+    /// step of a new label.
+    pub fn record_step(&self, secs: f64, path_backend: &str) {
         self.step_times_s.lock().expect("metrics lock").push(secs);
+        self.step_hist.record(secs);
+        let mut by = self.steps_by_path.lock().expect("metrics lock");
+        match by.get_mut(path_backend) {
+            Some(n) => *n += 1,
+            None => {
+                by.insert(path_backend.to_string(), 1);
+            }
+        }
+    }
+
+    /// Snapshot of steps served per `"path/backend"` key.
+    pub fn steps_by_path(&self) -> BTreeMap<String, u64> {
+        self.steps_by_path.lock().expect("metrics lock").clone()
     }
 
     /// End-to-end request latency summary, if any completed.
@@ -56,10 +114,72 @@ impl Metrics {
             .latency_summary()
             .map(|s| format!("p50 {:.1}ms p99 {:.1}ms", s.p50 * 1e3, s.p99 * 1e3))
             .unwrap_or_else(|| "n/a".into());
+        let paths = {
+            let by = self.steps_by_path.lock().expect("metrics lock");
+            if by.is_empty() {
+                "n/a".to_string()
+            } else {
+                by.iter()
+                    .map(|(k, v)| format!("{k}:{v}"))
+                    .collect::<Vec<_>>()
+                    .join(" ")
+            }
+        };
         format!(
             "completed={done} rejected={rej} tokens={toks} steps={steps} \
-             step_mean={step} latency {lat}"
+             step_mean={step} latency {lat} served_by {paths}"
         )
+    }
+
+    /// Structured stats for the server's `{"stats": true}` endpoint:
+    /// counters, the step-latency histogram, and which engine
+    /// path/backend served each step.
+    pub fn stats_json(&self, engine: &str) -> Json {
+        let hist_counts = self
+            .step_hist
+            .counts()
+            .into_iter()
+            .map(|c| Json::Num(c as f64))
+            .collect::<Vec<_>>();
+        let bounds = STEP_BUCKET_BOUNDS_MS
+            .iter()
+            .map(|&b| Json::Num(b))
+            .collect::<Vec<_>>();
+        let by_path = Json::Obj(
+            self.steps_by_path()
+                .into_iter()
+                .map(|(k, v)| (k, Json::Num(v as f64)))
+                .collect(),
+        );
+        let step_mean_ms = self.step_summary().map(|s| s.mean * 1e3).unwrap_or(0.0);
+        Json::obj(vec![
+            ("engine", Json::Str(engine.into())),
+            (
+                "requests_admitted",
+                Json::Num(self.requests_admitted.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "requests_completed",
+                Json::Num(self.requests_completed.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "requests_rejected",
+                Json::Num(self.requests_rejected.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "tokens_generated",
+                Json::Num(self.tokens_generated.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "decode_steps",
+                Json::Num(self.decode_steps.load(Ordering::Relaxed) as f64),
+            ),
+            ("prefills", Json::Num(self.prefills.load(Ordering::Relaxed) as f64)),
+            ("step_mean_ms", Json::Num(step_mean_ms)),
+            ("step_hist_bounds_ms", Json::Arr(bounds)),
+            ("step_hist_counts", Json::Arr(hist_counts)),
+            ("steps_by_path", by_path),
+        ])
     }
 }
 
@@ -73,11 +193,12 @@ mod tests {
         m.requests_completed.fetch_add(2, Ordering::Relaxed);
         m.record_latency(0.1);
         m.record_latency(0.3);
-        m.record_step(0.01);
+        m.record_step(0.01, "native/amx");
         let l = m.latency_summary().unwrap();
         assert!((l.mean - 0.2).abs() < 1e-12);
         assert!(m.step_summary().is_some());
         assert!(m.report().contains("completed=2"));
+        assert!(m.report().contains("native/amx:1"));
     }
 
     #[test]
@@ -85,5 +206,41 @@ mod tests {
         let m = Metrics::new();
         assert!(m.latency_summary().is_none());
         assert!(m.report().contains("n/a"));
+    }
+
+    #[test]
+    fn histogram_buckets_cover_the_range() {
+        let h = StepHistogram::default();
+        h.record(0.00003); // 0.03 ms → first bucket
+        h.record(0.0006); // 0.6 ms → the 1.0 ms bucket
+        h.record(9.0); // 9 s → overflow
+        let c = h.counts();
+        assert_eq!(c.len(), STEP_BUCKET_BOUNDS_MS.len() + 1);
+        assert_eq!(c[0], 1);
+        assert_eq!(c[4], 1, "{c:?}");
+        assert_eq!(*c.last().unwrap(), 1);
+        assert_eq!(h.total(), 3);
+    }
+
+    #[test]
+    fn stats_json_roundtrips() {
+        let m = Metrics::new();
+        m.tokens_generated.fetch_add(5, Ordering::Relaxed);
+        m.requests_admitted.fetch_add(2, Ordering::Relaxed);
+        m.record_step(0.002, "native/amx");
+        m.record_step(0.004, "native/amx");
+        m.record_step(0.004, "pjrt/xla");
+        let line = m.stats_json("native").to_string();
+        let v = Json::parse(&line).unwrap();
+        assert_eq!(v.get("engine").unwrap().as_str(), Some("native"));
+        assert_eq!(v.get("tokens_generated").unwrap().as_usize(), Some(5));
+        assert_eq!(v.get("requests_admitted").unwrap().as_usize(), Some(2));
+        let by = v.get("steps_by_path").unwrap();
+        assert_eq!(by.get("native/amx").unwrap().as_usize(), Some(2));
+        assert_eq!(by.get("pjrt/xla").unwrap().as_usize(), Some(1));
+        let counts = v.get("step_hist_counts").unwrap().as_arr().unwrap();
+        assert_eq!(counts.len(), STEP_BUCKET_BOUNDS_MS.len() + 1);
+        let total: f64 = counts.iter().filter_map(|c| c.as_f64()).sum();
+        assert_eq!(total as u64, 3);
     }
 }

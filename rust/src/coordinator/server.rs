@@ -4,9 +4,13 @@
 //! Request:  `{"prompt": "...", "max_new_tokens": 32}`
 //! Response: `{"id": 1, "text": "...", "tokens": 32,
 //!             "latency_ms": 12.3, "per_token_ms": 0.4}`
+//! Stats:    `{"stats": true}` → serving counters, the per-decode-step
+//!           latency histogram, and which engine path/backend served
+//!           each step (see [`crate::coordinator::metrics`]).
 //! Errors:   `{"error": "..."}` (malformed request or backpressure).
 
 use super::batcher::{AdmissionQueue, AdmitError};
+use super::metrics::Metrics;
 use super::request::Request;
 use crate::cfg::json::Json;
 use crate::log_info;
@@ -17,6 +21,16 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
+/// Everything a client handler needs besides its socket.
+pub struct ServerCtx {
+    pub queue: Arc<AdmissionQueue>,
+    pub default_max_tokens: usize,
+    /// Engine metrics, served by the `{"stats": true}` request.
+    pub metrics: Arc<Metrics>,
+    /// Engine description string (path + plan) echoed in stats output.
+    pub engine: String,
+}
+
 static NEXT_ID: AtomicU64 = AtomicU64::new(1);
 
 /// Parse one request line into a [`Request`] + its response receiver.
@@ -24,7 +38,15 @@ pub fn parse_request(
     line: &str,
     default_max_tokens: usize,
 ) -> Result<(Request, mpsc::Receiver<super::request::Response>), String> {
-    let v = Json::parse(line)?;
+    request_from_json(&Json::parse(line)?, default_max_tokens)
+}
+
+/// Build a [`Request`] from an already-parsed JSON value (the client
+/// handler parses each line exactly once).
+pub fn request_from_json(
+    v: &Json,
+    default_max_tokens: usize,
+) -> Result<(Request, mpsc::Receiver<super::request::Response>), String> {
     let prompt = v
         .req("prompt")?
         .as_str()
@@ -65,7 +87,12 @@ fn error_line(msg: &str) -> String {
     Json::obj(vec![("error", Json::Str(msg.into()))]).to_string()
 }
 
-fn handle_client(stream: TcpStream, queue: Arc<AdmissionQueue>, default_max: usize) {
+/// Whether a parsed request is a stats query (`{"stats": true}`).
+fn is_stats_request(v: &Json) -> bool {
+    v.get("stats").and_then(|s| s.as_bool()).unwrap_or(false)
+}
+
+fn handle_client(stream: TcpStream, ctx: Arc<ServerCtx>) {
     let peer = stream
         .peer_addr()
         .map(|a| a.to_string())
@@ -80,14 +107,25 @@ fn handle_client(stream: TcpStream, queue: Arc<AdmissionQueue>, default_max: usi
         if line.trim().is_empty() {
             continue;
         }
-        let reply = match parse_request(&line, default_max) {
+        // each line is parsed exactly once, then routed
+        let reply = match Json::parse(line.trim()) {
             Err(e) => error_line(&e),
-            Ok((req, rx)) => match queue.admit(req) {
-                Err(AdmitError::Full) => error_line("queue full, retry later"),
-                Err(AdmitError::Closed) => error_line("server shutting down"),
-                Ok(()) => match rx.recv() {
-                    Ok(resp) => format_response(&resp),
-                    Err(_) => error_line("engine dropped request"),
+            Ok(v) if is_stats_request(&v) => ctx.metrics.stats_json(&ctx.engine).to_string(),
+            Ok(v) => match request_from_json(&v, ctx.default_max_tokens) {
+                Err(e) => error_line(&e),
+                Ok((req, rx)) => match ctx.queue.admit(req) {
+                    Err(AdmitError::Full) => {
+                        ctx.metrics.requests_rejected.fetch_add(1, Ordering::Relaxed);
+                        error_line("queue full, retry later")
+                    }
+                    Err(AdmitError::Closed) => error_line("server shutting down"),
+                    Ok(()) => {
+                        ctx.metrics.requests_admitted.fetch_add(1, Ordering::Relaxed);
+                        match rx.recv() {
+                            Ok(resp) => format_response(&resp),
+                            Err(_) => error_line("engine dropped request"),
+                        }
+                    }
                 },
             },
         };
@@ -102,16 +140,18 @@ fn handle_client(stream: TcpStream, queue: Arc<AdmissionQueue>, default_max: usi
 
 /// Accept loop: one thread per connection (the engine itself is the
 /// serial resource; connection concurrency is cheap).
-pub fn serve(listener: TcpListener, queue: Arc<AdmissionQueue>, default_max: usize) {
+pub fn serve(listener: TcpListener, ctx: ServerCtx) {
     log_info!(
-        "listening on {}",
-        listener.local_addr().map(|a| a.to_string()).unwrap_or_default()
+        "listening on {} ({})",
+        listener.local_addr().map(|a| a.to_string()).unwrap_or_default(),
+        ctx.engine
     );
+    let ctx = Arc::new(ctx);
     for stream in listener.incoming() {
         match stream {
             Ok(s) => {
-                let q = Arc::clone(&queue);
-                std::thread::spawn(move || handle_client(s, q, default_max));
+                let c = Arc::clone(&ctx);
+                std::thread::spawn(move || handle_client(s, c));
             }
             Err(e) => {
                 log_info!("accept error: {e}");
@@ -144,6 +184,14 @@ mod tests {
         assert!(parse_request("not json", 1).is_err());
         assert!(parse_request(r#"{"no_prompt": 1}"#, 1).is_err());
         assert!(parse_request(r#"{"prompt": 5}"#, 1).is_err());
+    }
+
+    #[test]
+    fn stats_request_is_recognized() {
+        let parse = |s: &str| Json::parse(s).unwrap();
+        assert!(is_stats_request(&parse(r#"{"stats": true}"#)));
+        assert!(!is_stats_request(&parse(r#"{"stats": false}"#)));
+        assert!(!is_stats_request(&parse(r#"{"prompt": "hi"}"#)));
     }
 
     #[test]

@@ -22,11 +22,11 @@
 //! | [`amx`] | AMX tile + AVX-512 instruction simulator and the four kernels |
 //! | [`backend`] | `LinearBackend` dispatch: capability probing, registry, sparsity-aware selection |
 //! | [`perf`] | Sapphire Rapids memory/cost model, pipeline slots, roofline |
-//! | [`models`] | Llama-family shape configs + synthetic weight store |
+//! | [`models`] | Llama-family shape configs, synthetic weights, per-layer decode plans + native forward |
 //! | [`kvcache`] | §6.2 static-sparse + dynamic-dense KV cache manager |
 //! | [`baselines`] | PyTorch / DeepSparse / llama.cpp cost models |
 //! | [`runtime`] | PJRT client wrapper, HLO artifact loader, executor |
-//! | [`coordinator`] | request queue, continuous batcher, engine, server |
+//! | [`coordinator`] | request queue, continuous batcher, engine (native + PJRT paths), server |
 //! | [`bench`] | criterion-lite measurement harness |
 
 pub mod util;

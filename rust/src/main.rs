@@ -1,19 +1,23 @@
 //! `sparamx` CLI — the Layer-3 leader binary.
 //!
 //! Subcommands:
-//!   serve     — start the TCP serving engine on the AOT artifacts
+//!   serve     — start the TCP serving engine (native plan-compiled
+//!               decode by default; `--engine pjrt` for AOT artifacts)
 //!   generate  — one-shot generation for a prompt (loads engine inline)
 //!   eval      — perplexity / accuracy of the tiny checkpoint under
 //!               weight and KV sparsity (the paper's §6 experiments)
-//!   info      — print artifact + machine-model information
+//!   info      — print artifact + machine-model + decode-plan info
 
 use sparamx::amx::EventCounters;
 use sparamx::backend::{BackendChoice, BackendRegistry, CpuCaps, Dtype, GemmShape};
-use sparamx::cfg::RuntimeConfig;
+use sparamx::cfg::{EngineChoice, RuntimeConfig};
 use sparamx::coordinator::batcher::AdmissionQueue;
 use sparamx::coordinator::engine::Engine;
+use sparamx::coordinator::server::ServerCtx;
 use sparamx::coordinator::{request, server};
+use sparamx::models::plan::plan_model;
 use sparamx::models::tinyforward::{KvTreatment, TinyModel};
+use sparamx::models::ModelConfig;
 use sparamx::perf::Machine;
 use sparamx::runtime::artifact::Bundle;
 use sparamx::runtime::executor::Runtime;
@@ -30,9 +34,10 @@ fn main() {
         Some("info") => cmd_info(&args),
         _ => {
             eprintln!(
-                "sparamx {} — usage:\n  sparamx serve    [--artifacts DIR] [--port P] [--sparsity S] [--backend {b}]\n  sparamx generate [--artifacts DIR] [--max-tokens N] [--backend {b}] PROMPT...\n  sparamx eval     [--artifacts DIR] [--sparsity S] [--k-sparsity S] [--v-sparsity S] [--int8-kv] [--backend {b}]\n  sparamx info     [--artifacts DIR] [--cores N]",
+                "sparamx {} — usage:\n  sparamx serve    [--artifacts DIR] [--port P] [--sparsity S] [--backend {b}] [--engine {e}]\n  sparamx generate [--artifacts DIR] [--max-tokens N] [--backend {b}] [--engine {e}] PROMPT...\n  sparamx eval     [--artifacts DIR] [--sparsity S] [--k-sparsity S] [--v-sparsity S] [--int8-kv] [--backend {b}]\n  sparamx info     [--artifacts DIR] [--cores N] [--model NAME] [--sparsity S]",
                 sparamx::VERSION,
-                b = BackendChoice::HELP
+                b = BackendChoice::HELP,
+                e = EngineChoice::HELP
             );
             2
         }
@@ -49,30 +54,52 @@ fn config_from(args: &Args) -> RuntimeConfig {
     cfg.port = args.get_parse("port", cfg.port);
     cfg.weight_sparsity = args.get_parse("sparsity", cfg.weight_sparsity);
     cfg.max_new_tokens = args.get_parse("max-tokens", cfg.max_new_tokens);
+    cfg.max_ctx = args.get_parse("max-ctx", cfg.max_ctx);
     if args.options.contains_key("backend") {
         cfg.backend = args.backend();
+    }
+    if args.options.contains_key("engine") {
+        cfg.engine = args.engine();
     }
     cfg.validate().expect("config");
     cfg
 }
 
+/// Build the engine for the resolved `--engine` directive. The PJRT
+/// runtime is only constructed when that path is explicitly requested
+/// (the default build stubs it out); it is returned alongside the
+/// engine so the client outlives the compiled executables.
+fn load_engine(bundle: &Bundle, cfg: &RuntimeConfig) -> (Engine, Option<Runtime>) {
+    if cfg.engine.resolved_native() {
+        (Engine::load_native(bundle, cfg.clone()).expect("engine"), None)
+    } else {
+        let rt = Runtime::cpu().expect("pjrt client");
+        let engine = Engine::load_pjrt(&rt, bundle, cfg.clone()).expect("engine");
+        (engine, Some(rt))
+    }
+}
+
 fn cmd_serve(args: &Args) -> i32 {
     let cfg = config_from(args);
     let bundle = Bundle::load(&cfg.artifacts_dir).expect("load artifacts");
-    let rt = Runtime::cpu().expect("pjrt client");
-    let mut engine = Engine::load(&rt, &bundle, cfg.clone()).expect("engine");
+    let (mut engine, _rt) = load_engine(&bundle, &cfg);
     let queue = Arc::new(AdmissionQueue::new(cfg.queue_capacity));
     let listener =
         std::net::TcpListener::bind(("127.0.0.1", cfg.port)).expect("bind port");
     println!(
-        "sparamx serving on 127.0.0.1:{} (sparsity {:.0}%, batch {})",
+        "sparamx serving on 127.0.0.1:{} (engine {}, sparsity {:.0}%, batch {})",
         cfg.port,
+        engine.describe(),
         cfg.weight_sparsity * 100.0,
         engine.geometry().decode_batch
     );
-    let q2 = Arc::clone(&queue);
-    let max = cfg.max_new_tokens;
-    std::thread::spawn(move || server::serve(listener, q2, max));
+    let ctx = ServerCtx {
+        queue: Arc::clone(&queue),
+        default_max_tokens: cfg.max_new_tokens,
+        metrics: Arc::clone(&engine.metrics),
+        engine: engine.describe(),
+    };
+    std::thread::spawn(move || server::serve(listener, ctx));
     engine.run(&queue).expect("engine loop");
     0
 }
@@ -85,8 +112,7 @@ fn cmd_generate(args: &Args) -> i32 {
         return 2;
     }
     let bundle = Bundle::load(&cfg.artifacts_dir).expect("load artifacts");
-    let rt = Runtime::cpu().expect("pjrt client");
-    let mut engine = Engine::load(&rt, &bundle, cfg.clone()).expect("engine");
+    let (mut engine, _rt) = load_engine(&bundle, &cfg);
     let queue = Arc::new(AdmissionQueue::new(4));
     let (tx, rx) = mpsc::channel();
     queue
@@ -103,10 +129,11 @@ fn cmd_generate(args: &Args) -> i32 {
     let resp = rx.recv().expect("response");
     println!("{prompt}{}", resp.text());
     eprintln!(
-        "[{} tokens, {:.1} ms total, {:.2} ms/token]",
+        "[{} tokens, {:.1} ms total, {:.2} ms/token, engine {}]",
         resp.tokens.len(),
         resp.total_latency_s * 1e3,
-        resp.per_token_s * 1e3
+        resp.per_token_s * 1e3,
+        engine.engine_path()
     );
     0
 }
@@ -191,5 +218,22 @@ fn cmd_info(args: &Args) -> i32 {
         registry.caps().describe(),
         names.join(", ")
     );
+    // decode-plan preview: the per-shape selections `plan_model` would
+    // cache for a named config at decode batch 1
+    let model_name = args.get("model", "tiny");
+    match ModelConfig::by_name(&model_name) {
+        Some(mc) => {
+            let plan = plan_model(
+                &registry,
+                cfg.backend,
+                &mc,
+                1,
+                cfg.weight_sparsity,
+                Dtype::Bf16,
+            );
+            println!("decode plan [{}]: {}", mc.name, plan.describe());
+        }
+        None => println!("decode plan: unknown model '{model_name}'"),
+    }
     0
 }

@@ -2,7 +2,9 @@
 //! model, plus the synthetic weight store used by simulator experiments.
 
 pub mod llama;
+pub mod plan;
 pub mod weights;
 pub mod tinyforward;
 
 pub use llama::{LinearShape, ModelConfig};
+pub use plan::{plan_model, DecodePlan, ModelPlan, NativeModel};

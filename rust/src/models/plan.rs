@@ -1,0 +1,632 @@
+//! Per-layer backend plans: the model-load-time compilation step that
+//! turns a [`ModelConfig`]'s linear shapes into cached kernel
+//! [`Selection`]s and pre-packed operands, so the decode loop never
+//! consults the registry or repacks a weight (the paper's
+//! "preprocessing happens once", §7).
+//!
+//! Two levels:
+//!
+//! * [`plan_model`] — pure shape-level planning over any
+//!   [`ModelConfig`]: one [`Selection`] per *distinct* `LinearShape`
+//!   (q/k/v/o, gate/up/down, lm_head), resolved once through the
+//!   [`BackendRegistry`]. Layers share shapes, so a 32-layer model
+//!   computes at most eight selections. This is the per-layer
+//!   heterogeneous dispatch of Shen et al. (arXiv:2306.16601) grounded
+//!   in the roofline-style cost model (`perf/cost.rs`), as in DECA
+//!   (arXiv:2505.19349).
+//! * [`DecodePlan::compile`] — binds a shape plan to an actual
+//!   [`TinyModel`]'s weights: every projection matrix is packed once
+//!   into the operand class its selection chose (bitmap+values sparse
+//!   stream or dense tile stream), producing [`PlannedLinear`]s the
+//!   native engine dispatches directly.
+//!
+//! [`NativeModel`] is the serving-side forward built on a compiled
+//! plan: batched prefill that also builds the per-(layer, kv-head)
+//! [`HeadCache`]s, and a per-token `decode_step` that runs every
+//! projection through its planned kernel and attention through
+//! [`crate::kvcache::attention::attend_sparse`]. Kernel free functions
+//! stay confined to `backend/` and `amx/kernels.rs`; this module only
+//! speaks the [`Backend`] handle API.
+
+use crate::amx::EventCounters;
+use crate::backend::{
+    Backend, BackendChoice, BackendRegistry, Dtype, GemmShape, PackedOperand, Selection,
+};
+use crate::kvcache::attention::attend_sparse;
+use crate::kvcache::cache::{HeadCache, KvCache};
+use crate::models::llama::{LinearShape, ModelConfig};
+use crate::models::tinyforward::{
+    add_inplace, rmsnorm_rows, rope_rows_from, silu, treat, TinyModel,
+};
+use std::collections::HashMap;
+
+/// One planned linear shape: the shape plus the load-time selection
+/// that every layer instance of this shape shares.
+#[derive(Clone, Debug)]
+pub struct PlannedShape {
+    pub shape: LinearShape,
+    pub selection: Selection,
+}
+
+/// Shape-level plan for a whole model: per-layer shapes plus the LM
+/// head, each bound to a cached [`Selection`].
+#[derive(Clone, Debug)]
+pub struct ModelPlan {
+    /// The seven per-layer linears in [`ModelConfig::layer_linears`]
+    /// order (shared by every decoder layer).
+    pub per_layer: Vec<PlannedShape>,
+    pub lm_head: PlannedShape,
+    /// How many distinct selections the registry actually computed —
+    /// the cache hit assertion for tests: equals the number of distinct
+    /// `(in_features, out_features)` pairs, never `linears_planned`.
+    pub selections_computed: usize,
+    /// Total linear instances covered (layers × per-layer + head).
+    pub linears_planned: usize,
+}
+
+impl ModelPlan {
+    /// Selection for a named per-layer linear.
+    pub fn for_name(&self, name: &str) -> Option<&PlannedShape> {
+        if self.lm_head.shape.name == name {
+            return Some(&self.lm_head);
+        }
+        self.per_layer.iter().find(|p| p.shape.name == name)
+    }
+
+    /// Human-readable one-plan-per-shape summary for logs/`info`.
+    pub fn describe(&self) -> String {
+        let mut parts: Vec<String> = self
+            .per_layer
+            .iter()
+            .map(|p| format!("{}={}", p.shape.name, p.selection.describe()))
+            .collect();
+        parts.push(format!("lm_head={}", self.lm_head.selection.describe()));
+        format!(
+            "{} ({} selections for {} linears)",
+            parts.join(" "),
+            self.selections_computed,
+            self.linears_planned
+        )
+    }
+}
+
+/// Walk a [`ModelConfig`]'s linear shapes and resolve one [`Selection`]
+/// per distinct shape through the registry. `batch` is the decode
+/// batch the plan optimizes for (per-slot decode GEMMs run at batch 1);
+/// `sparsity` is the weight sparsity the matrices will be pruned to.
+///
+/// Selection runs here — at model load — and never in the token loop;
+/// [`ModelPlan::selections_computed`] counts the registry consultations
+/// so tests can assert exactly one per distinct shape.
+pub fn plan_model(
+    registry: &BackendRegistry,
+    choice: BackendChoice,
+    model: &ModelConfig,
+    batch: usize,
+    sparsity: f64,
+    dtype: Dtype,
+) -> ModelPlan {
+    let mut cache: HashMap<(usize, usize), Selection> = HashMap::new();
+    let mut computed = 0usize;
+    let mut resolve = |shape: &LinearShape| -> Selection {
+        cache
+            .entry((shape.in_features, shape.out_features))
+            .or_insert_with(|| {
+                computed += 1;
+                registry.resolve(choice, GemmShape::for_linear(shape, batch), sparsity, dtype)
+            })
+            .clone()
+    };
+    let per_layer: Vec<PlannedShape> = model
+        .layer_linears()
+        .iter()
+        .map(|l| PlannedShape {
+            shape: *l,
+            selection: resolve(l),
+        })
+        .collect();
+    let head = model.lm_head();
+    let lm_head = PlannedShape {
+        selection: resolve(&head),
+        shape: head,
+    };
+    drop(resolve);
+    ModelPlan {
+        linears_planned: model.layers * per_layer.len() + 1,
+        per_layer,
+        lm_head,
+        selections_computed: computed,
+    }
+}
+
+/// One serving linear: pre-packed operand + the selection that chose
+/// its kernel. `run` is the only thing the token loop calls.
+pub struct PlannedLinear {
+    pub name: &'static str,
+    /// Inner dimension (input features).
+    pub rows: usize,
+    /// Output features.
+    pub cols: usize,
+    pub selection: Selection,
+    operand: PackedOperand,
+}
+
+impl PlannedLinear {
+    /// Pack `w` (`rows × cols`, row-major) for `selection`'s kernel
+    /// class via the shared [`PackedOperand`] policy.
+    fn pack(
+        name: &'static str,
+        w: &[f32],
+        rows: usize,
+        cols: usize,
+        selection: Selection,
+    ) -> PlannedLinear {
+        debug_assert_eq!(w.len(), rows * cols, "{name}: weight shape mismatch");
+        let operand =
+            PackedOperand::pack_f32(&selection.backend, w, rows, cols, selection.use_sparse);
+        PlannedLinear {
+            name,
+            rows,
+            cols,
+            selection,
+            operand,
+        }
+    }
+
+    /// Dispatch one GEMM: `x` is `batch × rows` row-major, output is
+    /// `batch × cols`. No selection, no packing — both happened at
+    /// compile time.
+    pub fn run(&self, x: &[f32], batch: usize, ctr: &mut EventCounters) -> Vec<f32> {
+        debug_assert_eq!(x.len(), batch * self.rows, "{}: input shape", self.name);
+        self.operand.gemm_bf16(&self.selection.backend, x, batch, ctr)
+    }
+}
+
+/// One decoder layer's planned projections.
+pub struct LayerPlan {
+    pub wq: PlannedLinear,
+    pub wk: PlannedLinear,
+    pub wv: PlannedLinear,
+    pub wo: PlannedLinear,
+    pub wgate: PlannedLinear,
+    pub wup: PlannedLinear,
+    pub wdown: PlannedLinear,
+}
+
+/// The compiled serving plan for a loaded model: every projection
+/// pre-packed and bound to its selected kernel, plus the backend the
+/// attention static segment runs through.
+pub struct DecodePlan {
+    pub layers: Vec<LayerPlan>,
+    pub lm_head: PlannedLinear,
+    /// Backend serving the KV static-segment GEMMs in attention (the
+    /// kernel class that won the q_proj shape).
+    pub attention: Backend,
+    /// Shape-level plan stats, carried over from [`plan_model`].
+    pub selections_computed: usize,
+    pub linears_planned: usize,
+}
+
+impl DecodePlan {
+    /// Compile a plan for `model` (weights already pruned to
+    /// `sparsity`): resolve selections per distinct shape via
+    /// [`plan_model`], then pack every projection matrix once.
+    pub fn compile(
+        registry: &BackendRegistry,
+        choice: BackendChoice,
+        model: &TinyModel,
+        sparsity: f64,
+    ) -> DecodePlan {
+        let mc = model_config_of(model);
+        let sp = plan_model(registry, choice, &mc, 1, sparsity, Dtype::Bf16);
+        let sel = |name: &str| -> Selection {
+            sp.for_name(name)
+                .expect("plan_model covers every projection name")
+                .selection
+                .clone()
+        };
+        let (h, inter, qd, kvd) = (
+            model.hidden,
+            model.inter,
+            model.heads * model.head_dim,
+            model.kv_heads * model.head_dim,
+        );
+        let layers = model
+            .layers
+            .iter()
+            .map(|l| LayerPlan {
+                wq: PlannedLinear::pack("q_proj", &l.wq, h, qd, sel("q_proj")),
+                wk: PlannedLinear::pack("k_proj", &l.wk, h, kvd, sel("k_proj")),
+                wv: PlannedLinear::pack("v_proj", &l.wv, h, kvd, sel("v_proj")),
+                wo: PlannedLinear::pack("o_proj", &l.wo, qd, h, sel("o_proj")),
+                wgate: PlannedLinear::pack("gate_proj", &l.wgate, h, inter, sel("gate_proj")),
+                wup: PlannedLinear::pack("up_proj", &l.wup, h, inter, sel("up_proj")),
+                wdown: PlannedLinear::pack("down_proj", &l.wdown, inter, h, sel("down_proj")),
+            })
+            .collect();
+        DecodePlan {
+            layers,
+            lm_head: PlannedLinear::pack(
+                "lm_head",
+                &model.lm_head,
+                h,
+                model.vocab,
+                sel("lm_head"),
+            ),
+            attention: sp
+                .for_name("q_proj")
+                .expect("q_proj always planned")
+                .selection
+                .backend
+                .clone(),
+            selections_computed: sp.selections_computed,
+            linears_planned: sp.linears_planned,
+        }
+    }
+
+    /// Human-readable plan summary for banners/logs.
+    pub fn describe(&self) -> String {
+        let head = &self.lm_head;
+        let first = self.layers.first();
+        let layer_desc = first
+            .map(|l| {
+                format!(
+                    "qkv={} mlp={} ",
+                    l.wq.selection.describe(),
+                    l.wup.selection.describe()
+                )
+            })
+            .unwrap_or_default();
+        format!(
+            "{layer_desc}head={} ({} selections / {} linears)",
+            head.selection.describe(),
+            self.selections_computed,
+            self.linears_planned
+        )
+    }
+}
+
+/// Derive the shape config of a loaded tiny-family model (works for the
+/// build-time checkpoint and synthetic test models alike).
+fn model_config_of(model: &TinyModel) -> ModelConfig {
+    ModelConfig {
+        name: "native".into(),
+        hidden: model.hidden,
+        intermediate: model.inter,
+        layers: model.layers.len(),
+        heads: model.heads,
+        kv_heads: model.kv_heads,
+        head_dim: model.head_dim,
+        vocab: model.vocab,
+    }
+}
+
+/// The plan-compiled serving model: weights + [`DecodePlan`]. This is
+/// the native engine's whole forward surface — prefill builds the
+/// per-slot [`KvCache`], `decode_step` serves one token.
+pub struct NativeModel {
+    pub model: TinyModel,
+    pub plan: DecodePlan,
+}
+
+impl NativeModel {
+    /// Compile a plan for an already-pruned model.
+    pub fn new(
+        registry: &BackendRegistry,
+        choice: BackendChoice,
+        model: TinyModel,
+        sparsity: f64,
+    ) -> NativeModel {
+        let plan = DecodePlan::compile(registry, choice, &model, sparsity);
+        NativeModel { model, plan }
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.model.vocab
+    }
+
+    /// Prefill over `tokens` (the prompt minus its final token): run the
+    /// planned forward, build the pruned static KV segment per (layer,
+    /// kv-head), and discard the logits (the decode loop produces the
+    /// first output from the final prompt token).
+    ///
+    /// Prompt hidden states use the same per-head-pruned K/V the caches
+    /// store, so prefill and decode see one consistent context (§6.1).
+    pub fn prefill(
+        &self,
+        tokens: &[u8],
+        k_sparsity: f64,
+        v_sparsity: f64,
+        ctr: &mut EventCounters,
+    ) -> KvCache {
+        let m = &self.model;
+        let (h_dim, heads, kvh, hd) = (m.hidden, m.heads, m.kv_heads, m.head_dim);
+        let s = tokens.len();
+        let group = heads / kvh;
+        if s == 0 {
+            let heads_empty = (0..m.layers.len())
+                .map(|_| {
+                    (0..kvh)
+                        .map(|_| HeadCache::from_prefill(&[], &[], 0, hd, k_sparsity, v_sparsity))
+                        .collect()
+                })
+                .collect();
+            return KvCache {
+                heads: heads_empty,
+                kv_heads: kvh,
+            };
+        }
+        let mut h = vec![0f32; s * h_dim];
+        for (t, &tok) in tokens.iter().enumerate() {
+            h[t * h_dim..(t + 1) * h_dim]
+                .copy_from_slice(&m.emb[tok as usize * h_dim..(tok as usize + 1) * h_dim]);
+        }
+        let mut cache_layers: Vec<Vec<HeadCache>> = Vec::with_capacity(m.layers.len());
+        for (lw, lp) in m.layers.iter().zip(self.plan.layers.iter()) {
+            let x = rmsnorm_rows(&h, s, h_dim, &lw.ln1);
+            let mut q = lp.wq.run(&x, s, ctr);
+            let mut k = lp.wk.run(&x, s, ctr);
+            let v = lp.wv.run(&x, s, ctr);
+            rope_rows_from(&mut q, s, heads, hd, 0);
+            rope_rows_from(&mut k, s, kvh, hd, 0);
+            // build this layer's static segment from the post-RoPE K/V
+            let mut layer_caches = Vec::with_capacity(kvh);
+            for head in 0..kvh {
+                let mut kh = Vec::with_capacity(s * hd);
+                let mut vh = Vec::with_capacity(s * hd);
+                for t in 0..s {
+                    kh.extend_from_slice(&k[(t * kvh + head) * hd..(t * kvh + head) * hd + hd]);
+                    vh.extend_from_slice(&v[(t * kvh + head) * hd..(t * kvh + head) * hd + hd]);
+                }
+                layer_caches.push(HeadCache::from_prefill(
+                    &kh, &vh, s, hd, k_sparsity, v_sparsity,
+                ));
+            }
+            cache_layers.push(layer_caches);
+            // prompt hidden states attend over the pruned K/V (dense
+            // causal math — prefill is compute-bound and runs once)
+            let kt = treat(&k, s, kvh, hd, k_sparsity, false);
+            let vt = treat(&v, s, kvh, hd, v_sparsity, false);
+            let mut ctx = vec![0f32; s * heads * hd];
+            let scale = 1.0 / (hd as f32).sqrt();
+            for qh in 0..heads {
+                let khh = qh / group;
+                for t in 0..s {
+                    let qrow = &q[(t * heads + qh) * hd..(t * heads + qh) * hd + hd];
+                    let mut scores = Vec::with_capacity(t + 1);
+                    for u in 0..=t {
+                        let krow = &kt[(u * kvh + khh) * hd..(u * kvh + khh) * hd + hd];
+                        let dot: f32 = qrow.iter().zip(krow).map(|(a, b)| a * b).sum();
+                        scores.push(dot * scale);
+                    }
+                    crate::kvcache::attention::softmax(&mut scores);
+                    let out = &mut ctx[(t * heads + qh) * hd..(t * heads + qh) * hd + hd];
+                    for (u, &p) in scores.iter().enumerate() {
+                        let vrow = &vt[(u * kvh + khh) * hd..(u * kvh + khh) * hd + hd];
+                        for d in 0..hd {
+                            out[d] += p * vrow[d];
+                        }
+                    }
+                }
+            }
+            let o = lp.wo.run(&ctx, s, ctr);
+            add_inplace(&mut h, &o);
+            let x = rmsnorm_rows(&h, s, h_dim, &lw.ln2);
+            let gate = lp.wgate.run(&x, s, ctr);
+            let up = lp.wup.run(&x, s, ctr);
+            let act: Vec<f32> = gate
+                .iter()
+                .zip(up.iter())
+                .map(|(&g, &u)| silu(g) * u)
+                .collect();
+            let down = lp.wdown.run(&act, s, ctr);
+            add_inplace(&mut h, &down);
+        }
+        KvCache {
+            heads: cache_layers,
+            kv_heads: kvh,
+        }
+    }
+
+    /// One token of plan-driven decode: every projection runs its
+    /// pre-selected kernel on its pre-packed operand, attention runs
+    /// [`attend_sparse`] over the slot's cache (sparse static segment +
+    /// dense dynamic tail), and the new K/V rows append to the tail.
+    /// Returns the next-token logits (`vocab` long).
+    pub fn decode_step(
+        &self,
+        token: u8,
+        pos: usize,
+        cache: &mut KvCache,
+        ctr: &mut EventCounters,
+    ) -> Vec<f32> {
+        let m = &self.model;
+        let (h_dim, heads, kvh, hd) = (m.hidden, m.heads, m.kv_heads, m.head_dim);
+        let group = heads / kvh;
+        let mut h =
+            m.emb[token as usize * h_dim..(token as usize + 1) * h_dim].to_vec();
+        for (layer_idx, (lw, lp)) in m.layers.iter().zip(self.plan.layers.iter()).enumerate() {
+            let x = rmsnorm_rows(&h, 1, h_dim, &lw.ln1);
+            let mut q = lp.wq.run(&x, 1, ctr);
+            let mut k = lp.wk.run(&x, 1, ctr);
+            let v = lp.wv.run(&x, 1, ctr);
+            rope_rows_from(&mut q, 1, heads, hd, pos);
+            rope_rows_from(&mut k, 1, kvh, hd, pos);
+            // append this token's K/V to the dynamic tail first so
+            // attention sees position `pos` (causal self-inclusion)
+            for head in 0..kvh {
+                cache.heads[layer_idx][head]
+                    .append(&k[head * hd..(head + 1) * hd], &v[head * hd..(head + 1) * hd]);
+            }
+            let mut ctx = vec![0f32; heads * hd];
+            for qh in 0..heads {
+                let hc = &cache.heads[layer_idx][qh / group];
+                let out = attend_sparse(hc, &q[qh * hd..(qh + 1) * hd], &self.plan.attention, ctr);
+                ctx[qh * hd..(qh + 1) * hd].copy_from_slice(&out);
+            }
+            let o = lp.wo.run(&ctx, 1, ctr);
+            add_inplace(&mut h, &o);
+            let x = rmsnorm_rows(&h, 1, h_dim, &lw.ln2);
+            let gate = lp.wgate.run(&x, 1, ctr);
+            let up = lp.wup.run(&x, 1, ctr);
+            let act: Vec<f32> = gate
+                .iter()
+                .zip(up.iter())
+                .map(|(&g, &u)| silu(g) * u)
+                .collect();
+            let down = lp.wdown.run(&act, 1, ctr);
+            add_inplace(&mut h, &down);
+        }
+        let xf = rmsnorm_rows(&h, 1, h_dim, &m.ln_f);
+        self.plan.lm_head.run(&xf, 1, ctr)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::{BackendKind, CpuCaps};
+
+    fn toy_model() -> TinyModel {
+        let mut g = crate::util::XorShift::new(7);
+        let (h, inter, heads, kvh, hd, vocab) = (16, 24, 4, 2, 4, 32);
+        let mut mk = |n: usize| g.normal_vec(n, 0.3);
+        TinyModel {
+            hidden: h,
+            inter,
+            heads,
+            kv_heads: kvh,
+            head_dim: hd,
+            vocab,
+            emb: mk(vocab * h),
+            layers: (0..2)
+                .map(|_| crate::models::tinyforward::LayerW {
+                    ln1: vec![1.0; h],
+                    wq: mk(h * heads * hd),
+                    wk: mk(h * kvh * hd),
+                    wv: mk(h * kvh * hd),
+                    wo: mk(heads * hd * h),
+                    ln2: vec![1.0; h],
+                    wgate: mk(h * inter),
+                    wup: mk(h * inter),
+                    wdown: mk(inter * h),
+                })
+                .collect(),
+            ln_f: vec![1.0; h],
+            lm_head: mk(h * vocab),
+        }
+    }
+
+    #[test]
+    fn plan_model_caches_one_selection_per_distinct_shape() {
+        let reg = BackendRegistry::with_caps(CpuCaps::all());
+        let mc = ModelConfig::tiny();
+        let plan = plan_model(&reg, BackendChoice::Auto, &mc, 1, 0.5, Dtype::Bf16);
+        // tiny shapes: q=o=(128,128), k=v=(128,64), gate=up=(128,352),
+        // down=(352,128), lm_head=(128,256) → 5 distinct
+        assert_eq!(plan.selections_computed, 5);
+        assert_eq!(plan.linears_planned, mc.layers * 7 + 1);
+        assert_eq!(plan.per_layer.len(), 7);
+        // shared shapes share the same resolved plan
+        let q = plan.for_name("q_proj").unwrap();
+        let o = plan.for_name("o_proj").unwrap();
+        assert_eq!(q.selection.backend, o.selection.backend);
+        assert_eq!(q.selection.use_sparse, o.selection.use_sparse);
+    }
+
+    #[test]
+    fn plan_model_big_model_stays_small() {
+        // 32-layer Llama 3 8B: 225 linears, at most 8 distinct shapes.
+        let reg = BackendRegistry::with_caps(CpuCaps::all());
+        let mc = ModelConfig::llama3_8b();
+        let plan = plan_model(&reg, BackendChoice::Auto, &mc, 1, 0.5, Dtype::Bf16);
+        assert_eq!(plan.linears_planned, 32 * 7 + 1);
+        assert!(plan.selections_computed <= 8, "{}", plan.selections_computed);
+        assert!(plan.describe().contains("lm_head="));
+    }
+
+    #[test]
+    fn compile_packs_every_projection() {
+        let reg = BackendRegistry::with_caps(CpuCaps::all());
+        let model = toy_model();
+        let plan = DecodePlan::compile(&reg, BackendChoice::Auto, &model, 0.0);
+        assert_eq!(plan.layers.len(), 2);
+        assert_eq!(plan.lm_head.cols, model.vocab);
+        assert_eq!(plan.linears_planned, 2 * 7 + 1);
+        // zero sparsity must never plan the sparse kernel class
+        for l in &plan.layers {
+            assert!(!l.wq.selection.use_sparse);
+            assert!(!l.wdown.selection.use_sparse);
+        }
+        let mut ctr = EventCounters::default();
+        let x = vec![0.5f32; model.hidden];
+        let out = plan.lm_head.run(&x, 1, &mut ctr);
+        assert_eq!(out.len(), model.vocab);
+        assert!(out.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn planned_linear_matches_reference_numerics() {
+        let reg = BackendRegistry::with_caps(CpuCaps::all());
+        let mut model = toy_model();
+        model.prune_weights(0.5);
+        let plan = DecodePlan::compile(&reg, BackendChoice::Auto, &model, 0.5);
+        let mut g = crate::util::XorShift::new(11);
+        let x = g.normal_vec(model.hidden, 1.0);
+        let mut ctr = EventCounters::default();
+        let got = plan.layers[0].wq.run(&x, 1, &mut ctr);
+        // plain f32 reference on the same pruned weights
+        let (rows, cols) = (model.hidden, model.heads * model.head_dim);
+        let w = &model.layers[0].wq;
+        for c in 0..cols {
+            let mut want = 0f32;
+            for r in 0..rows {
+                want += x[r] * w[r * cols + c];
+            }
+            assert!(
+                (got[c] - want).abs() < 0.05 + want.abs() * 0.05,
+                "col {c}: {} vs {want}",
+                got[c]
+            );
+        }
+    }
+
+    #[test]
+    fn caps_none_plan_falls_back_to_reference_everywhere() {
+        let reg = BackendRegistry::with_caps(CpuCaps::none());
+        let mc = ModelConfig::tiny();
+        let plan = plan_model(&reg, BackendChoice::Auto, &mc, 1, 0.5, Dtype::Bf16);
+        for p in plan.per_layer.iter().chain([&plan.lm_head]) {
+            assert_eq!(p.selection.backend.kind(), BackendKind::Reference);
+            assert!(!p.selection.use_sparse);
+        }
+    }
+
+    #[test]
+    fn decode_step_extends_cache_and_returns_logits() {
+        let reg = BackendRegistry::with_caps(CpuCaps::all());
+        let model = toy_model();
+        let nm = NativeModel::new(&reg, BackendChoice::Auto, model, 0.0);
+        let mut ctr = EventCounters::default();
+        let mut cache = nm.prefill(&[1, 2, 3], 0.0, 0.0, &mut ctr);
+        assert_eq!(cache.heads.len(), 2);
+        assert_eq!(cache.heads[0][0].len(), 3);
+        let logits = nm.decode_step(4, 3, &mut cache, &mut ctr);
+        assert_eq!(logits.len(), nm.vocab());
+        assert!(logits.iter().all(|v| v.is_finite()));
+        assert_eq!(cache.heads[0][0].len(), 4, "decode appends to the tail");
+        assert_eq!(cache.heads[1][1].dyn_len(), 1);
+        assert!(ctr.instructions() > 0, "planned kernels tick events");
+    }
+
+    #[test]
+    fn empty_prefill_then_decode_works() {
+        let reg = BackendRegistry::with_caps(CpuCaps::all());
+        let nm = NativeModel::new(&reg, BackendChoice::Auto, toy_model(), 0.0);
+        let mut ctr = EventCounters::default();
+        let mut cache = nm.prefill(&[], 0.0, 0.0, &mut ctr);
+        let logits = nm.decode_step(9, 0, &mut cache, &mut ctr);
+        assert_eq!(logits.len(), nm.vocab());
+        assert_eq!(cache.heads[0][0].len(), 1);
+    }
+}

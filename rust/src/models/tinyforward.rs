@@ -6,11 +6,9 @@
 //! Numerics are validated against the PJRT `eval_logits` artifact in the
 //! integration tests (same weights → same NLL to float tolerance).
 
-use crate::amx::kernels::DenseWeights;
 use crate::amx::EventCounters;
-use crate::backend::{Backend, BackendKind};
+use crate::backend::{Backend, PackedOperand};
 use crate::runtime::artifact::Bundle;
-use crate::sparse::format::SparseTensor;
 use crate::sparse::prune::{magnitude_prune, magnitude_prune_inplace};
 use crate::util::error::{anyhow, Result};
 
@@ -285,8 +283,17 @@ impl TinyModel {
     }
 }
 
-/// Prune and/or INT8-roundtrip a cached tensor, per head.
-fn treat(x: &[f32], s: usize, heads: usize, hd: usize, sparsity: f64, int8: bool) -> Vec<f32> {
+/// Prune and/or INT8-roundtrip a cached tensor, per head. Shared with
+/// the native decode path ([`crate::models::plan`]) so prefill applies
+/// the same per-head KV treatment as full-sequence evaluation.
+pub(crate) fn treat(
+    x: &[f32],
+    s: usize,
+    heads: usize,
+    hd: usize,
+    sparsity: f64,
+    int8: bool,
+) -> Vec<f32> {
     let mut out = x.to_vec();
     if sparsity > 0.0 {
         // per-head grouping: gather each head's values across positions
@@ -325,22 +332,17 @@ fn treat(x: &[f32], s: usize, heads: usize, hd: usize, sparsity: f64, int8: bool
 /// dense, so sparsity must clear that overhead to pay off — Fig 6).
 const SPARSE_DISPATCH_THRESHOLD: f64 = 0.25;
 
-/// One packed projection operand, dense or sparse class.
-enum PackedLinear {
-    Sparse(SparseTensor),
-    Dense(DenseWeights),
-}
-
 /// Packed-operand cache keyed by the weight matrix's data pointer +
 /// length. The lifetime parameter ties the cache to a borrow of the
 /// model whose weights it packed, so the borrow checker rejects using
 /// a cache after that model is dropped (when an allocator could hand
 /// another model the same address). Weights are immutable while the
 /// cache is alive, so keys stay stable. One cache serves one backend:
-/// the dense-class operand layout is chosen per backend kind.
+/// the dense-class operand layout is chosen per backend kind (the
+/// shared [`PackedOperand`] policy).
 #[derive(Default)]
 pub struct PackCache<'m> {
-    packed: std::collections::HashMap<(usize, usize), PackedLinear>,
+    packed: std::collections::HashMap<(usize, usize), PackedOperand>,
     _model: std::marker::PhantomData<&'m TinyModel>,
 }
 
@@ -361,22 +363,10 @@ fn backend_linear(
     let key = (w.as_ptr() as usize, w.len());
     let packed = cache.packed.entry(key).or_insert_with(|| {
         let zeros = w.iter().filter(|&&v| v == 0.0).count();
-        if (zeros as f64) > SPARSE_DISPATCH_THRESHOLD * w.len() as f64 {
-            PackedLinear::Sparse(SparseTensor::pack_f32(w, inner, cols))
-        } else if backend.kind() == BackendKind::Avx {
-            // AVX executes dense matrices as an all-elements stream;
-            // cache that operand directly so the kernel never repacks
-            // per call (AvxBackend::gemm_bf16 would otherwise convert
-            // the tile stream on every invocation)
-            PackedLinear::Sparse(SparseTensor::pack_dense_f32(w, inner, cols))
-        } else {
-            PackedLinear::Dense(DenseWeights::pack_f32(w, inner, cols))
-        }
+        let use_sparse = (zeros as f64) > SPARSE_DISPATCH_THRESHOLD * w.len() as f64;
+        PackedOperand::pack_f32(backend, w, inner, cols, use_sparse)
     });
-    match packed {
-        PackedLinear::Sparse(sp) => backend.sparse_gemm_bf16(x, rows, sp, ctr),
-        PackedLinear::Dense(dw) => backend.gemm_bf16(x, rows, dw, ctr),
-    }
+    packed.gemm_bf16(backend, x, rows, ctr)
 }
 
 fn gemm(x: &[f32], rows: usize, inner: usize, w: &[f32], cols: usize) -> Vec<f32> {
@@ -399,7 +389,7 @@ fn gemm(x: &[f32], rows: usize, inner: usize, w: &[f32], cols: usize) -> Vec<f32
     out
 }
 
-fn rmsnorm_rows(x: &[f32], rows: usize, dim: usize, g: &[f32]) -> Vec<f32> {
+pub(crate) fn rmsnorm_rows(x: &[f32], rows: usize, dim: usize, g: &[f32]) -> Vec<f32> {
     let mut out = vec![0f32; rows * dim];
     for r in 0..rows {
         let row = &x[r * dim..(r + 1) * dim];
@@ -414,13 +404,19 @@ fn rmsnorm_rows(x: &[f32], rows: usize, dim: usize, g: &[f32]) -> Vec<f32> {
 
 /// Rotary embedding matching `model.py::rope` (half-split layout).
 fn rope_rows(x: &mut [f32], s: usize, heads: usize, hd: usize) {
+    rope_rows_from(x, s, heads, hd, 0)
+}
+
+/// [`rope_rows`] with an absolute starting position, for incremental
+/// decode: row `t` of `x` is rotated as sequence position `start + t`.
+pub(crate) fn rope_rows_from(x: &mut [f32], s: usize, heads: usize, hd: usize, start: usize) {
     let half = hd / 2;
     for t in 0..s {
         for h in 0..heads {
             let base = (t * heads + h) * hd;
             for i in 0..half {
                 let freq = 1.0 / 10000f32.powf(i as f32 / half as f32);
-                let angle = t as f32 * freq;
+                let angle = (start + t) as f32 * freq;
                 let (sin, cos) = angle.sin_cos();
                 let a = x[base + i];
                 let b = x[base + half + i];
@@ -431,13 +427,13 @@ fn rope_rows(x: &mut [f32], s: usize, heads: usize, hd: usize) {
     }
 }
 
-fn add_inplace(a: &mut [f32], b: &[f32]) {
+pub(crate) fn add_inplace(a: &mut [f32], b: &[f32]) {
     for (x, y) in a.iter_mut().zip(b.iter()) {
         *x += y;
     }
 }
 
-fn silu(x: f32) -> f32 {
+pub(crate) fn silu(x: f32) -> f32 {
     x / (1.0 + (-x).exp())
 }
 

@@ -202,7 +202,14 @@ mod tests {
     fn dense_bf16_matches_simulator_exactly() {
         let mut g = XorShift::new(21);
         let amx = AmxBackend;
-        for &(b, k, n) in &[(1usize, 32usize, 16usize), (1, 64, 48), (4, 96, 80), (17, 32, 32), (33, 64, 16), (40, 50, 37)] {
+        for &(b, k, n) in &[
+            (1usize, 32usize, 16usize),
+            (1, 64, 48),
+            (4, 96, 80),
+            (17, 32, 32),
+            (33, 64, 16),
+            (40, 50, 37),
+        ] {
             let w = rand_mat(&mut g, k * n);
             let x = rand_mat(&mut g, b * k);
             let dw = DenseWeights::pack_f32(&w, k, n);
@@ -258,9 +265,17 @@ mod tests {
     fn int8_matches_simulator_exactly() {
         let mut g = XorShift::new(24);
         let amx = AmxBackend;
-        for &(b, k, n, s) in &[(1usize, 64usize, 32usize, 0.5f64), (5, 128, 48, 0.7), (2, 70, 20, 0.4)] {
+        for &(b, k, n, s) in
+            &[(1usize, 64usize, 32usize, 0.5f64), (5, 128, 48, 0.7), (2, 70, 20, 0.4)]
+        {
             let w: Vec<i8> = (0..k * n)
-                .map(|_| if g.next_f64() < s { 0 } else { (g.below(200) as i32 - 100).max(1) as i8 })
+                .map(|_| {
+                    if g.next_f64() < s {
+                        0
+                    } else {
+                        (g.below(200) as i32 - 100).max(1) as i8
+                    }
+                })
                 .collect();
             let x: Vec<i8> = (0..b * k).map(|_| (g.below(200) as i32 - 100) as i8).collect();
             let dw: DenseWeights<i8> = DenseWeights::pack(&w, k, n);

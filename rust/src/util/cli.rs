@@ -87,6 +87,18 @@ impl Args {
         }
     }
 
+    /// The `--engine {auto,native,pjrt}` serving-path directive;
+    /// defaults to `auto` (native unless PJRT is explicitly requested).
+    /// Panics with the accepted spellings on a bad value.
+    pub fn engine(&self) -> crate::cfg::EngineChoice {
+        match self.options.get("engine") {
+            None => crate::cfg::EngineChoice::Auto,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|e: String| panic!("--engine={v}: {e}")),
+        }
+    }
+
     /// Comma-separated list option, e.g. `--cores 8,16,32`.
     pub fn get_list<T: std::str::FromStr>(&self, key: &str, default: &[T]) -> Vec<T>
     where
@@ -171,5 +183,19 @@ mod tests {
     #[should_panic(expected = "unknown backend")]
     fn backend_flag_rejects_unknown() {
         let _ = parse("run --backend mkl").backend();
+    }
+
+    #[test]
+    fn engine_flag_parses_with_auto_default() {
+        use crate::cfg::EngineChoice;
+        assert_eq!(parse("run").engine(), EngineChoice::Auto);
+        assert_eq!(parse("run --engine native").engine(), EngineChoice::Native);
+        assert_eq!(parse("run --engine=pjrt").engine(), EngineChoice::Pjrt);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown engine")]
+    fn engine_flag_rejects_unknown() {
+        let _ = parse("run --engine tpu").engine();
     }
 }

@@ -3,7 +3,7 @@
 //! These run only when `artifacts/` exists (built by `make artifacts`);
 //! otherwise they skip so `cargo test` works on a fresh checkout.
 
-use sparamx::cfg::RuntimeConfig;
+use sparamx::cfg::{EngineChoice, RuntimeConfig};
 use sparamx::coordinator::batcher::AdmissionQueue;
 use sparamx::coordinator::engine::Engine;
 use sparamx::coordinator::request::Request;
@@ -198,6 +198,7 @@ fn engine_serves_batch_of_requests() {
         artifacts_dir: dir,
         weight_sparsity: 0.0,
         max_new_tokens: 8,
+        engine: EngineChoice::Pjrt, // this test covers the AOT path
         ..Default::default()
     };
     let mut engine = Engine::load(&rt, &bundle, cfg).expect("engine");
@@ -245,6 +246,7 @@ fn engine_weight_pruning_changes_output_not_stability() {
             artifacts_dir: artifacts_dir().unwrap(),
             weight_sparsity: sparsity,
             max_new_tokens: 6,
+            engine: EngineChoice::Pjrt, // this test covers the AOT path
             ..Default::default()
         };
         let mut engine = Engine::load(&rt, &bundle, cfg).expect("engine");

@@ -2,10 +2,11 @@
 //! including malformed-request and backpressure failure injection.
 //! Requires artifacts (skips otherwise).
 
-use sparamx::cfg::RuntimeConfig;
+use sparamx::cfg::{EngineChoice, RuntimeConfig};
 use sparamx::coordinator::batcher::AdmissionQueue;
 use sparamx::coordinator::engine::Engine;
 use sparamx::coordinator::server;
+use sparamx::coordinator::server::ServerCtx;
 use sparamx::runtime::artifact::Bundle;
 use sparamx::runtime::executor::Runtime;
 use std::io::{BufRead, BufReader, Write};
@@ -33,6 +34,7 @@ fn tcp_round_trip_with_failure_injection() {
         artifacts_dir: dir,
         weight_sparsity: 0.0,
         max_new_tokens: 6,
+        engine: EngineChoice::Pjrt, // this test covers the AOT path
         ..Default::default()
     };
     let bundle = Bundle::load(&cfg.artifacts_dir).expect("bundle");
@@ -42,8 +44,13 @@ fn tcp_round_trip_with_failure_injection() {
 
     let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
     let addr = listener.local_addr().unwrap();
-    let q_srv = Arc::clone(&queue);
-    std::thread::spawn(move || server::serve(listener, q_srv, 6));
+    let ctx = ServerCtx {
+        queue: Arc::clone(&queue),
+        default_max_tokens: 6,
+        metrics: Arc::clone(&engine.metrics),
+        engine: engine.describe(),
+    };
+    std::thread::spawn(move || server::serve(listener, ctx));
 
     // The PJRT executable is not Send, so the engine stays on this
     // thread; the TCP client runs on a helper thread and closes the
