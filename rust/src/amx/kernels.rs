@@ -101,6 +101,33 @@ impl<T: Element> DenseWeights<T> {
 }
 
 impl<T: Element> DenseWeights<T> {
+    /// Slice out a contiguous range of 16-neuron column blocks as a
+    /// standalone operand. The tile stream is column-block-major with k
+    /// fastest, so the slice is one contiguous byte cut of `tiles`; no
+    /// element moves relative to its k-order, which keeps sharded
+    /// execution bit-exact (see `shard::plan`). Lives here because
+    /// `_marker` is private to this module.
+    pub fn slice_col_blocks(&self, blocks: std::ops::Range<usize>) -> DenseWeights<T> {
+        assert!(
+            blocks.end <= self.col_blocks(),
+            "slice {blocks:?} out of range ({} col blocks)",
+            self.col_blocks()
+        );
+        let kc = self.k_chunks();
+        let (t0, t1) = (blocks.start * kc, blocks.end * kc);
+        let cpt = self.order.cols_per_tile;
+        let col0 = blocks.start * cpt;
+        DenseWeights {
+            rows: self.rows,
+            cols: self.cols.min(blocks.end * cpt).saturating_sub(col0),
+            rows_padded: self.rows_padded,
+            cols_padded: blocks.len() * cpt,
+            order: self.order,
+            tiles: self.tiles[t0 * Self::TILE_BYTES..t1 * Self::TILE_BYTES].to_vec(),
+            _marker: std::marker::PhantomData,
+        }
+    }
+
     /// Reconstruct the logical row-major matrix from the tile stream
     /// (reverse of [`DenseWeights::pack`]; used by backends that need the
     /// unpacked operand, e.g. the reference oracle).
@@ -944,6 +971,27 @@ mod tests {
         let wi: Vec<i8> = (0..rows * cols).map(|i| (i % 251) as i8).collect();
         let dwi: DenseWeights<i8> = DenseWeights::pack(&wi, rows, cols);
         assert_eq!(dwi.to_dense(), wi);
+    }
+
+    #[test]
+    fn dense_weights_slice_col_blocks_matches_column_slice() {
+        let mut g = XorShift::new(19);
+        let (rows, cols) = (48usize, 112usize); // 7 column blocks
+        let w = rand_mat(&mut g, rows * cols);
+        let dw = DenseWeights::pack_f32(&w, rows, cols);
+        let whole = dw.to_dense_f32();
+        for (b0, b1) in [(0usize, 7usize), (0, 3), (2, 6), (6, 7)] {
+            let sl = dw.slice_col_blocks(b0..b1);
+            let (c0, c1) = (b0 * 16, (b1 * 16).min(cols));
+            assert_eq!(sl.cols, c1 - c0);
+            assert_eq!(sl.rows, rows);
+            let got = sl.to_dense_f32();
+            let mut expect = Vec::new();
+            for k in 0..rows {
+                expect.extend_from_slice(&whole[k * cols + c0..k * cols + c1]);
+            }
+            assert_eq!(got, expect, "blocks {b0}..{b1}");
+        }
     }
 
     #[test]

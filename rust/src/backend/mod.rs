@@ -91,6 +91,9 @@ pub enum BackendKind {
     Reference,
     /// Comparison-system adapter over [`crate::baselines::systems`].
     Baseline,
+    /// NUMA/core-partitioned wrapper running an inner backend's kernel
+    /// on column shards in parallel ([`crate::shard::ShardedBackend`]).
+    Sharded,
 }
 
 /// User-facing backend directive (`--backend` / config `"backend"`).
@@ -204,6 +207,53 @@ pub trait LinearBackend: Send + Sync {
     /// paper's crossover points.
     fn predict(&self, shape: GemmShape, sparsity: f64, dtype: Dtype, sparse: bool, m: &Machine)
         -> f64;
+
+    /// Whether dense-class operands should be packed as an all-elements
+    /// value stream instead of a tile stream (the AVX kernel executes
+    /// dense matrices that way and would re-convert tile layouts on
+    /// every call otherwise). Wrappers delegate to their inner backend.
+    fn dense_as_stream(&self) -> bool {
+        self.kind() == BackendKind::Avx
+    }
+
+    /// Shard partitioning this backend wants applied at plan-compile
+    /// time: `Some((shards, topology))` makes
+    /// [`PackedOperand::pack_f32`] pre-slice the operand into that many
+    /// column shards. `None` (the default) means unsharded operands.
+    fn shard_spec(&self) -> Option<(usize, crate::shard::NumaTopology)> {
+        None
+    }
+
+    /// BF16 GEMM on a pre-sharded operand. The default runs the parts
+    /// sequentially and concatenates their outputs column-wise in shard
+    /// order — any backend is therefore a bit-exact oracle for sharded
+    /// execution. [`crate::shard::ShardedBackend`] overrides this with
+    /// the parallel worker-pool path, which must match the default
+    /// bit-for-bit.
+    fn gemm_bf16_sharded(
+        &self,
+        input: &[f32],
+        batch: usize,
+        op: &crate::shard::ShardedOperand,
+        ctr: &mut EventCounters,
+    ) -> Vec<f32> {
+        let parts: Vec<Vec<f32>> = op
+            .parts
+            .iter()
+            .map(|p| match p {
+                PackedOperand::Sparse(sp) => self.sparse_gemm_bf16(input, batch, sp, ctr),
+                PackedOperand::Dense(dw) => self.gemm_bf16(input, batch, dw, ctr),
+                PackedOperand::Sharded(_) => unreachable!("nested sharded operand"),
+            })
+            .collect();
+        crate::shard::merge_col_outputs(&parts, &op.plan, batch, op.cols)
+    }
+
+    /// Snapshot of per-shard timing since the last call, for the
+    /// metrics layer. `None` for backends that don't shard.
+    fn shard_stats(&self) -> Option<crate::shard::ShardStatsSnapshot> {
+        None
+    }
 }
 
 /// Cheap, cloneable handle to a [`LinearBackend`] — what call sites
@@ -240,6 +290,18 @@ impl Backend {
     /// A comparison-system adapter.
     pub fn baseline(b: crate::baselines::systems::Baseline) -> Backend {
         Backend::from_impl(BaselineBackend::new(b))
+    }
+
+    /// A sharded wrapper over `inner`: operands are pre-partitioned into
+    /// `shards` column shards at plan-compile time and executed in
+    /// parallel on `pool`, bit-exact vs. `inner` run unsharded.
+    pub fn sharded(
+        inner: Backend,
+        shards: usize,
+        topo: crate::shard::NumaTopology,
+        pool: Arc<crate::shard::WorkerPool>,
+    ) -> Backend {
+        Backend::from_impl(crate::shard::ShardedBackend::new(inner, shards, topo, pool))
     }
 
     pub fn name(&self) -> &'static str {
@@ -308,25 +370,64 @@ impl Backend {
     ) -> f64 {
         self.0.predict(shape, sparsity, dtype, sparse, m)
     }
+
+    pub fn dense_as_stream(&self) -> bool {
+        self.0.dense_as_stream()
+    }
+
+    pub fn shard_spec(&self) -> Option<(usize, crate::shard::NumaTopology)> {
+        self.0.shard_spec()
+    }
+
+    pub fn gemm_bf16_sharded(
+        &self,
+        input: &[f32],
+        batch: usize,
+        op: &crate::shard::ShardedOperand,
+        ctr: &mut EventCounters,
+    ) -> Vec<f32> {
+        self.0.gemm_bf16_sharded(input, batch, op, ctr)
+    }
+
+    pub fn shard_stats(&self) -> Option<crate::shard::ShardStatsSnapshot> {
+        self.0.shard_stats()
+    }
 }
 
 /// A weight matrix packed once into the operand class one backend's
 /// kernel consumes — the single place the dense-vs-sparse packing
 /// decision (including the AVX dense-as-stream special case) lives, so
 /// the tinyforward dispatch and the decode-plan compiler cannot drift.
+#[derive(Clone, Debug)]
 pub enum PackedOperand {
     /// Bitmap+values stream for the sparse kernel class.
     Sparse(SparseTensor),
     /// Tile stream for the dense kernel class.
     Dense(DenseWeights<Bf16>),
+    /// Pre-partitioned column shards for a sharding backend (built at
+    /// plan-compile time; the decode loop never re-partitions).
+    Sharded(crate::shard::ShardedOperand),
 }
 
 impl PackedOperand {
+    /// Logical `(rows, cols)` of the packed matrix.
+    pub fn dims(&self) -> (usize, usize) {
+        match self {
+            PackedOperand::Sparse(sp) => (sp.rows, sp.cols),
+            PackedOperand::Dense(dw) => (dw.rows, dw.cols),
+            PackedOperand::Sharded(so) => (so.rows, so.cols),
+        }
+    }
+
     /// Pack `w` (`rows × cols`, row-major f32) for `backend`'s
-    /// `use_sparse` kernel class. Dense-class operands for the AVX
-    /// backend are cached as an all-elements sparse stream
-    /// ([`AvxBackend`] executes dense matrices as a value stream and
-    /// would otherwise re-convert the tile layout on every call).
+    /// `use_sparse` kernel class. Dense-class operands for stream-dense
+    /// backends (AVX, or a sharded wrapper over AVX) are cached as an
+    /// all-elements sparse stream ([`AvxBackend`] executes dense
+    /// matrices as a value stream and would otherwise re-convert the
+    /// tile layout on every call). If the backend declares a
+    /// [`LinearBackend::shard_spec`], the whole operand is packed once
+    /// and then sliced into per-shard parts — this is the only place
+    /// shard partitioning happens on the serving path.
     pub fn pack_f32(
         backend: &Backend,
         w: &[f32],
@@ -334,12 +435,19 @@ impl PackedOperand {
         cols: usize,
         use_sparse: bool,
     ) -> PackedOperand {
-        if use_sparse {
+        let whole = if use_sparse {
             PackedOperand::Sparse(SparseTensor::pack_f32(w, rows, cols))
-        } else if backend.kind() == BackendKind::Avx {
+        } else if backend.dense_as_stream() {
             PackedOperand::Sparse(SparseTensor::pack_dense_f32(w, rows, cols))
         } else {
             PackedOperand::Dense(DenseWeights::pack_f32(w, rows, cols))
+        };
+        match backend.shard_spec() {
+            Some((shards, topo)) if shards > 1 => {
+                let plan = crate::shard::ShardPlan::partition(cols, shards, &topo);
+                PackedOperand::Sharded(crate::shard::ShardedOperand::from_whole(&whole, plan))
+            }
+            _ => whole,
         }
     }
 
@@ -354,6 +462,7 @@ impl PackedOperand {
         match self {
             PackedOperand::Sparse(sp) => backend.sparse_gemm_bf16(x, batch, sp, ctr),
             PackedOperand::Dense(dw) => backend.gemm_bf16(x, batch, dw, ctr),
+            PackedOperand::Sharded(so) => backend.gemm_bf16_sharded(x, batch, so, ctr),
         }
     }
 }

@@ -79,6 +79,37 @@ impl BackendRegistry {
         self
     }
 
+    /// Extend the inventory with sharded wrappers over the AMX and AVX
+    /// backends (one shared persistent worker pool). A no-op when
+    /// `shards <= 1`, so single-node hosts with `--shards auto` keep the
+    /// standard inventory — including the invariant that a no-ISA host
+    /// has exactly one available backend (the reference oracle, which is
+    /// never sharded: it exists for bit-exact oracle comparisons).
+    /// Sharded entries are appended *after* the unsharded ones, so with
+    /// the strict `<` in [`BackendRegistry::select`] they only win when
+    /// `predict` says sharding is strictly faster (the Fig 11
+    /// crossover). Pinning `--backend amx` bypasses them by kind — a
+    /// documented limitation; use `auto` to let sharding compete.
+    pub fn with_shards(
+        mut self,
+        shards: usize,
+        topo: crate::shard::NumaTopology,
+    ) -> BackendRegistry {
+        if shards > 1 {
+            let pool =
+                std::sync::Arc::new(crate::shard::WorkerPool::with_topology(shards, &topo));
+            self.backends.push(Backend::sharded(
+                Backend::amx(),
+                shards,
+                topo,
+                std::sync::Arc::clone(&pool),
+            ));
+            self.backends
+                .push(Backend::sharded(Backend::avx(), shards, topo, pool));
+        }
+        self
+    }
+
     pub fn caps(&self) -> &CpuCaps {
         &self.caps
     }

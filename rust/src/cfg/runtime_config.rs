@@ -97,6 +97,16 @@ pub struct RuntimeConfig {
     /// dynamic tail per slot). The PJRT path reads its own `max_ctx`
     /// from the artifact manifest instead.
     pub max_ctx: usize,
+    /// Shard-count directive (`--shards` / config `"shards"`): `auto`
+    /// shards one-per-NUMA-node (off on single-node hosts), a number
+    /// forces that many column shards; 1 disables. The `SPARAMX_SHARDS`
+    /// env var overrides at resolve time.
+    pub shards: crate::shard::ShardChoice,
+    /// Per-token latency budget in milliseconds for plan-aware
+    /// admission: requests whose modeled decode cost
+    /// (`DecodePlan::predicted_step_s`) exceeds the budget are rejected
+    /// at admission. `0` disables the check.
+    pub latency_budget_ms: f64,
 }
 
 impl Default for RuntimeConfig {
@@ -115,6 +125,8 @@ impl Default for RuntimeConfig {
             backend: BackendChoice::Auto,
             engine: EngineChoice::Auto,
             max_ctx: 256,
+            shards: crate::shard::ShardChoice::Auto,
+            latency_budget_ms: 0.0,
         }
     }
 }
@@ -169,6 +181,19 @@ impl RuntimeConfig {
                         .parse::<EngineChoice>()?
                 }
                 "max_ctx" => cfg.max_ctx = val.as_usize().ok_or("max_ctx: uint")?,
+                "shards" => {
+                    cfg.shards = if let Some(s) = val.as_str() {
+                        s.parse::<crate::shard::ShardChoice>()?
+                    } else if let Some(n) = val.as_usize() {
+                        crate::shard::ShardChoice::Fixed(n)
+                    } else {
+                        return Err("shards: \"auto\" or uint".into());
+                    }
+                }
+                "latency_budget_ms" => {
+                    cfg.latency_budget_ms =
+                        val.as_f64().ok_or("latency_budget_ms: number")?
+                }
                 other => return Err(format!("unknown config field '{other}'")),
             }
         }
@@ -205,6 +230,12 @@ impl RuntimeConfig {
         }
         if self.max_ctx < 2 {
             return Err("max_ctx must be >= 2".into());
+        }
+        if !self.latency_budget_ms.is_finite() || self.latency_budget_ms < 0.0 {
+            return Err(format!(
+                "latency_budget_ms must be >= 0 (0 disables), got {}",
+                self.latency_budget_ms
+            ));
         }
         Ok(())
     }
@@ -268,6 +299,23 @@ mod tests {
         assert_eq!("NATIVE".parse::<EngineChoice>().unwrap(), EngineChoice::Native);
         assert_eq!(EngineChoice::Pjrt.to_string(), "pjrt");
         assert!("xla".parse::<EngineChoice>().is_err());
+    }
+
+    #[test]
+    fn parses_shards_and_latency_budget() {
+        use crate::shard::ShardChoice;
+        assert_eq!(RuntimeConfig::default().shards, ShardChoice::Auto);
+        assert_eq!(RuntimeConfig::default().latency_budget_ms, 0.0);
+        let cfg = RuntimeConfig::from_json(r#"{"shards": "auto"}"#).unwrap();
+        assert_eq!(cfg.shards, ShardChoice::Auto);
+        let cfg = RuntimeConfig::from_json(r#"{"shards": 4}"#).unwrap();
+        assert_eq!(cfg.shards, ShardChoice::Fixed(4));
+        let cfg = RuntimeConfig::from_json(r#"{"shards": "2"}"#).unwrap();
+        assert_eq!(cfg.shards, ShardChoice::Fixed(2));
+        assert!(RuntimeConfig::from_json(r#"{"shards": "lots"}"#).is_err());
+        let cfg = RuntimeConfig::from_json(r#"{"latency_budget_ms": 12.5}"#).unwrap();
+        assert_eq!(cfg.latency_budget_ms, 12.5);
+        assert!(RuntimeConfig::from_json(r#"{"latency_budget_ms": -1}"#).is_err());
     }
 
     #[test]

@@ -12,11 +12,41 @@ use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 use std::time::Duration;
 
+/// Plan-aware per-request latency budget: the engine's compiled
+/// [`crate::models::plan::DecodePlan`] predicts the cost of one decode
+/// step (`predicted_step_s`, the sum of every planned linear's modeled
+/// time), so a request asking for `n` tokens is predicted to cost
+/// `n * per_token_s` seconds of decode. Requests whose prediction
+/// exceeds `budget_s` are rejected at admission — before any prefill
+/// work — instead of discovered-too-late at completion.
+#[derive(Clone, Copy, Debug)]
+pub struct LatencyBudget {
+    /// Maximum predicted decode seconds a request may cost.
+    pub budget_s: f64,
+    /// Plan-predicted seconds per generated token.
+    pub per_token_s: f64,
+}
+
+impl LatencyBudget {
+    /// Whether a request for `max_new_tokens` fits the budget. A
+    /// non-positive or non-finite per-token prediction disables the
+    /// check (admit everything) rather than rejecting everything.
+    pub fn admits(&self, max_new_tokens: usize) -> bool {
+        if !(self.per_token_s.is_finite() && self.per_token_s > 0.0) {
+            return true;
+        }
+        max_new_tokens as f64 * self.per_token_s <= self.budget_s
+    }
+}
+
 /// Bounded MPSC admission queue with backpressure.
 pub struct AdmissionQueue {
     inner: Mutex<Inner>,
     available: Condvar,
     capacity: usize,
+    /// Optional plan-aware admission budget (`None` admits by capacity
+    /// alone).
+    budget: Option<LatencyBudget>,
 }
 
 struct Inner {
@@ -31,10 +61,18 @@ pub enum AdmitError {
     Full,
     /// Queue shut down.
     Closed,
+    /// Predicted decode time exceeds the configured latency budget —
+    /// retrying without shrinking `max_new_tokens` will never succeed.
+    OverBudget,
 }
 
 impl AdmissionQueue {
     pub fn new(capacity: usize) -> AdmissionQueue {
+        AdmissionQueue::with_budget(capacity, None)
+    }
+
+    /// Queue with an optional plan-aware admission budget.
+    pub fn with_budget(capacity: usize, budget: Option<LatencyBudget>) -> AdmissionQueue {
         AdmissionQueue {
             inner: Mutex::new(Inner {
                 queue: VecDeque::new(),
@@ -42,14 +80,26 @@ impl AdmissionQueue {
             }),
             available: Condvar::new(),
             capacity: capacity.max(1),
+            budget,
         }
     }
 
-    /// Non-blocking admit; rejects when full (backpressure).
+    /// The active admission budget, if any.
+    pub fn budget(&self) -> Option<LatencyBudget> {
+        self.budget
+    }
+
+    /// Non-blocking admit; rejects when full (backpressure) or when the
+    /// request's predicted decode time blows the latency budget.
     pub fn admit(&self, req: Request) -> Result<(), AdmitError> {
         let mut inner = self.inner.lock().expect("queue lock");
         if inner.closed {
             return Err(AdmitError::Closed);
+        }
+        if let Some(b) = &self.budget {
+            if !b.admits(req.max_new_tokens) {
+                return Err(AdmitError::OverBudget);
+            }
         }
         if inner.queue.len() >= self.capacity {
             return Err(AdmitError::Full);
@@ -96,13 +146,17 @@ mod tests {
     use std::time::Instant;
 
     fn req(id: u64) -> Request {
+        req_tokens(id, 1)
+    }
+
+    fn req_tokens(id: u64, max_new_tokens: usize) -> Request {
         let (tx, _rx) = mpsc::channel();
         // keep receiver alive via leak: tests only inspect queue behaviour
         std::mem::forget(_rx);
         Request {
             id,
             prompt: vec![],
-            max_new_tokens: 1,
+            max_new_tokens,
             arrived: Instant::now(),
             respond: tx,
         }
@@ -145,6 +199,36 @@ mod tests {
         assert_eq!(batch.len(), 1);
         // then the queue reports closed
         assert!(q.take_batch(4, Duration::from_millis(1)).is_none());
+    }
+
+    #[test]
+    fn budget_rejects_over_predicted_requests() {
+        // 1 ms/token predicted, 10 ms budget → at most 10 tokens
+        let budget = LatencyBudget {
+            budget_s: 0.010,
+            per_token_s: 0.001,
+        };
+        assert!(budget.admits(10));
+        assert!(!budget.admits(11));
+        let q = AdmissionQueue::with_budget(8, Some(budget));
+        q.admit(req_tokens(0, 10)).unwrap();
+        assert_eq!(q.admit(req_tokens(1, 64)), Err(AdmitError::OverBudget));
+        // within-budget traffic still flows after a rejection
+        q.admit(req_tokens(2, 5)).unwrap();
+        assert_eq!(q.depth(), 2);
+    }
+
+    #[test]
+    fn degenerate_budget_admits_everything() {
+        let budget = LatencyBudget {
+            budget_s: 0.010,
+            per_token_s: 0.0,
+        };
+        assert!(budget.admits(usize::MAX / 2));
+        let q = AdmissionQueue::with_budget(2, Some(budget));
+        q.admit(req_tokens(0, 1_000_000)).unwrap();
+        assert_eq!(q.depth(), 1);
+        assert!(AdmissionQueue::new(2).budget().is_none());
     }
 
     #[test]

@@ -173,6 +173,10 @@ pub struct Engine {
     /// Precomputed `"<path>/<backend>"` metrics label (constant for the
     /// engine's lifetime; avoids per-step allocation).
     step_label: String,
+    /// Distinct sharded backends the plan dispatches through; their
+    /// per-shard timings are drained into [`Metrics`] after every step.
+    /// Empty when the plan selected no sharded kernel.
+    shard_backends: Vec<Backend>,
     cfg: RuntimeConfig,
     path: EnginePath,
 }
@@ -210,24 +214,47 @@ impl Engine {
             magnitude_prune_inplace(&mut model.lm_head, cfg.weight_sparsity);
         }
         let geo = Geometry::for_model(&model, &cfg);
-        let registry = BackendRegistry::probe();
+        let topo = crate::shard::NumaTopology::detect();
+        let shards = cfg.shards.resolve(&topo);
+        let registry = BackendRegistry::probe().with_shards(shards, topo);
         let native = NativeModel::new(&registry, cfg.backend, model, cfg.weight_sparsity);
         let selection = native.plan.lm_head.selection.clone();
         log_info!(
-            "engine native: {} (caps {}, directive backend={} engine={})",
+            "engine native: {} (caps {}, {} NUMA node(s), shards={}, \
+             directive backend={} engine={})",
             native.plan.describe(),
             registry.caps().describe(),
+            topo.nodes,
+            shards,
             cfg.backend,
             cfg.engine
         );
         let slots = (0..geo.decode_batch).map(|_| Slot::empty()).collect();
         let caches = (0..geo.decode_batch).map(|_| None).collect();
+        let mut shard_backends: Vec<Backend> = Vec::new();
+        {
+            let mut add = |b: &Backend| {
+                if b.kind() == crate::backend::BackendKind::Sharded
+                    && !shard_backends.iter().any(|x| x == b)
+                {
+                    shard_backends.push(b.clone());
+                }
+            };
+            for l in &native.plan.layers {
+                for p in [&l.wq, &l.wk, &l.wv, &l.wo, &l.wgate, &l.wup, &l.wdown] {
+                    add(&p.selection.backend);
+                }
+            }
+            add(&native.plan.lm_head.selection.backend);
+            add(&native.plan.attention);
+        }
         Ok(Engine {
             geo,
             slots,
             metrics: Arc::new(Metrics::new()),
             step_label: format!("native/{}", selection.backend.name()),
             selection,
+            shard_backends,
             cfg,
             path: EnginePath::Native(NativePath {
                 model: native,
@@ -285,6 +312,7 @@ impl Engine {
             metrics: Arc::new(Metrics::new()),
             step_label: "pjrt/xla".to_string(),
             selection,
+            shard_backends: Vec::new(),
             cfg,
         })
     }
@@ -302,6 +330,17 @@ impl Engine {
     /// The load-time representative selection (plan + modeled time).
     pub fn selection(&self) -> &Selection {
         &self.selection
+    }
+
+    /// Plan-predicted seconds for one decode step: the compiled plan's
+    /// per-linear cost sum on the native path; the representative
+    /// LM-head selection on PJRT (no per-layer plan exists there).
+    /// Drives the `--latency-budget-ms` admission check.
+    pub fn predicted_step_s(&self) -> f64 {
+        match &self.path {
+            EnginePath::Native(np) => np.model.plan.predicted_step_s(),
+            EnginePath::Pjrt(_) => self.selection.predicted_s,
+        }
     }
 
     /// Which decode path serves tokens: `"native"` or `"pjrt"`.
@@ -523,6 +562,12 @@ impl Engine {
             }
         };
         self.metrics.record_step(dt, &self.step_label);
+        // drain per-shard timings accumulated by sharded kernels this step
+        for b in &self.shard_backends {
+            if let Some(snap) = b.shard_stats() {
+                self.metrics.record_shard_stats(&snap);
+            }
+        }
         self.metrics
             .decode_steps
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);

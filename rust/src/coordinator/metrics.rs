@@ -55,6 +55,11 @@ pub struct Metrics {
     /// Steps served, keyed by `"<engine path>/<backend>"` (e.g.
     /// `native/amx`, `pjrt/xla`) — which path actually produced tokens.
     steps_by_path: Mutex<BTreeMap<String, u64>>,
+    /// Sharded-execution epochs flushed from the worker pool.
+    pub shard_epochs: AtomicU64,
+    /// Accumulated busy seconds per shard lane (index = shard id),
+    /// summed across all flushed epochs.
+    shard_time_s: Mutex<Vec<f64>>,
 }
 
 impl Metrics {
@@ -86,6 +91,41 @@ impl Metrics {
     /// Snapshot of steps served per `"path/backend"` key.
     pub fn steps_by_path(&self) -> BTreeMap<String, u64> {
         self.steps_by_path.lock().expect("metrics lock").clone()
+    }
+
+    /// Fold one drained [`ShardStatsSnapshot`] into the gauges: epochs
+    /// add up, per-shard busy seconds accumulate lane-by-lane (the
+    /// vector grows to the widest shard count seen).
+    pub fn record_shard_stats(&self, snap: &crate::shard::ShardStatsSnapshot) {
+        if snap.epochs == 0 && snap.per_shard_time_s.is_empty() {
+            return;
+        }
+        self.shard_epochs.fetch_add(snap.epochs, Ordering::Relaxed);
+        let mut times = self.shard_time_s.lock().expect("metrics lock");
+        if times.len() < snap.per_shard_time_s.len() {
+            times.resize(snap.per_shard_time_s.len(), 0.0);
+        }
+        for (t, &s) in times.iter_mut().zip(snap.per_shard_time_s.iter()) {
+            *t += s;
+        }
+    }
+
+    /// Accumulated per-shard busy seconds (empty when unsharded).
+    pub fn shard_times_s(&self) -> Vec<f64> {
+        self.shard_time_s.lock().expect("metrics lock").clone()
+    }
+
+    /// Shard-imbalance gauge: slowest-lane over fastest-lane busy time.
+    /// `1.0` means perfectly balanced (or unsharded / no data yet).
+    pub fn shard_imbalance(&self) -> f64 {
+        let times = self.shard_time_s.lock().expect("metrics lock");
+        let mx = times.iter().cloned().fold(f64::MIN, f64::max);
+        let mn = times.iter().cloned().fold(f64::MAX, f64::min);
+        if times.is_empty() || mn <= 0.0 {
+            1.0
+        } else {
+            mx / mn
+        }
     }
 
     /// End-to-end request latency summary, if any completed.
@@ -179,6 +219,20 @@ impl Metrics {
             ("step_hist_bounds_ms", Json::Arr(bounds)),
             ("step_hist_counts", Json::Arr(hist_counts)),
             ("steps_by_path", by_path),
+            (
+                "shard_epochs",
+                Json::Num(self.shard_epochs.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "shard_time_ms",
+                Json::Arr(
+                    self.shard_times_s()
+                        .into_iter()
+                        .map(|s| Json::Num(s * 1e3))
+                        .collect(),
+                ),
+            ),
+            ("shard_imbalance", Json::Num(self.shard_imbalance())),
         ])
     }
 }
@@ -220,6 +274,37 @@ mod tests {
         assert_eq!(c[4], 1, "{c:?}");
         assert_eq!(*c.last().unwrap(), 1);
         assert_eq!(h.total(), 3);
+    }
+
+    #[test]
+    fn shard_stats_accumulate_and_gauge_imbalance() {
+        use crate::shard::ShardStatsSnapshot;
+        let m = Metrics::new();
+        // unsharded engines report a balanced gauge
+        assert_eq!(m.shard_imbalance(), 1.0);
+        m.record_shard_stats(&ShardStatsSnapshot {
+            per_shard_time_s: vec![0.001, 0.002],
+            epochs: 3,
+        });
+        m.record_shard_stats(&ShardStatsSnapshot {
+            per_shard_time_s: vec![0.001, 0.002],
+            epochs: 2,
+        });
+        // empty snapshots (nothing drained this step) are a no-op
+        m.record_shard_stats(&ShardStatsSnapshot {
+            per_shard_time_s: vec![],
+            epochs: 0,
+        });
+        assert_eq!(m.shard_epochs.load(Ordering::Relaxed), 5);
+        let times = m.shard_times_s();
+        assert_eq!(times.len(), 2);
+        assert!((times[0] - 0.002).abs() < 1e-12);
+        assert!((times[1] - 0.004).abs() < 1e-12);
+        assert!((m.shard_imbalance() - 2.0).abs() < 1e-9);
+        let v = Json::parse(&m.stats_json("native").to_string()).unwrap();
+        assert_eq!(v.get("shard_epochs").unwrap().as_usize(), Some(5));
+        assert_eq!(v.get("shard_time_ms").unwrap().as_arr().unwrap().len(), 2);
+        assert!(v.get("shard_imbalance").unwrap().as_f64().unwrap() > 1.9);
     }
 
     #[test]

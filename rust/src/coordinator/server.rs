@@ -7,7 +7,9 @@
 //! Stats:    `{"stats": true}` → serving counters, the per-decode-step
 //!           latency histogram, and which engine path/backend served
 //!           each step (see [`crate::coordinator::metrics`]).
-//! Errors:   `{"error": "..."}` (malformed request or backpressure).
+//! Errors:   `{"error": "..."}` (malformed request, backpressure, or a
+//!           predicted decode time over the `--latency-budget-ms`
+//!           admission budget).
 
 use super::batcher::{AdmissionQueue, AdmitError};
 use super::metrics::Metrics;
@@ -117,6 +119,10 @@ fn handle_client(stream: TcpStream, ctx: Arc<ServerCtx>) {
                     Err(AdmitError::Full) => {
                         ctx.metrics.requests_rejected.fetch_add(1, Ordering::Relaxed);
                         error_line("queue full, retry later")
+                    }
+                    Err(AdmitError::OverBudget) => {
+                        ctx.metrics.requests_rejected.fetch_add(1, Ordering::Relaxed);
+                        error_line("request exceeds latency budget")
                     }
                     Err(AdmitError::Closed) => error_line("server shutting down"),
                     Ok(()) => {

@@ -21,6 +21,7 @@
 //! | [`sparse`] | bitmap+values format, magnitude pruning, thread partition |
 //! | [`amx`] | AMX tile + AVX-512 instruction simulator and the four kernels |
 //! | [`backend`] | `LinearBackend` dispatch: capability probing, registry, sparsity-aware selection |
+//! | [`shard`] | NUMA/core-partitioned sharded execution: shard plans, persistent worker pool, `ShardedBackend` |
 //! | [`perf`] | Sapphire Rapids memory/cost model, pipeline slots, roofline |
 //! | [`models`] | Llama-family shape configs, synthetic weights, per-layer decode plans + native forward |
 //! | [`kvcache`] | §6.2 static-sparse + dynamic-dense KV cache manager |
@@ -34,6 +35,7 @@ pub mod cfg;
 pub mod sparse;
 pub mod amx;
 pub mod backend;
+pub mod shard;
 pub mod perf;
 pub mod models;
 pub mod kvcache;

@@ -11,7 +11,7 @@
 use sparamx::amx::EventCounters;
 use sparamx::backend::{BackendChoice, BackendRegistry, CpuCaps, Dtype, GemmShape};
 use sparamx::cfg::{EngineChoice, RuntimeConfig};
-use sparamx::coordinator::batcher::AdmissionQueue;
+use sparamx::coordinator::batcher::{AdmissionQueue, LatencyBudget};
 use sparamx::coordinator::engine::Engine;
 use sparamx::coordinator::server::ServerCtx;
 use sparamx::coordinator::{request, server};
@@ -34,10 +34,11 @@ fn main() {
         Some("info") => cmd_info(&args),
         _ => {
             eprintln!(
-                "sparamx {} — usage:\n  sparamx serve    [--artifacts DIR] [--port P] [--sparsity S] [--backend {b}] [--engine {e}]\n  sparamx generate [--artifacts DIR] [--max-tokens N] [--backend {b}] [--engine {e}] PROMPT...\n  sparamx eval     [--artifacts DIR] [--sparsity S] [--k-sparsity S] [--v-sparsity S] [--int8-kv] [--backend {b}]\n  sparamx info     [--artifacts DIR] [--cores N] [--model NAME] [--sparsity S]",
+                "sparamx {} — usage:\n  sparamx serve    [--artifacts DIR] [--port P] [--sparsity S] [--backend {b}] [--engine {e}] [--shards {s}] [--latency-budget-ms MS]\n  sparamx generate [--artifacts DIR] [--max-tokens N] [--backend {b}] [--engine {e}] [--shards {s}] PROMPT...\n  sparamx eval     [--artifacts DIR] [--sparsity S] [--k-sparsity S] [--v-sparsity S] [--int8-kv] [--backend {b}]\n  sparamx info     [--artifacts DIR] [--cores N] [--model NAME] [--sparsity S] [--shards {s}]",
                 sparamx::VERSION,
                 b = BackendChoice::HELP,
-                e = EngineChoice::HELP
+                e = EngineChoice::HELP,
+                s = sparamx::shard::ShardChoice::HELP
             );
             2
         }
@@ -61,6 +62,10 @@ fn config_from(args: &Args) -> RuntimeConfig {
     if args.options.contains_key("engine") {
         cfg.engine = args.engine();
     }
+    if args.options.contains_key("shards") {
+        cfg.shards = args.shards();
+    }
+    cfg.latency_budget_ms = args.get_parse("latency-budget-ms", cfg.latency_budget_ms);
     cfg.validate().expect("config");
     cfg
 }
@@ -83,7 +88,13 @@ fn cmd_serve(args: &Args) -> i32 {
     let cfg = config_from(args);
     let bundle = Bundle::load(&cfg.artifacts_dir).expect("load artifacts");
     let (mut engine, _rt) = load_engine(&bundle, &cfg);
-    let queue = Arc::new(AdmissionQueue::new(cfg.queue_capacity));
+    // plan-aware admission: the compiled plan predicts a decode step's
+    // cost, so a request's token ask prices out before any prefill work
+    let budget = (cfg.latency_budget_ms > 0.0).then(|| LatencyBudget {
+        budget_s: cfg.latency_budget_ms * 1e-3,
+        per_token_s: engine.predicted_step_s(),
+    });
+    let queue = Arc::new(AdmissionQueue::with_budget(cfg.queue_capacity, budget));
     let listener =
         std::net::TcpListener::bind(("127.0.0.1", cfg.port)).expect("bind port");
     println!(
@@ -93,6 +104,18 @@ fn cmd_serve(args: &Args) -> i32 {
         cfg.weight_sparsity * 100.0,
         engine.geometry().decode_batch
     );
+    if let Some(b) = queue.budget() {
+        println!(
+            "latency budget: {:.1} ms (predicted {:.3} ms/token → max {} tokens/request)",
+            b.budget_s * 1e3,
+            b.per_token_s * 1e3,
+            if b.per_token_s > 0.0 {
+                (b.budget_s / b.per_token_s) as u64
+            } else {
+                u64::MAX
+            }
+        );
+    }
     let ctx = ServerCtx {
         queue: Arc::clone(&queue),
         default_max_tokens: cfg.max_new_tokens,
@@ -211,7 +234,15 @@ fn cmd_info(args: &Args) -> i32 {
         m.effective_bw_gbs(),
         m.peak_amx_bf16_flops() / 1e12
     );
-    let registry = BackendRegistry::probe().with_machine(m);
+    let topo = sparamx::shard::NumaTopology::detect();
+    let shards = cfg.shards.resolve(&topo);
+    println!(
+        "topology: {} NUMA node(s), {} core(s) → shards={} (--shards {})",
+        topo.nodes, topo.cores, shards, cfg.shards
+    );
+    let registry = BackendRegistry::probe()
+        .with_machine(m.with_numa_nodes(topo.nodes))
+        .with_shards(shards, topo);
     let names: Vec<&str> = registry.available().iter().map(|b| b.name()).collect();
     println!(
         "backends: caps [{}], available [{}]",

@@ -264,6 +264,28 @@ impl DecodePlan {
         }
     }
 
+    /// Predicted seconds for one full decode step (batch 1): the sum of
+    /// every planned linear's load-time `predicted_s` — 7 projections
+    /// per layer plus the LM head. Attention and elementwise work are
+    /// excluded (memory-bound decode is dominated by the weight
+    /// streams, Table 1), so this is a *lower bound* the admission
+    /// budget treats as the per-token cost.
+    pub fn predicted_step_s(&self) -> f64 {
+        let per_layer: f64 = self
+            .layers
+            .iter()
+            .map(|l| {
+                [
+                    &l.wq, &l.wk, &l.wv, &l.wo, &l.wgate, &l.wup, &l.wdown,
+                ]
+                .iter()
+                .map(|p| p.selection.predicted_s)
+                .sum::<f64>()
+            })
+            .sum();
+        per_layer + self.lm_head.selection.predicted_s
+    }
+
     /// Human-readable plan summary for banners/logs.
     pub fn describe(&self) -> String {
         let head = &self.lm_head;
@@ -563,6 +585,33 @@ mod tests {
         let out = plan.lm_head.run(&x, 1, &mut ctr);
         assert_eq!(out.len(), model.vocab);
         assert!(out.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn predicted_step_sums_every_planned_linear() {
+        let reg = BackendRegistry::with_caps(CpuCaps::all());
+        let model = toy_model();
+        let plan = DecodePlan::compile(&reg, BackendChoice::Auto, &model, 0.5);
+        let head = plan.lm_head.selection.predicted_s;
+        let by_hand: f64 = plan
+            .layers
+            .iter()
+            .flat_map(|l| {
+                [
+                    l.wq.selection.predicted_s,
+                    l.wk.selection.predicted_s,
+                    l.wv.selection.predicted_s,
+                    l.wo.selection.predicted_s,
+                    l.wgate.selection.predicted_s,
+                    l.wup.selection.predicted_s,
+                    l.wdown.selection.predicted_s,
+                ]
+            })
+            .sum::<f64>()
+            + head;
+        let got = plan.predicted_step_s();
+        assert!(got > 0.0, "predicted step time must be positive");
+        assert!((got - by_hand).abs() < 1e-15, "{got} vs {by_hand}");
     }
 
     #[test]

@@ -132,6 +132,80 @@ pub fn sparse_int8_gemm_cost(
     KernelCost::from_counters(&super::analytic::sparse_int8(batch, rows, cols, nnz), m)
 }
 
+/// Per-epoch cost of the sharded backend's scatter + barrier on the
+/// persistent worker pool: mailbox wakeups, the epoch barrier, and the
+/// fixed-order column merge. This is why sharding loses small batch-1
+/// shapes (the Fig 11 crossover): each shard also pays its own
+/// `STREAM_RAMP_BYTES`, and the barrier is pure overhead.
+pub const SHARD_BARRIER_S: f64 = 3e-6;
+
+/// The machine one shard of `shards` sees: its slice of the cores, and
+/// its NUMA node's share of the memory controllers. Unsharded kernels
+/// are NUMA-unaware and stream from one socket (`socket_bw_gbs`);
+/// sharding one shard per node unlocks the other nodes' controllers,
+/// while packing several shards onto a node splits that node's
+/// bandwidth between them.
+pub fn shard_machine(m: &Machine, shards: usize) -> Machine {
+    let shards = shards.max(1);
+    let per_node = shards.div_ceil(m.numa_nodes.max(1));
+    let mut sm = *m;
+    sm.cores = (m.cores / shards).max(1);
+    sm.socket_bw_gbs = m.socket_bw_gbs / per_node as f64;
+    sm
+}
+
+/// Wall time of a column-sharded GEMM: the slowest shard's kernel on its
+/// shard machine, plus the epoch barrier. `per_shard(cols, machine)`
+/// prices one shard's kernel — the sharded backend passes its inner
+/// backend's `predict` here, so registry selection and this model agree
+/// by construction. Width computation uses the non-ticking
+/// `ShardPlan::col_widths` (pricing a hypothetical sharding is not a
+/// plan-compile event). A single-shard plan degenerates to the plain
+/// inner kernel with no barrier, so at equal cost the unsharded backend
+/// wins selection (strict `<` keeps earlier registry entries).
+pub fn sharded_time(
+    cols: usize,
+    shards: usize,
+    m: &Machine,
+    per_shard: &dyn Fn(usize, &Machine) -> f64,
+) -> f64 {
+    let widths = crate::shard::ShardPlan::col_widths(cols, shards);
+    if widths.len() <= 1 {
+        return per_shard(cols, m);
+    }
+    let sm = shard_machine(m, widths.len());
+    widths
+        .iter()
+        .map(|&w| per_shard(w, &sm))
+        .fold(0.0, f64::max)
+        + SHARD_BARRIER_S
+}
+
+/// Convenience: sharded sparse BF16 GEMM wall time.
+pub fn sharded_sparse_gemm_cost(
+    batch: usize,
+    rows: usize,
+    cols: usize,
+    sparsity: f64,
+    shards: usize,
+    m: &Machine,
+) -> f64 {
+    sharded_time(cols, shards, m, &|w, sm| {
+        sparse_gemm_cost(batch, rows, w, sparsity, sm).time
+    })
+}
+
+/// Convenience: sharded dense BF16 GEMM wall time.
+pub fn sharded_dense_gemm_cost(
+    batch: usize,
+    rows: usize,
+    cols: usize,
+    shards: usize,
+    m: &Machine,
+) -> f64 {
+    sharded_time(cols, shards, m, &|w, sm| dense_gemm_cost(batch, rows, w, sm).time)
+}
+
 /// Convenience: AVX sparse GEMM cost.
 pub fn avx_sparse_gemm_cost(
     batch: usize,
@@ -246,4 +320,45 @@ mod tests {
         let c = KernelCost::from_counters(&analytic::dense_bf16(1, 32, 16), &m32());
         assert!(c.time >= LAUNCH_OVERHEAD_S);
     }
+
+    #[test]
+    fn shard_machine_splits_cores_and_unlocks_nodes() {
+        let m = m32(); // 32 cores, 2 NUMA nodes, 250 GB/s per socket
+        let s2 = shard_machine(&m, 2); // one shard per node
+        assert_eq!(s2.cores, 16);
+        assert_eq!(s2.socket_bw_gbs, 250.0, "one shard per node: full socket each");
+        let s4 = shard_machine(&m, 4); // two shards share each node
+        assert_eq!(s4.cores, 8);
+        assert_eq!(s4.socket_bw_gbs, 125.0);
+        assert_eq!(shard_machine(&m, 1).cores, 32);
+    }
+
+    #[test]
+    fn sharding_wins_large_memory_bound_shapes() {
+        // Fig 11 regime: Llama 3 8B up_proj, batch 1, 50% sparse. Two
+        // shards stream from both sockets' controllers at once.
+        let m = m32();
+        let un = sparse_gemm_cost(1, 4096, 14336, 0.5, &m).time;
+        let sh = sharded_sparse_gemm_cost(1, 4096, 14336, 0.5, 2, &m);
+        assert!(sh < un, "sharded {sh} !< unsharded {un}");
+    }
+
+    #[test]
+    fn sharding_loses_small_batch1_shapes() {
+        // Per-shard stream ramp + barrier cost swamp a tiny layer — the
+        // crossover's other side.
+        let m = m32();
+        let un = dense_gemm_cost(1, 128, 128, &m).time;
+        let sh = sharded_dense_gemm_cost(1, 128, 128, 2, &m);
+        assert!(sh > un, "sharded {sh} !> unsharded {un}");
+    }
+
+    #[test]
+    fn single_shard_degenerates_to_inner_cost() {
+        let m = m32();
+        let un = sparse_gemm_cost(1, 4096, 4096, 0.5, &m).time;
+        let sh = sharded_sparse_gemm_cost(1, 4096, 4096, 0.5, 1, &m);
+        assert_eq!(sh, un, "one shard must add no barrier");
+    }
+
 }

@@ -66,6 +66,11 @@ pub struct Machine {
     /// PyTorch baseline; ours is ~0 (static C++ extension path). Used by
     /// `baselines`.
     pub framework_overhead_s: f64,
+    /// NUMA nodes (sockets/memory controllers). Unsharded kernels are
+    /// NUMA-unaware and see one socket's bandwidth (`socket_bw_gbs`);
+    /// the sharded backend's cost model unlocks the other nodes'
+    /// controllers (see `perf::cost::shard_machine`).
+    pub numa_nodes: usize,
 }
 
 impl Default for Machine {
@@ -87,12 +92,20 @@ impl Machine {
             llc_bytes: 60 * 1024 * 1024,
             instr: InstrCosts::default(),
             framework_overhead_s: 5e-6,
+            // the paper's testbed is a dual-socket Xeon Gold 6430L
+            numa_nodes: 2,
         }
     }
 
     /// Same machine with a different core count.
     pub fn with_cores(mut self, cores: usize) -> Machine {
         self.cores = cores.max(1);
+        self
+    }
+
+    /// Same machine with a different NUMA node count.
+    pub fn with_numa_nodes(mut self, nodes: usize) -> Machine {
+        self.numa_nodes = nodes.max(1);
         self
     }
 

@@ -1,0 +1,389 @@
+//! [`ShardedBackend`]: a `LinearBackend` wrapper that executes column
+//! shards of an operand in parallel on the persistent [`WorkerPool`].
+//!
+//! Correctness contract: the output is **bit-exact** vs. the inner
+//! backend run unsharded. Shards split the *output-column* axis at
+//! packed-block granularity, so every output column is still computed by
+//! one kernel invocation with the exact same k-accumulation order; the
+//! "reduction" is a fixed-shard-order column concatenation
+//! ([`crate::shard::merge_col_outputs`]), never a floating-point
+//! re-association. The sequential oracle is the trait's default
+//! `gemm_bf16_sharded`; tests assert the pool-parallel path matches it
+//! and the unsharded inner backend exactly.
+//!
+//! Performance contract: `predict` prices one epoch as the slowest
+//! shard's kernel on its NUMA-partitioned slice of the machine plus the
+//! epoch barrier ([`crate::perf::cost::sharded_time`]) — the Fig 11
+//! crossover where sharding wins large memory-bound shapes and loses
+//! small batch-1 shapes.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::plan::{merge_col_outputs, NumaTopology, ShardPlan};
+use super::pool::WorkerPool;
+use crate::amx::kernels::DenseWeights;
+use crate::amx::EventCounters;
+use crate::backend::{Backend, BackendKind, CpuCaps, Dtype, GemmShape, LinearBackend};
+use crate::perf::Machine;
+use crate::sparse::format::SparseTensor;
+use crate::util::bf16::Bf16;
+
+/// Per-shard timing accumulated since the last snapshot, drained by the
+/// metrics layer via `LinearBackend::shard_stats`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardStatsSnapshot {
+    /// Accumulated wall seconds each shard spent in its kernel.
+    pub per_shard_time_s: Vec<f64>,
+    /// Pool epochs contributing to the accumulation.
+    pub epochs: u64,
+}
+
+impl ShardStatsSnapshot {
+    /// Max/min shard-time ratio — the load-imbalance gauge (1.0 =
+    /// perfectly balanced; large = one shard straggles the barrier).
+    pub fn imbalance(&self) -> f64 {
+        let mn = self.per_shard_time_s.iter().copied().fold(f64::MAX, f64::min);
+        let mx = self.per_shard_time_s.iter().copied().fold(0.0, f64::max);
+        if self.per_shard_time_s.is_empty() || mn <= 0.0 {
+            1.0
+        } else {
+            mx / mn
+        }
+    }
+}
+
+/// Column-sharding wrapper over an inner backend (see module docs).
+pub struct ShardedBackend {
+    inner: Backend,
+    shards: usize,
+    topo: NumaTopology,
+    pool: Arc<WorkerPool>,
+    /// Accumulated per-shard kernel seconds since the last snapshot.
+    stats: Mutex<Vec<f64>>,
+    epochs: AtomicU64,
+}
+
+impl ShardedBackend {
+    /// Wrap `inner`, splitting operands into `shards` column shards run
+    /// on `pool`. Sharding a sharded backend is a construction error.
+    pub fn new(
+        inner: Backend,
+        shards: usize,
+        topo: NumaTopology,
+        pool: Arc<WorkerPool>,
+    ) -> ShardedBackend {
+        assert!(
+            inner.kind() != BackendKind::Sharded,
+            "cannot shard an already-sharded backend"
+        );
+        ShardedBackend {
+            inner,
+            shards: shards.max(1),
+            topo,
+            pool,
+            stats: Mutex::new(Vec::new()),
+            epochs: AtomicU64::new(0),
+        }
+    }
+
+    /// The wrapped backend.
+    pub fn inner(&self) -> &Backend {
+        &self.inner
+    }
+
+    /// Configured shard count (actual plans clamp to the operand's
+    /// block count).
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    fn record_epoch(&self, times: &[f64]) {
+        let mut acc = self.stats.lock().expect("shard stats lock");
+        if acc.len() < times.len() {
+            acc.resize(times.len(), 0.0);
+        }
+        for (a, t) in acc.iter_mut().zip(times) {
+            *a += t;
+        }
+        self.epochs.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Run one sharded epoch: execute `run(shard, ctr)` for every shard
+    /// of `plan` on the worker pool, merge event counters in fixed
+    /// shard order, record per-shard times, and concatenate the output
+    /// columns. A degenerate single-shard plan runs inline.
+    fn run_epoch<T, F>(
+        &self,
+        plan: &ShardPlan,
+        batch: usize,
+        cols: usize,
+        ctr: &mut EventCounters,
+        run: F,
+    ) -> Vec<T>
+    where
+        T: Copy + Default + Send,
+        F: Fn(usize, &mut EventCounters) -> Vec<T> + Sync,
+    {
+        let n = plan.shards;
+        if n <= 1 {
+            let t0 = std::time::Instant::now();
+            let out = run(0, ctr);
+            self.record_epoch(&[t0.elapsed().as_secs_f64()]);
+            return out;
+        }
+        let mut slots: Vec<Option<(Vec<T>, EventCounters, f64)>> = (0..n).map(|_| None).collect();
+        {
+            let slot_refs: Vec<Mutex<&mut Option<(Vec<T>, EventCounters, f64)>>> =
+                slots.iter_mut().map(Mutex::new).collect();
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..n)
+                .map(|s| {
+                    let slot = &slot_refs[s];
+                    let run = &run;
+                    Box::new(move || {
+                        let t0 = std::time::Instant::now();
+                        let mut c = EventCounters::default();
+                        let out = run(s, &mut c);
+                        **slot.lock().expect("shard slot lock") =
+                            Some((out, c, t0.elapsed().as_secs_f64()));
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            self.pool.scatter(jobs);
+        }
+        let mut parts = Vec::with_capacity(n);
+        let mut times = vec![0.0f64; n];
+        for (s, slot) in slots.into_iter().enumerate() {
+            let (out, c, dt) = slot.expect("shard job ran (barrier passed)");
+            ctr.merge(&c);
+            times[s] = dt;
+            parts.push(out);
+        }
+        self.record_epoch(&times);
+        merge_col_outputs(&parts, plan, batch, cols)
+    }
+}
+
+impl LinearBackend for ShardedBackend {
+    fn name(&self) -> &'static str {
+        match self.inner.kind() {
+            BackendKind::Amx => "sharded-amx",
+            BackendKind::Avx => "sharded-avx",
+            BackendKind::Reference => "sharded-ref",
+            BackendKind::Baseline => "sharded-baseline",
+            BackendKind::Sharded => unreachable!("checked at construction"),
+        }
+    }
+
+    fn kind(&self) -> BackendKind {
+        BackendKind::Sharded
+    }
+
+    fn supported(&self, caps: &CpuCaps) -> bool {
+        self.inner.supported(caps)
+    }
+
+    fn supported_dtype(&self, caps: &CpuCaps, dtype: Dtype) -> bool {
+        self.inner.supported_dtype(caps, dtype)
+    }
+
+    fn dense_as_stream(&self) -> bool {
+        self.inner.dense_as_stream()
+    }
+
+    fn shard_spec(&self) -> Option<(usize, NumaTopology)> {
+        Some((self.shards, self.topo))
+    }
+
+    /// Direct-call dense path: partitions on the fly (ticks the
+    /// partition counter — the serving path avoids this by pre-packing
+    /// a `ShardedOperand` at plan-compile time).
+    fn gemm_bf16(
+        &self,
+        input: &[f32],
+        batch: usize,
+        w: &DenseWeights<Bf16>,
+        ctr: &mut EventCounters,
+    ) -> Vec<f32> {
+        let plan = ShardPlan::partition(w.cols, self.shards, &self.topo);
+        let parts: Vec<DenseWeights<Bf16>> = plan
+            .block_ranges
+            .iter()
+            .map(|br| w.slice_col_blocks(br.clone()))
+            .collect();
+        self.run_epoch(&plan, batch, w.cols, ctr, |s, c| {
+            self.inner.gemm_bf16(input, batch, &parts[s], c)
+        })
+    }
+
+    fn sparse_gemm_bf16(
+        &self,
+        input: &[f32],
+        batch: usize,
+        sp: &SparseTensor<Bf16>,
+        ctr: &mut EventCounters,
+    ) -> Vec<f32> {
+        let plan = ShardPlan::partition(sp.cols, self.shards, &self.topo);
+        let parts: Vec<SparseTensor<Bf16>> = plan
+            .block_ranges
+            .iter()
+            .map(|br| sp.slice_col_blocks(br.clone()))
+            .collect();
+        self.run_epoch(&plan, batch, sp.cols, ctr, |s, c| {
+            self.inner.sparse_gemm_bf16(input, batch, &parts[s], c)
+        })
+    }
+
+    fn gemm_int8(
+        &self,
+        input: &[i8],
+        batch: usize,
+        w: &DenseWeights<i8>,
+        ctr: &mut EventCounters,
+    ) -> Vec<i32> {
+        let plan = ShardPlan::partition(w.cols, self.shards, &self.topo);
+        let parts: Vec<DenseWeights<i8>> = plan
+            .block_ranges
+            .iter()
+            .map(|br| w.slice_col_blocks(br.clone()))
+            .collect();
+        self.run_epoch(&plan, batch, w.cols, ctr, |s, c| {
+            self.inner.gemm_int8(input, batch, &parts[s], c)
+        })
+    }
+
+    fn sparse_gemm_int8(
+        &self,
+        input: &[i8],
+        batch: usize,
+        sp: &SparseTensor<i8>,
+        ctr: &mut EventCounters,
+    ) -> Vec<i32> {
+        let plan = ShardPlan::partition(sp.cols, self.shards, &self.topo);
+        let parts: Vec<SparseTensor<i8>> = plan
+            .block_ranges
+            .iter()
+            .map(|br| sp.slice_col_blocks(br.clone()))
+            .collect();
+        self.run_epoch(&plan, batch, sp.cols, ctr, |s, c| {
+            self.inner.sparse_gemm_int8(input, batch, &parts[s], c)
+        })
+    }
+
+    /// Serving path: the operand was partitioned at plan-compile time;
+    /// no partitioning (and no counter tick) happens here.
+    fn gemm_bf16_sharded(
+        &self,
+        input: &[f32],
+        batch: usize,
+        op: &crate::shard::ShardedOperand,
+        ctr: &mut EventCounters,
+    ) -> Vec<f32> {
+        self.run_epoch(&op.plan, batch, op.cols, ctr, |s, c| {
+            match &op.parts[s] {
+                crate::backend::PackedOperand::Sparse(sp) => {
+                    self.inner.sparse_gemm_bf16(input, batch, sp, c)
+                }
+                crate::backend::PackedOperand::Dense(dw) => {
+                    self.inner.gemm_bf16(input, batch, dw, c)
+                }
+                crate::backend::PackedOperand::Sharded(_) => {
+                    unreachable!("nested sharded operand")
+                }
+            }
+        })
+    }
+
+    /// Slowest shard on its NUMA slice of the machine + barrier; shares
+    /// `perf::cost::sharded_time` with the cost-model convenience
+    /// functions so registry selection agrees by construction.
+    fn predict(
+        &self,
+        shape: GemmShape,
+        sparsity: f64,
+        dtype: Dtype,
+        sparse: bool,
+        m: &Machine,
+    ) -> f64 {
+        crate::perf::cost::sharded_time(shape.n, self.shards, m, &|cols, sm| {
+            self.inner
+                .predict(GemmShape::new(shape.batch, shape.k, cols), sparsity, dtype, sparse, sm)
+        })
+    }
+
+    fn shard_stats(&self) -> Option<ShardStatsSnapshot> {
+        let mut acc = self.stats.lock().expect("shard stats lock");
+        let per_shard_time_s = std::mem::take(&mut *acc);
+        Some(ShardStatsSnapshot {
+            per_shard_time_s,
+            epochs: self.epochs.swap(0, Ordering::Relaxed),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sharded_over(inner: Backend, shards: usize) -> Backend {
+        let topo = NumaTopology::modeled(2, 8);
+        let pool = Arc::new(WorkerPool::with_topology(shards.min(4), &topo));
+        Backend::sharded(inner, shards, topo, pool)
+    }
+
+    #[test]
+    fn names_follow_inner_kind() {
+        assert_eq!(sharded_over(Backend::amx(), 2).name(), "sharded-amx");
+        assert_eq!(sharded_over(Backend::avx(), 2).name(), "sharded-avx");
+        assert_eq!(sharded_over(Backend::reference(), 2).name(), "sharded-ref");
+        assert_eq!(sharded_over(Backend::amx(), 2).kind(), BackendKind::Sharded);
+    }
+
+    #[test]
+    #[should_panic(expected = "already-sharded")]
+    fn nesting_sharded_backends_is_rejected() {
+        let once = sharded_over(Backend::amx(), 2);
+        let _ = sharded_over(once, 2);
+    }
+
+    #[test]
+    fn imbalance_gauge() {
+        let s = ShardStatsSnapshot {
+            per_shard_time_s: vec![2.0, 1.0, 4.0],
+            epochs: 3,
+        };
+        assert!((s.imbalance() - 4.0).abs() < 1e-12);
+        let empty = ShardStatsSnapshot {
+            per_shard_time_s: vec![],
+            epochs: 0,
+        };
+        assert_eq!(empty.imbalance(), 1.0);
+    }
+
+    #[test]
+    fn shard_stats_drain_and_accumulate() {
+        // pre-partitioned serving path (ShardPlan::build, not
+        // ::partition) so this test never ticks the global partition
+        // counter other lib tests assert on
+        let topo = NumaTopology::modeled(2, 8);
+        let pool = Arc::new(WorkerPool::with_topology(2, &topo));
+        let b = Backend::sharded(Backend::reference(), 2, topo, pool);
+        let w: Vec<f32> = (0..64 * 32).map(|i| (i % 7) as f32 - 3.0).collect();
+        let sp = SparseTensor::pack_f32(&w, 64, 32);
+        let whole = crate::backend::PackedOperand::Sparse(sp);
+        let op = crate::shard::ShardedOperand::from_whole(
+            &whole,
+            ShardPlan::build(32, 2, &topo),
+        );
+        let x = vec![1.0f32; 64];
+        let mut ctr = EventCounters::default();
+        let _ = b.gemm_bf16_sharded(&x, 1, &op, &mut ctr);
+        let snap = b.shard_stats().expect("sharded backend reports stats");
+        assert_eq!(snap.epochs, 1);
+        assert_eq!(snap.per_shard_time_s.len(), 2);
+        // drained: second snapshot starts empty
+        let again = b.shard_stats().expect("still Some");
+        assert_eq!(again.epochs, 0);
+        assert!(again.per_shard_time_s.is_empty());
+    }
+}

@@ -1,0 +1,31 @@
+//! Sharded parallel execution subsystem (PR 6).
+//!
+//! SparAMX decode is memory-bound (Table 1), so the end-to-end lever is
+//! spreading the weight stream across cores *and* memory controllers —
+//! Fig 11's sparsity × core-count sweeps. This module adds that layer:
+//!
+//! * [`plan::ShardPlan`] — partitions a packed operand's output-column
+//!   axis into contiguous 16-column-block shards with NUMA node hints;
+//! * [`pool::WorkerPool`] — persistent worker threads with per-worker
+//!   mailboxes and an epoch barrier (replaces per-call thread spawning
+//!   in `util/threadpool.rs`, which is now a shim over this pool);
+//! * [`backend::ShardedBackend`] — wraps any inner `LinearBackend`,
+//!   runs shards in parallel, and merges outputs by column
+//!   concatenation in fixed shard order — bit-exact vs. the unsharded
+//!   inner backend because the per-column k-accumulation order is
+//!   untouched.
+//!
+//! Shard partitioning happens at plan-compile time only
+//! ([`plan::partitions_performed`] is the assertion hook); the token
+//! loop dispatches pre-packed [`plan::ShardedOperand`]s.
+
+pub mod backend;
+pub mod plan;
+pub mod pool;
+
+pub use backend::{ShardStatsSnapshot, ShardedBackend};
+pub use plan::{
+    merge_col_outputs, partitions_performed, NumaTopology, ShardChoice, ShardPlan,
+    ShardedOperand, COLS_PER_BLOCK, SHARDS_ENV,
+};
+pub use pool::WorkerPool;

@@ -1,0 +1,371 @@
+//! Shard planning: partitioning a packed weight operand into per-worker
+//! column-block shards with NUMA node hints.
+//!
+//! The shardable axis is the **output-column** axis, at the packing
+//! granularity of one 16-column block ([`COLS_PER_BLOCK`]): both
+//! `SparseTensor` and `DenseWeights` lay tiles out column-block-major
+//! with the k dimension fastest (`tile_index = col_block * k_chunks +
+//! k_chunk`), so a shard is a contiguous slice of tiles/metadata/values
+//! and — crucially — the per-column accumulation order over k is the
+//! same as in the unsharded kernel. Merging shard outputs is pure
+//! column concatenation in fixed shard order, never a floating-point
+//! re-association, which is what makes sharded execution bit-exact.
+//!
+//! Partitioning is a plan-compile-time operation: [`ShardPlan::partition`]
+//! ticks a process-wide counter (same pattern as the PR-2 registry
+//! resolution counter) so tests can assert the token loop never
+//! re-partitions.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::backend::PackedOperand;
+
+/// Column granularity of a shard boundary: one packed tile column block.
+pub const COLS_PER_BLOCK: usize = 16;
+
+/// Environment override for the shard count, mirroring `SPARAMX_CAPS`.
+pub const SHARDS_ENV: &str = "SPARAMX_SHARDS";
+
+/// Process-wide count of shard partitioning operations. Partitioning
+/// (slicing a packed operand into shards) must happen at plan-compile
+/// time only; the decode loop asserts this stays flat.
+static PARTITIONS: AtomicU64 = AtomicU64::new(0);
+
+/// How many shard partitioning operations have run in this process.
+pub fn partitions_performed() -> u64 {
+    PARTITIONS.load(Ordering::Relaxed)
+}
+
+/// The `--shards {auto,N}` knob: `Auto` shards one-per-NUMA-node (no
+/// sharding on single-node hosts), `Fixed(n)` forces `n` shards.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardChoice {
+    Auto,
+    Fixed(usize),
+}
+
+impl ShardChoice {
+    pub const HELP: &'static str = "auto|N (number of shards, 1 disables)";
+
+    /// Resolve the effective shard count against a topology, honoring
+    /// the `SPARAMX_SHARDS` environment override (useful in CI, where
+    /// every runner is single-node and `auto` would disable sharding).
+    pub fn resolve(self, topo: &NumaTopology) -> usize {
+        if let Ok(v) = std::env::var(SHARDS_ENV) {
+            if let Ok(c) = v.parse::<ShardChoice>() {
+                return c.resolve_no_env(topo);
+            }
+        }
+        self.resolve_no_env(topo)
+    }
+
+    fn resolve_no_env(self, topo: &NumaTopology) -> usize {
+        match self {
+            ShardChoice::Auto => topo.nodes,
+            ShardChoice::Fixed(n) => n.max(1),
+        }
+    }
+}
+
+impl Default for ShardChoice {
+    fn default() -> Self {
+        ShardChoice::Auto
+    }
+}
+
+impl std::str::FromStr for ShardChoice {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "auto" => Ok(ShardChoice::Auto),
+            t => t
+                .parse::<usize>()
+                .map(ShardChoice::Fixed)
+                .map_err(|_| format!("unknown shards value '{s}' (expected {})", Self::HELP)),
+        }
+    }
+}
+
+impl std::fmt::Display for ShardChoice {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ShardChoice::Auto => write!(f, "auto"),
+            ShardChoice::Fixed(n) => write!(f, "{n}"),
+        }
+    }
+}
+
+/// NUMA topology of the host: node count and total core count. Detection
+/// reads `/sys/devices/system/node`; everything else in this simulated
+/// setting treats the node assignment as an advisory placement hint.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NumaTopology {
+    pub nodes: usize,
+    pub cores: usize,
+}
+
+impl NumaTopology {
+    /// A synthetic topology for tests and cost-model experiments.
+    pub fn modeled(nodes: usize, cores: usize) -> NumaTopology {
+        NumaTopology {
+            nodes: nodes.max(1),
+            cores: cores.max(1),
+        }
+    }
+
+    /// Single-node topology with `cores` cores.
+    pub fn single(cores: usize) -> NumaTopology {
+        NumaTopology::modeled(1, cores)
+    }
+
+    /// Detect the host topology from sysfs; falls back to one node with
+    /// the parallelism the OS reports.
+    pub fn detect() -> NumaTopology {
+        let cores = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        let nodes = std::fs::read_dir("/sys/devices/system/node")
+            .map(|rd| {
+                rd.filter_map(|e| e.ok())
+                    .filter(|e| {
+                        let n = e.file_name();
+                        let n = n.to_string_lossy();
+                        n.strip_prefix("node")
+                            .map(|r| r.chars().all(|c| c.is_ascii_digit()) && !r.is_empty())
+                            .unwrap_or(false)
+                    })
+                    .count()
+            })
+            .unwrap_or(0)
+            .max(1);
+        NumaTopology { nodes, cores }
+    }
+
+    /// Node hint for worker `w` of `workers`: contiguous worker ranges
+    /// map to contiguous nodes.
+    pub fn node_of(&self, w: usize, workers: usize) -> usize {
+        if workers == 0 {
+            return 0;
+        }
+        (w * self.nodes / workers).min(self.nodes - 1)
+    }
+}
+
+/// A compiled shard partition of one weight operand's column axis:
+/// which column blocks (and therefore which logical columns) each shard
+/// owns, plus the NUMA node each shard is hinted to.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardPlan {
+    pub shards: usize,
+    /// Per-shard range of 16-column packed blocks.
+    pub block_ranges: Vec<std::ops::Range<usize>>,
+    /// Per-shard range of logical (unpadded) output columns.
+    pub col_ranges: Vec<std::ops::Range<usize>>,
+    /// Per-shard NUMA node hint.
+    pub nodes: Vec<usize>,
+}
+
+impl ShardPlan {
+    /// Build a plan without ticking the partition counter — used by the
+    /// cost model, which must be able to price a hypothetical sharding
+    /// without looking like a plan-compile event.
+    pub fn build(cols: usize, shards: usize, topo: &NumaTopology) -> ShardPlan {
+        let blocks = cols.div_ceil(COLS_PER_BLOCK).max(1);
+        let shards = shards.clamp(1, blocks);
+        let block_ranges = crate::util::threadpool::partition_ranges(blocks, shards);
+        let col_ranges = block_ranges
+            .iter()
+            .map(|br| {
+                let start = (br.start * COLS_PER_BLOCK).min(cols);
+                let end = (br.end * COLS_PER_BLOCK).min(cols);
+                start..end
+            })
+            .collect();
+        let nodes = (0..shards).map(|s| topo.node_of(s, shards)).collect();
+        ShardPlan {
+            shards,
+            block_ranges,
+            col_ranges,
+            nodes,
+        }
+    }
+
+    /// Build a plan for real execution; ticks the process-wide partition
+    /// counter (see [`partitions_performed`]).
+    pub fn partition(cols: usize, shards: usize, topo: &NumaTopology) -> ShardPlan {
+        PARTITIONS.fetch_add(1, Ordering::Relaxed);
+        ShardPlan::build(cols, shards, topo)
+    }
+
+    /// Logical column width of each shard — the non-ticking helper the
+    /// cost model uses to price per-shard kernels.
+    pub fn col_widths(cols: usize, shards: usize) -> Vec<usize> {
+        let blocks = cols.div_ceil(COLS_PER_BLOCK).max(1);
+        let shards = shards.clamp(1, blocks);
+        crate::util::threadpool::partition_ranges(blocks, shards)
+            .iter()
+            .map(|br| {
+                (br.end * COLS_PER_BLOCK).min(cols) - (br.start * COLS_PER_BLOCK).min(cols)
+            })
+            .collect()
+    }
+
+    /// Total logical columns covered by the plan.
+    pub fn cols(&self) -> usize {
+        self.col_ranges.last().map(|r| r.end).unwrap_or(0)
+    }
+}
+
+/// A weight operand pre-partitioned into per-shard packed slices at
+/// plan-compile time. The decode loop hands this to
+/// `Backend::gemm_bf16_sharded`, which runs the parts (in parallel on a
+/// `ShardedBackend`, sequentially otherwise) and concatenates outputs
+/// column-wise in shard order.
+#[derive(Debug, Clone)]
+pub struct ShardedOperand {
+    pub rows: usize,
+    pub cols: usize,
+    pub plan: ShardPlan,
+    pub parts: Vec<PackedOperand>,
+}
+
+impl ShardedOperand {
+    /// Slice a whole packed operand into per-shard parts following
+    /// `plan`. The whole operand is packed once; parts are contiguous
+    /// tile-range slices, so no value is re-quantized or re-ordered.
+    pub fn from_whole(whole: &PackedOperand, plan: ShardPlan) -> ShardedOperand {
+        let (rows, cols) = whole.dims();
+        debug_assert_eq!(plan.cols(), cols, "shard plan must cover the operand");
+        let parts = plan
+            .block_ranges
+            .iter()
+            .map(|br| match whole {
+                PackedOperand::Sparse(sp) => {
+                    PackedOperand::Sparse(sp.slice_col_blocks(br.clone()))
+                }
+                PackedOperand::Dense(dw) => {
+                    PackedOperand::Dense(dw.slice_col_blocks(br.clone()))
+                }
+                PackedOperand::Sharded(_) => {
+                    unreachable!("sharded operands cannot be re-sharded")
+                }
+            })
+            .collect();
+        ShardedOperand {
+            rows,
+            cols,
+            plan,
+            parts,
+        }
+    }
+}
+
+/// Concatenate per-shard output slabs column-wise in fixed shard order.
+/// `parts[s]` is row-major `batch × col_ranges[s].len()`; the result is
+/// row-major `batch × cols`. Pure data movement — bit-exact by
+/// construction.
+pub fn merge_col_outputs<T: Copy + Default>(
+    parts: &[Vec<T>],
+    plan: &ShardPlan,
+    batch: usize,
+    cols: usize,
+) -> Vec<T> {
+    let mut out = vec![T::default(); batch * cols];
+    for (part, cr) in parts.iter().zip(&plan.col_ranges) {
+        let sc = cr.len();
+        for b in 0..batch {
+            out[b * cols + cr.start..b * cols + cr.end]
+                .copy_from_slice(&part[b * sc..(b + 1) * sc]);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_choice_parses() {
+        assert_eq!("auto".parse::<ShardChoice>().unwrap(), ShardChoice::Auto);
+        assert_eq!("4".parse::<ShardChoice>().unwrap(), ShardChoice::Fixed(4));
+        assert!("lots".parse::<ShardChoice>().is_err());
+        assert_eq!(ShardChoice::Fixed(2).to_string(), "2");
+        assert_eq!(ShardChoice::Auto.to_string(), "auto");
+    }
+
+    #[test]
+    fn auto_resolves_to_node_count() {
+        let two = NumaTopology::modeled(2, 32);
+        let one = NumaTopology::single(8);
+        // resolve_no_env avoids interference from SPARAMX_SHARDS in the
+        // test environment
+        assert_eq!(ShardChoice::Auto.resolve_no_env(&two), 2);
+        assert_eq!(ShardChoice::Auto.resolve_no_env(&one), 1);
+        assert_eq!(ShardChoice::Fixed(4).resolve_no_env(&one), 4);
+        assert_eq!(ShardChoice::Fixed(0).resolve_no_env(&one), 1);
+    }
+
+    #[test]
+    fn detect_reports_at_least_one_node() {
+        let t = NumaTopology::detect();
+        assert!(t.nodes >= 1);
+        assert!(t.cores >= 1);
+    }
+
+    #[test]
+    fn plan_covers_columns_at_block_granularity() {
+        // 112 cols = 7 blocks; 4 shards → blocks [2,2,2,1], cols
+        // [32,32,32,16]
+        let plan = ShardPlan::build(112, 4, &NumaTopology::modeled(2, 8));
+        assert_eq!(plan.shards, 4);
+        assert_eq!(
+            plan.col_ranges,
+            vec![0..32, 32..64, 64..96, 96..112]
+        );
+        assert_eq!(plan.nodes, vec![0, 0, 1, 1]);
+        assert_eq!(plan.cols(), 112);
+        assert_eq!(ShardPlan::col_widths(112, 4), vec![32, 32, 32, 16]);
+    }
+
+    #[test]
+    fn plan_clamps_shards_to_blocks() {
+        // 20 cols = 2 blocks; asking for 8 shards yields 2
+        let plan = ShardPlan::build(20, 8, &NumaTopology::single(4));
+        assert_eq!(plan.shards, 2);
+        assert_eq!(plan.col_ranges, vec![0..16, 16..20]);
+    }
+
+    #[test]
+    fn partition_ticks_counter_build_does_not() {
+        // the single lib test that touches the global counter — all
+        // non-ticking paths are asserted here so no parallel test races
+        let topo = NumaTopology::single(4);
+        let before = partitions_performed();
+        let _ = ShardPlan::build(64, 2, &topo);
+        let _ = ShardPlan::col_widths(64, 2);
+        let m = crate::perf::Machine::sapphire_rapids(32);
+        let _ = crate::perf::cost::sharded_sparse_gemm_cost(1, 4096, 14336, 0.5, 4, &m);
+        let _ = crate::perf::cost::sharded_dense_gemm_cost(1, 4096, 14336, 4, &m);
+        assert_eq!(
+            partitions_performed(),
+            before,
+            "plan build / cost prediction must not count as partitioning"
+        );
+        let _ = ShardPlan::partition(64, 2, &topo);
+        assert_eq!(partitions_performed(), before + 1);
+    }
+
+    #[test]
+    fn merge_concatenates_columns_in_shard_order() {
+        let plan = ShardPlan::build(32, 2, &NumaTopology::single(2));
+        // batch=2, shard cols 16+16
+        let a: Vec<f32> = (0..32).map(|i| i as f32).collect();
+        let b: Vec<f32> = (0..32).map(|i| 100.0 + i as f32).collect();
+        let out = merge_col_outputs(&[a.clone(), b.clone()], &plan, 2, 32);
+        assert_eq!(&out[0..16], &a[0..16]);
+        assert_eq!(&out[16..32], &b[0..16]);
+        assert_eq!(&out[32..48], &a[16..32]);
+        assert_eq!(&out[48..64], &b[16..32]);
+    }
+}

@@ -1,0 +1,370 @@
+//! [`WorkerPool`]: persistent worker threads with per-worker mailboxes
+//! and an epoch barrier.
+//!
+//! The paper's deployment pins one worker per partition for the process
+//! lifetime (§7: the `weight_value_index` thread partition is computed
+//! once, so the thread count is fixed at load). The old
+//! `util/threadpool.rs` spawned OS threads on every `parallel_for` call;
+//! this pool spawns them once and reuses them, which is what makes the
+//! per-epoch overhead a constant (`SHARD_BARRIER_S` in `perf/cost.rs`)
+//! instead of a per-call thread-creation cost.
+//!
+//! Execution model:
+//!
+//! * every worker owns a **mailbox** (FIFO + condvar) and sleeps on it;
+//! * [`WorkerPool::scatter`] posts one closure per shard — shard `i`
+//!   goes to worker `i * workers / shards`, keeping consecutive shards
+//!   on consecutive workers (contiguous NUMA placement when the worker
+//!   range is split across nodes);
+//! * a shared **epoch barrier** (pending counter + condvar) blocks the
+//!   caller until every posted job ran — which is also what makes the
+//!   scoped-borrow transmute below sound;
+//! * worker panics are caught, the epoch still completes, and the panic
+//!   is re-raised on the caller so a broken shard can't hang the pool.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// One worker's job queue. `closed` tells the worker to exit once the
+/// queue drains (set by `Drop`).
+struct Mailbox {
+    queue: Mutex<(VecDeque<Job>, bool)>,
+    ready: Condvar,
+}
+
+/// Epoch barrier: jobs outstanding in the current scatter, plus whether
+/// any of them panicked.
+struct Barrier {
+    state: Mutex<(usize, bool)>,
+    done: Condvar,
+}
+
+struct Shared {
+    mailboxes: Vec<Mailbox>,
+    barrier: Barrier,
+}
+
+/// Fixed-size persistent worker pool (workers spawned once, at
+/// construction; see module docs).
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    /// Serializes scatters: the epoch barrier tracks one epoch at a time.
+    submit: Mutex<()>,
+    workers: usize,
+    epochs: AtomicU64,
+    /// NUMA node hint per worker (from the topology the pool was built
+    /// for); purely advisory in this simulated setting.
+    node_hints: Vec<usize>,
+}
+
+impl WorkerPool {
+    /// Spawn `workers` persistent threads (minimum 1), assuming a single
+    /// NUMA node.
+    pub fn new(workers: usize) -> WorkerPool {
+        WorkerPool::with_topology(workers, &super::plan::NumaTopology::single(workers))
+    }
+
+    /// Spawn `workers` persistent threads with NUMA node hints from
+    /// `topo`: worker `w` is hinted to node `w * nodes / workers`, so a
+    /// contiguous worker range maps to a contiguous node range.
+    pub fn with_topology(workers: usize, topo: &super::plan::NumaTopology) -> WorkerPool {
+        let workers = workers.max(1);
+        let shared = Arc::new(Shared {
+            mailboxes: (0..workers)
+                .map(|_| Mailbox {
+                    queue: Mutex::new((VecDeque::new(), false)),
+                    ready: Condvar::new(),
+                })
+                .collect(),
+            barrier: Barrier {
+                state: Mutex::new((0, false)),
+                done: Condvar::new(),
+            },
+        });
+        let handles = (0..workers)
+            .map(|w| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("sparamx-shard-{w}"))
+                    .spawn(move || worker_loop(&shared, w))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        let node_hints = (0..workers).map(|w| topo.node_of(w, workers)).collect();
+        WorkerPool {
+            shared,
+            handles,
+            submit: Mutex::new(()),
+            workers,
+            epochs: AtomicU64::new(0),
+            node_hints,
+        }
+    }
+
+    /// Number of persistent workers.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// NUMA node hint of worker `w`.
+    pub fn worker_node(&self, w: usize) -> usize {
+        self.node_hints[w]
+    }
+
+    /// Barrier epochs completed so far (one per [`WorkerPool::scatter`]
+    /// that posted at least one job) — lets tests assert the same
+    /// persistent workers served every epoch.
+    pub fn epochs(&self) -> u64 {
+        self.epochs.load(Ordering::Relaxed)
+    }
+
+    /// Run one epoch: post each job to its worker's mailbox, then block
+    /// on the barrier until all of them finished. Job `i` of `n` runs on
+    /// worker `i * workers / n` (consecutive jobs → consecutive
+    /// workers). Panics in a job are re-raised here after the epoch
+    /// completes.
+    pub fn scatter<'scope>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 'scope>>) {
+        if jobs.is_empty() {
+            return;
+        }
+        let _serial = self.submit.lock().expect("pool submit lock");
+        let n = jobs.len();
+        {
+            let mut st = self.shared.barrier.state.lock().expect("pool barrier lock");
+            debug_assert_eq!(st.0, 0, "epoch barrier must be idle between scatters");
+            *st = (n, false);
+        }
+        for (i, job) in jobs.into_iter().enumerate() {
+            // SAFETY: the barrier wait below does not return until every
+            // posted job has run to completion, so any borrow captured by
+            // `job` (lifetime 'scope, which outlives this call) is live
+            // for the job's whole execution. The 'static erasure never
+            // lets a job outlive its borrows.
+            let job: Job = unsafe {
+                std::mem::transmute::<Box<dyn FnOnce() + Send + 'scope>, Job>(job)
+            };
+            let mb = &self.shared.mailboxes[i * self.workers / n];
+            mb.queue.lock().expect("pool mailbox lock").0.push_back(job);
+            mb.ready.notify_one();
+        }
+        let mut st = self.shared.barrier.state.lock().expect("pool barrier lock");
+        while st.0 > 0 {
+            st = self
+                .shared
+                .barrier
+                .done
+                .wait(st)
+                .expect("pool barrier wait");
+        }
+        let panicked = st.1;
+        st.1 = false;
+        drop(st);
+        self.epochs.fetch_add(1, Ordering::Relaxed);
+        if panicked {
+            panic!("worker pool job panicked");
+        }
+    }
+
+    /// Run `f(i)` for every `i in 0..n`, work-stealing via an atomic
+    /// cursor over the persistent workers. Inline when there is nothing
+    /// to parallelize (the old `ThreadPool` contract).
+    pub fn parallel_for<F>(&self, n: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        if n == 0 {
+            return;
+        }
+        if self.workers == 1 || n == 1 {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+        let cursor = AtomicUsize::new(0);
+        let lanes = self.workers.min(n);
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..lanes)
+            .map(|_| {
+                let f = &f;
+                let cursor = &cursor;
+                Box::new(move || loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    f(i);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        self.scatter(jobs);
+    }
+
+    /// Map `f` over `0..n` collecting results in order.
+    pub fn parallel_map<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send + Default + Clone,
+        F: Fn(usize) -> T + Sync,
+    {
+        let mut out = vec![T::default(); n];
+        {
+            let slots: Vec<Mutex<&mut T>> = out.iter_mut().map(Mutex::new).collect();
+            self.parallel_for(n, |i| {
+                **slots[i].lock().expect("slot lock") = f(i);
+            });
+        }
+        out
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        for mb in &self.shared.mailboxes {
+            mb.queue.lock().expect("pool mailbox lock").1 = true;
+            mb.ready.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl std::fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "WorkerPool({} workers, {} epochs)",
+            self.workers,
+            self.epochs()
+        )
+    }
+}
+
+fn worker_loop(shared: &Shared, w: usize) {
+    let mb = &shared.mailboxes[w];
+    loop {
+        let job = {
+            let mut q = mb.queue.lock().expect("pool mailbox lock");
+            loop {
+                if let Some(job) = q.0.pop_front() {
+                    break Some(job);
+                }
+                if q.1 {
+                    break None;
+                }
+                q = mb.ready.wait(q).expect("pool mailbox wait");
+            }
+        };
+        let Some(job) = job else { return };
+        let panicked =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(job)).is_err();
+        let mut st = shared.barrier.state.lock().expect("pool barrier lock");
+        if panicked {
+            st.1 = true;
+        }
+        st.0 -= 1;
+        if st.0 == 0 {
+            shared.barrier.done.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64 as TestCounter;
+
+    #[test]
+    fn scatter_runs_every_job_and_counts_epochs() {
+        let pool = WorkerPool::new(3);
+        let hits: Vec<TestCounter> = (0..7).map(|_| TestCounter::new(0)).collect();
+        for _ in 0..4 {
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..7)
+                .map(|i| {
+                    let h = &hits[i];
+                    Box::new(move || {
+                        h.fetch_add(1, Ordering::SeqCst);
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.scatter(jobs);
+        }
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 4));
+        assert_eq!(pool.epochs(), 4, "one epoch per scatter, threads reused");
+        assert_eq!(pool.workers(), 3);
+    }
+
+    #[test]
+    fn workers_persist_across_epochs() {
+        // the same worker thread serves every epoch: record thread ids
+        let pool = WorkerPool::new(2);
+        let ids = Mutex::new(std::collections::BTreeSet::new());
+        for _ in 0..10 {
+            pool.parallel_for(8, |_| {
+                ids.lock().unwrap().insert(format!("{:?}", std::thread::current().id()));
+            });
+        }
+        // 10 epochs × up to 2 lanes, but only 2 distinct threads ever ran
+        assert!(ids.lock().unwrap().len() <= 2);
+        assert_eq!(pool.epochs(), 10);
+    }
+
+    #[test]
+    fn parallel_for_visits_every_index_once() {
+        let pool = WorkerPool::new(4);
+        let hits: Vec<TestCounter> = (0..100).map(|_| TestCounter::new(0)).collect();
+        pool.parallel_for(100, |i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn shard_to_worker_mapping_is_contiguous() {
+        // 4 jobs on 8 workers land on workers 0,2,4,6; 8 jobs on 4
+        // workers double up in order.
+        let assign = |jobs: usize, workers: usize| -> Vec<usize> {
+            (0..jobs).map(|i| i * workers / jobs).collect()
+        };
+        assert_eq!(assign(4, 8), vec![0, 2, 4, 6]);
+        assert_eq!(assign(8, 4), vec![0, 0, 1, 1, 2, 2, 3, 3]);
+        assert_eq!(assign(3, 2), vec![0, 0, 1]);
+    }
+
+    #[test]
+    fn node_hints_split_workers_across_nodes() {
+        let topo = crate::shard::NumaTopology::modeled(2, 8);
+        let pool = WorkerPool::with_topology(4, &topo);
+        let hints: Vec<usize> = (0..4).map(|w| pool.worker_node(w)).collect();
+        assert_eq!(hints, vec![0, 0, 1, 1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "worker pool job panicked")]
+    fn job_panic_reraises_on_caller() {
+        let pool = WorkerPool::new(2);
+        pool.parallel_for(4, |i| {
+            if i == 2 {
+                panic!("boom");
+            }
+        });
+    }
+
+    #[test]
+    fn pool_survives_a_panicked_epoch() {
+        let pool = WorkerPool::new(2);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.parallel_for(4, |_| panic!("boom"));
+        }));
+        assert!(r.is_err());
+        // the barrier reset; the next epoch runs normally
+        let n = TestCounter::new(0);
+        pool.parallel_for(8, |_| {
+            n.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(n.load(Ordering::SeqCst), 8);
+    }
+}

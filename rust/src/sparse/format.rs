@@ -256,6 +256,43 @@ impl<T: Element> SparseTensor<T> {
         }
     }
 
+    /// Slice out a contiguous range of 16-neuron column blocks as a
+    /// standalone tensor. Because the tile stream is column-block-major
+    /// with k fastest, the slice is a contiguous cut of `metadata`,
+    /// `values`, and `tile_nnz_prefix` — no element is re-ordered, so a
+    /// kernel run on the slice accumulates each column in exactly the
+    /// same k-order as on the whole tensor (the sharding bit-exactness
+    /// invariant). Used by the shard subsystem's plan-compile packing.
+    pub fn slice_col_blocks(&self, blocks: std::ops::Range<usize>) -> SparseTensor<T> {
+        assert!(
+            blocks.end <= self.col_blocks(),
+            "slice {blocks:?} out of range ({} col blocks)",
+            self.col_blocks()
+        );
+        let kc = self.k_chunks();
+        let (t0, t1) = (blocks.start * kc, blocks.end * kc);
+        let (v0, v1) = (
+            self.tile_nnz_prefix[t0] as usize,
+            self.tile_nnz_prefix[t1] as usize,
+        );
+        let cpt = self.order.cols_per_tile;
+        let col0 = blocks.start * cpt;
+        let r = self.order.tile_rows;
+        SparseTensor {
+            rows: self.rows,
+            cols: self.cols.min(blocks.end * cpt).saturating_sub(col0),
+            rows_padded: self.rows_padded,
+            cols_padded: blocks.len() * cpt,
+            order: self.order,
+            metadata: self.metadata[t0 * r..t1 * r].to_vec(),
+            values: self.values[v0..v1].to_vec(),
+            tile_nnz_prefix: self.tile_nnz_prefix[t0..=t1]
+                .iter()
+                .map(|&p| p - v0 as u32)
+                .collect(),
+        }
+    }
+
     /// Reconstruct the dense row-major matrix (tests / reference path).
     pub fn to_dense(&self) -> Vec<T> {
         let mut out = vec![T::default(); self.rows * self.cols];
@@ -434,6 +471,60 @@ mod tests {
         assert!(dense.nnz() > full.nnz());
         // reconstruction identical either way
         assert_eq!(dense.to_dense_f32(), full.to_dense_f32());
+    }
+
+    #[test]
+    fn slice_col_blocks_matches_column_slice_of_whole() {
+        // 48x112 = 7 column blocks; slice every contiguous block range
+        // and check the dense reconstruction equals the column slice.
+        let (rows, cols) = (48, 112);
+        let w = random_pruned(rows, cols, 0.5, 7);
+        let sp = SparseTensor::pack_f32(&w, rows, cols);
+        let whole = sp.to_dense_f32();
+        for (b0, b1) in [(0usize, 7usize), (0, 2), (2, 5), (6, 7), (3, 3)] {
+            let sl = sp.slice_col_blocks(b0..b1);
+            let (c0, c1) = (b0 * 16, (b1 * 16).min(cols));
+            assert_eq!(sl.rows, rows);
+            assert_eq!(sl.cols, c1.saturating_sub(c0));
+            let got = sl.to_dense_f32();
+            let mut expect = Vec::new();
+            for k in 0..rows {
+                expect.extend_from_slice(&whole[k * cols + c0..k * cols + c1]);
+            }
+            assert_eq!(got, expect, "blocks {b0}..{b1}");
+        }
+    }
+
+    #[test]
+    fn slice_col_blocks_int8_keeps_prefix_consistent() {
+        let mut g = XorShift::new(8);
+        let (rows, cols) = (64, 96);
+        let w: Vec<i8> = (0..rows * cols)
+            .map(|_| {
+                if g.next_f64() < 0.5 {
+                    0
+                } else {
+                    (g.below(253) as i32 - 126) as i8
+                }
+            })
+            .collect();
+        let sp: SparseTensor<i8> = SparseTensor::pack(&w, rows, cols);
+        let sl = sp.slice_col_blocks(2..5);
+        assert_eq!(sl.tile_nnz_prefix[0], 0);
+        assert_eq!(*sl.tile_nnz_prefix.last().unwrap() as usize, sl.nnz());
+        for t in 0..sl.num_tiles() {
+            let (vals, _) = sl.tile_values(t);
+            let pop: u32 = sl.tile_metadata(t).iter().map(|m| m.count_ones()).sum();
+            assert_eq!(pop as usize, vals.len());
+        }
+        // dense content matches the column slice of the whole
+        let whole = sp.to_dense();
+        let got = sl.to_dense();
+        let mut expect = Vec::new();
+        for k in 0..rows {
+            expect.extend_from_slice(&whole[k * cols + 32..k * cols + 80]);
+        }
+        assert_eq!(got, expect);
     }
 
     #[test]

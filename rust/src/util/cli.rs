@@ -99,6 +99,18 @@ impl Args {
         }
     }
 
+    /// The `--shards {auto,N}` sharding directive; defaults to `auto`
+    /// (one shard per detected NUMA node — off on single-node hosts).
+    /// Panics with the accepted spellings on a bad value.
+    pub fn shards(&self) -> crate::shard::ShardChoice {
+        match self.options.get("shards") {
+            None => crate::shard::ShardChoice::Auto,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|e: String| panic!("--shards={v}: {e}")),
+        }
+    }
+
     /// Comma-separated list option, e.g. `--cores 8,16,32`.
     pub fn get_list<T: std::str::FromStr>(&self, key: &str, default: &[T]) -> Vec<T>
     where
@@ -183,6 +195,21 @@ mod tests {
     #[should_panic(expected = "unknown backend")]
     fn backend_flag_rejects_unknown() {
         let _ = parse("run --backend mkl").backend();
+    }
+
+    #[test]
+    fn shards_flag_parses_with_auto_default() {
+        use crate::shard::ShardChoice;
+        assert_eq!(parse("run").shards(), ShardChoice::Auto);
+        assert_eq!(parse("run --shards auto").shards(), ShardChoice::Auto);
+        assert_eq!(parse("run --shards 4").shards(), ShardChoice::Fixed(4));
+        assert_eq!(parse("serve --shards=2").shards(), ShardChoice::Fixed(2));
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown shards value")]
+    fn shards_flag_rejects_unknown() {
+        let _ = parse("run --shards many").shards();
     }
 
     #[test]

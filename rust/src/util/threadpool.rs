@@ -1,37 +1,34 @@
-//! A small fixed-size thread pool with scoped parallel-for.
+//! A small fixed-size thread pool with parallel-for — now a thin shim
+//! over the persistent [`crate::shard::WorkerPool`].
 //!
 //! The paper's kernels parallelize over output columns with a *fixed*
 //! thread count chosen at model-load time (the `weight_value_index`
-//! partitioning bakes the count in). This pool mirrors that contract: the
-//! worker count is fixed at construction, and `parallel_for` dispatches
-//! index ranges to the workers.
-//!
-//! rayon is not vendored in this offline image, so this is a minimal
-//! std-only implementation built on `std::thread::scope`.
+//! partitioning bakes the count in). Historically this type spawned OS
+//! threads on every `parallel_for` call via `std::thread::scope`; it now
+//! keeps the same API but dispatches onto long-lived workers spawned
+//! once at construction, so repeated calls pay a mailbox wakeup instead
+//! of thread creation. Clones share the same worker pool.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
-/// Fixed-size pool. Workers are spawned per `parallel_for` call using
-/// scoped threads, which keeps the API simple and borrows safe; on the
-/// 1-core CI container thread reuse would not be measurable anyway, and
-/// the simulated-core experiments never spawn real threads.
-#[derive(Clone, Debug)]
+/// Fixed-size pool over persistent workers. `Clone` shares the workers.
+#[derive(Clone)]
 pub struct ThreadPool {
-    threads: usize,
+    pool: Arc<crate::shard::WorkerPool>,
 }
 
 impl ThreadPool {
-    /// Create a pool with `threads` workers (minimum 1).
+    /// Create a pool with `threads` workers (minimum 1). Workers are
+    /// spawned here, once, and live until the last clone drops.
     pub fn new(threads: usize) -> Self {
         ThreadPool {
-            threads: threads.max(1),
+            pool: Arc::new(crate::shard::WorkerPool::new(threads)),
         }
     }
 
     /// Number of worker threads.
     pub fn threads(&self) -> usize {
-        self.threads
+        self.pool.workers()
     }
 
     /// Run `f(i)` for every `i in 0..n`, work-stealing via an atomic
@@ -40,30 +37,7 @@ impl ThreadPool {
     where
         F: Fn(usize) + Sync,
     {
-        if n == 0 {
-            return;
-        }
-        if self.threads == 1 || n == 1 {
-            for i in 0..n {
-                f(i);
-            }
-            return;
-        }
-        let cursor = Arc::new(AtomicUsize::new(0));
-        let workers = self.threads.min(n);
-        std::thread::scope(|s| {
-            for _ in 0..workers {
-                let cursor = Arc::clone(&cursor);
-                let f = &f;
-                s.spawn(move || loop {
-                    let i = cursor.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
-                        break;
-                    }
-                    f(i);
-                });
-            }
-        });
+        self.pool.parallel_for(n, f);
     }
 
     /// Map `f` over `0..n` collecting results in order.
@@ -72,21 +46,19 @@ impl ThreadPool {
         T: Send + Default + Clone,
         F: Fn(usize) -> T + Sync,
     {
-        let mut out = vec![T::default(); n];
-        {
-            let slots: Vec<std::sync::Mutex<&mut T>> =
-                out.iter_mut().map(std::sync::Mutex::new).collect();
-            self.parallel_for(n, |i| {
-                **slots[i].lock().expect("slot lock") = f(i);
-            });
-        }
-        out
+        self.pool.parallel_map(n, f)
+    }
+}
+
+impl std::fmt::Debug for ThreadPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "ThreadPool({} threads)", self.threads())
     }
 }
 
 /// Partition `n` items into `parts` contiguous ranges, sizes differing by
-/// at most one. Used both by the pool and by the sparse-format thread
-/// partitioner (Figure 9 of the paper).
+/// at most one. Used by the pool, the sparse-format thread partitioner
+/// (Figure 9 of the paper), and the shard planner.
 pub fn partition_ranges(n: usize, parts: usize) -> Vec<std::ops::Range<usize>> {
     let parts = parts.max(1);
     let base = n / parts;
@@ -133,6 +105,17 @@ mod tests {
     #[test]
     fn zero_items_is_noop() {
         ThreadPool::new(2).parallel_for(0, |_| panic!("should not run"));
+    }
+
+    #[test]
+    fn clones_share_the_same_workers() {
+        let pool = ThreadPool::new(2);
+        let other = pool.clone();
+        pool.parallel_for(8, |_| {});
+        other.parallel_for(8, |_| {});
+        assert_eq!(pool.threads(), other.threads());
+        // both calls ran as epochs of ONE shared pool
+        assert_eq!(Arc::strong_count(&pool.pool), 2);
     }
 
     #[test]

@@ -1,0 +1,115 @@
+//! Compile-time-only partitioning invariant, end to end.
+//!
+//! `sparamx::shard::partitions_performed()` is a process-global
+//! counter, so this binary holds exactly ONE test: a separate test
+//! binary is a separate process (its own counter), and a single `#[test]`
+//! rules out intra-binary test parallelism. Parity and registry tests —
+//! which tick the counter freely — live in `sharded_backend.rs`.
+
+use sparamx::amx::EventCounters;
+use sparamx::backend::{Backend, BackendChoice, BackendRegistry, CpuCaps, PackedOperand};
+use sparamx::models::plan::NativeModel;
+use sparamx::models::tinyforward::{LayerW, TinyModel};
+use sparamx::shard::{partitions_performed, NumaTopology, WorkerPool};
+use sparamx::sparse::prune::magnitude_prune;
+use sparamx::util::XorShift;
+use std::sync::Arc;
+
+/// Same synthetic checkpoint family as `native_engine.rs`.
+fn toy_model(seed: u64) -> TinyModel {
+    let mut g = XorShift::new(seed);
+    let (h, inter, heads, kvh, hd, vocab) = (16, 24, 4, 2, 4, 256);
+    let mut mk = |n: usize| g.normal_vec(n, 0.3);
+    TinyModel {
+        hidden: h,
+        inter,
+        heads,
+        kv_heads: kvh,
+        head_dim: hd,
+        vocab,
+        emb: mk(vocab * h),
+        layers: (0..2)
+            .map(|_| LayerW {
+                ln1: vec![1.0; h],
+                wq: mk(h * heads * hd),
+                wk: mk(h * kvh * hd),
+                wv: mk(h * kvh * hd),
+                wo: mk(heads * hd * h),
+                ln2: vec![1.0; h],
+                wgate: mk(h * inter),
+                wup: mk(h * inter),
+                wdown: mk(inter * h),
+            })
+            .collect(),
+        ln_f: vec![1.0; h],
+        lm_head: mk(h * vocab),
+    }
+}
+
+#[test]
+fn partitioning_happens_at_pack_time_never_in_the_serving_loop() {
+    let topo = NumaTopology::modeled(2, 8);
+    let inner = Backend::amx();
+    let pool = Arc::new(WorkerPool::with_topology(2, &topo));
+    let sharded = Backend::sharded(inner.clone(), 2, topo, pool);
+
+    // (a) packing an operand through a sharded backend partitions it
+    // exactly once and yields the pre-sharded variant
+    let (rows, cols, batch) = (48usize, 112usize, 3usize);
+    let mut g = XorShift::new(71);
+    let w = magnitude_prune(&g.normal_vec(rows * cols, 1.0), 0.5);
+    let x = g.normal_vec(batch * rows, 1.0);
+    let before = partitions_performed();
+    let op = PackedOperand::pack_f32(&sharded, &w, rows, cols, true);
+    assert_eq!(partitions_performed(), before + 1, "pack partitions exactly once");
+    assert!(
+        matches!(op, PackedOperand::Sharded(_)),
+        "sharded backend must pack a pre-sharded operand"
+    );
+
+    // (b) running the packed operand never re-partitions, and matches
+    // the unsharded inner backend bit-exactly
+    let whole = PackedOperand::pack_f32(&inner, &w, rows, cols, true);
+    let mut c = EventCounters::default();
+    let want = whole.gemm_bf16(&inner, &x, batch, &mut c);
+    let at_pack = partitions_performed();
+    for step in 0..5 {
+        let mut cs = EventCounters::default();
+        let got = op.gemm_bf16(&sharded, &x, batch, &mut cs);
+        assert_eq!(got, want, "step {step}: pre-sharded run not bit-exact");
+    }
+    assert_eq!(partitions_performed(), at_pack, "serving runs must not re-partition");
+
+    // (c) full native pipeline on a sharded registry: all partitioning
+    // and backend selection happens inside NativeModel::new (plan
+    // compile + weight pack); a dozen decode steps move neither counter
+    let reg = BackendRegistry::with_caps(CpuCaps::all()).with_shards(2, topo);
+    assert_eq!(reg.selections_resolved(), 0);
+    let nm = NativeModel::new(&reg, BackendChoice::Auto, toy_model(72), 0.0);
+    let at_load_parts = partitions_performed();
+    let at_load_sels = reg.selections_resolved();
+    assert_eq!(at_load_sels, 5, "plan compile = one resolution per distinct shape");
+
+    let prompt = [1u8, 5, 9, 2];
+    let mut ctr = EventCounters::default();
+    let mut cache = nm.prefill(&prompt[..prompt.len() - 1], 0.0, 0.0, &mut ctr);
+    let mut token = *prompt.last().unwrap();
+    let mut pos = prompt.len() - 1;
+    for _ in 0..12 {
+        let logits = nm.decode_step(token, pos, &mut cache, &mut ctr);
+        let mut best = 0;
+        for (i, &v) in logits.iter().enumerate() {
+            if v > logits[best] {
+                best = i;
+            }
+        }
+        token = best as u8;
+        pos += 1;
+    }
+    assert_eq!(
+        partitions_performed(),
+        at_load_parts,
+        "token loop re-partitioned a shard plan"
+    );
+    assert_eq!(reg.selections_resolved(), at_load_sels, "token loop re-ran selection");
+}

@@ -1,0 +1,214 @@
+//! Sharded execution acceptance tests: the pool-parallel
+//! [`ShardedBackend`] must be **bit-exact** against its inner backend
+//! run unsharded (dense + sparse, BF16 + INT8, divisible and
+//! non-divisible shard counts), its capability gating must follow the
+//! inner backend, and registry auto-selection must pick sharding
+//! exactly where the cost model says it wins (the Fig 11 crossover).
+//!
+//! The partition-counter (compile-time-only) invariants live in
+//! `shard_plan_compile.rs` — a separate binary, because these parity
+//! tests tick the global partition counter freely.
+
+use sparamx::amx::kernels::DenseWeights;
+use sparamx::amx::EventCounters;
+use sparamx::backend::{
+    Backend, BackendKind, BackendRegistry, CpuCaps, Dtype, GemmShape, PackedOperand,
+};
+use sparamx::perf::cost::{sharded_sparse_gemm_cost, sparse_gemm_cost};
+use sparamx::shard::{NumaTopology, ShardPlan, ShardedOperand, WorkerPool};
+use sparamx::sparse::format::SparseTensor;
+use sparamx::sparse::prune::magnitude_prune;
+use sparamx::util::XorShift;
+use std::sync::Arc;
+
+/// 48×112 = 7 packed column blocks: 4-way sharding splits non-divisibly
+/// (2+2+2+1 blocks) and 7-way gives one block per shard.
+const ROWS: usize = 48;
+const COLS: usize = 112;
+const BATCH: usize = 3;
+const SHARD_COUNTS: [usize; 4] = [1, 2, 4, 7];
+
+fn inners() -> Vec<Backend> {
+    vec![Backend::amx(), Backend::avx(), Backend::reference()]
+}
+
+fn sharded_over(inner: Backend, shards: usize) -> Backend {
+    let topo = NumaTopology::modeled(2, 8);
+    let pool = Arc::new(WorkerPool::with_topology(shards, &topo));
+    Backend::sharded(inner, shards, topo, pool)
+}
+
+#[test]
+fn sharded_is_bit_exact_vs_unsharded_bf16() {
+    let mut g = XorShift::new(61);
+    let w = magnitude_prune(&g.normal_vec(ROWS * COLS, 1.0), 0.6);
+    let x = g.normal_vec(BATCH * ROWS, 1.0);
+    let sp = SparseTensor::pack_f32(&w, ROWS, COLS);
+    let dw = DenseWeights::pack_f32(&w, ROWS, COLS);
+    for inner in inners() {
+        let mut c = EventCounters::default();
+        let want_sparse = inner.sparse_gemm_bf16(&x, BATCH, &sp, &mut c);
+        let want_dense = inner.gemm_bf16(&x, BATCH, &dw, &mut c);
+        for shards in SHARD_COUNTS {
+            let b = sharded_over(inner.clone(), shards);
+            let mut cs = EventCounters::default();
+            assert_eq!(
+                b.sparse_gemm_bf16(&x, BATCH, &sp, &mut cs),
+                want_sparse,
+                "{} sparse, {shards} shards: not bit-exact",
+                b.name()
+            );
+            let mut cd = EventCounters::default();
+            assert_eq!(
+                b.gemm_bf16(&x, BATCH, &dw, &mut cd),
+                want_dense,
+                "{} dense, {shards} shards: not bit-exact",
+                b.name()
+            );
+            if inner.kind() != BackendKind::Reference {
+                assert!(cs.instructions() > 0, "sharded kernels tick merged events");
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_is_bit_exact_vs_unsharded_int8() {
+    let mut g = XorShift::new(62);
+    let w: Vec<i8> = (0..ROWS * COLS)
+        .map(|_| {
+            if g.next_f64() < 0.5 {
+                0
+            } else {
+                (g.below(200) as i32 - 100) as i8
+            }
+        })
+        .collect();
+    let x: Vec<i8> = (0..BATCH * ROWS).map(|_| (g.below(200) as i32 - 100) as i8).collect();
+    let sp: SparseTensor<i8> = SparseTensor::pack(&w, ROWS, COLS);
+    let dw: DenseWeights<i8> = DenseWeights::pack(&w, ROWS, COLS);
+    for inner in inners() {
+        let mut c = EventCounters::default();
+        let want_sparse = inner.sparse_gemm_int8(&x, BATCH, &sp, &mut c);
+        let want_dense = inner.gemm_int8(&x, BATCH, &dw, &mut c);
+        for shards in SHARD_COUNTS {
+            let b = sharded_over(inner.clone(), shards);
+            let mut cs = EventCounters::default();
+            assert_eq!(
+                b.sparse_gemm_int8(&x, BATCH, &sp, &mut cs),
+                want_sparse,
+                "{} sparse int8, {shards} shards",
+                b.name()
+            );
+            let mut cd = EventCounters::default();
+            assert_eq!(
+                b.gemm_int8(&x, BATCH, &dw, &mut cd),
+                want_dense,
+                "{} dense int8, {shards} shards",
+                b.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn pool_parallel_path_matches_sequential_trait_oracle() {
+    // The trait-default gemm_bf16_sharded runs shards sequentially — any
+    // backend is a bit-exact oracle for the pool-parallel override.
+    let mut g = XorShift::new(63);
+    let w = magnitude_prune(&g.normal_vec(ROWS * COLS, 1.0), 0.5);
+    let x = g.normal_vec(BATCH * ROWS, 1.0);
+    let topo = NumaTopology::modeled(2, 8);
+    let whole = PackedOperand::Sparse(SparseTensor::pack_f32(&w, ROWS, COLS));
+    for shards in SHARD_COUNTS {
+        let op = ShardedOperand::from_whole(&whole, ShardPlan::partition(COLS, shards, &topo));
+        for inner in inners() {
+            let mut c1 = EventCounters::default();
+            let want = inner.gemm_bf16_sharded(&x, BATCH, &op, &mut c1);
+            let b = sharded_over(inner.clone(), shards);
+            let mut c2 = EventCounters::default();
+            let got = b.gemm_bf16_sharded(&x, BATCH, &op, &mut c2);
+            assert_eq!(got, want, "{} {shards} shards: pool != sequential oracle", b.name());
+        }
+    }
+}
+
+#[test]
+fn sharded_capability_gating_follows_inner() {
+    let amx_only = CpuCaps::from_list("amx");
+    let avx_only = CpuCaps::from_list("avx512");
+    let none = CpuCaps::none();
+    let s_amx = sharded_over(Backend::amx(), 2);
+    let s_avx = sharded_over(Backend::avx(), 2);
+    assert!(s_amx.supported(&amx_only));
+    assert!(!s_amx.supported(&avx_only));
+    assert!(!s_amx.supported(&none));
+    assert!(s_avx.supported(&avx_only));
+    assert!(!s_avx.supported(&amx_only));
+    assert!(!s_avx.supported(&none));
+}
+
+#[test]
+fn registry_selects_sharding_exactly_at_the_cost_model_crossover() {
+    // Dual-socket machine, two shards (one per NUMA node): the big
+    // memory-bound decode linear goes sharded because both sockets'
+    // controllers stream at once; a tiny batch-1 layer stays unsharded
+    // because the per-shard stream ramp + barrier swamp it.
+    let topo = NumaTopology::modeled(2, 32);
+    let reg = BackendRegistry::with_caps(CpuCaps::all()).with_shards(2, topo);
+    let m = reg.machine();
+
+    let big = reg.select(GemmShape::new(1, 4096, 14336), 0.5, Dtype::Bf16);
+    assert_eq!(big.backend.kind(), BackendKind::Sharded, "{}", big.describe());
+    assert_eq!(big.backend.name(), "sharded-amx");
+    assert!(big.use_sparse, "sharding wraps the sparse kernel at batch 1");
+    // registry selection and the cost model agree on the winning number
+    let expect = sharded_sparse_gemm_cost(1, 4096, 14336, 0.5, 2, m);
+    assert!((big.predicted_s - expect).abs() < 1e-12);
+    assert!(
+        expect < sparse_gemm_cost(1, 4096, 14336, 0.5, m).time,
+        "crossover premise: sharding must beat the single-socket stream"
+    );
+
+    let small = reg.select(GemmShape::new(1, 128, 128), 0.0, Dtype::Bf16);
+    assert_ne!(
+        small.backend.kind(),
+        BackendKind::Sharded,
+        "tiny batch-1 layer must stay unsharded: {}",
+        small.describe()
+    );
+}
+
+#[test]
+fn with_shards_one_is_a_no_op_and_preserves_the_no_isa_invariant() {
+    let reg = BackendRegistry::with_caps(CpuCaps::all()).with_shards(1, NumaTopology::single(8));
+    assert!(
+        reg.backends().iter().all(|b| b.kind() != BackendKind::Sharded),
+        "shards=1 must not register sharded backends"
+    );
+    // no-ISA host still has exactly the reference oracle available
+    let none = BackendRegistry::with_caps(CpuCaps::none()).with_shards(2, NumaTopology::single(8));
+    assert_eq!(none.available().len(), 1);
+    assert_eq!(none.available()[0].kind(), BackendKind::Reference);
+}
+
+#[test]
+fn model_plan_shards_the_wide_layers_on_a_dual_socket_host() {
+    use sparamx::backend::BackendChoice;
+    use sparamx::models::plan::plan_model;
+    use sparamx::models::ModelConfig;
+    // Shape-level planning only (no weights, no packing): Llama 3 8B at
+    // batch 1 / 50% sparsity on a dual-socket registry must shard its
+    // widest linears while the model's selections stay cost-ranked.
+    let topo = NumaTopology::modeled(2, 32);
+    let reg = BackendRegistry::with_caps(CpuCaps::all()).with_shards(2, topo);
+    let mc = ModelConfig::llama3_8b();
+    let plan = plan_model(&reg, BackendChoice::Auto, &mc, 1, 0.5, Dtype::Bf16);
+    let up = plan.for_name("up_proj").expect("planned");
+    assert_eq!(
+        up.selection.backend.kind(),
+        BackendKind::Sharded,
+        "wide mlp linear must shard: {}",
+        plan.describe()
+    );
+}
