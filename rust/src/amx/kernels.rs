@@ -573,6 +573,93 @@ pub fn avx_sparse_gemm_bf16(
     out
 }
 
+/// Fused multi-row variant of [`avx_sparse_gemm_bf16`]: one pass over
+/// the compressed weight stream serves every batch row. Bitmap loads,
+/// popcount/prefix offsets, and `vpexpandw` expansions happen once per
+/// weight tile row instead of once per (batch row, tile row), so the
+/// weight side of the event stream amortizes over the batch while the
+/// input broadcasts still scale with it. Per output element the
+/// k-accumulation order is identical to the batch-1 kernel (`kc`
+/// ascending, `r` ascending), so the result is bit-exact vs. looping
+/// [`avx_sparse_gemm_bf16`] one row at a time.
+pub fn avx_sparse_gemm_bf16_batched(
+    input: &[f32],
+    batch: usize,
+    sp: &SparseTensor<Bf16>,
+    column_groups: usize,
+    ctr: &mut EventCounters,
+) -> Vec<f32> {
+    assert_eq!(input.len(), batch * sp.rows, "input shape");
+    let g = column_groups.max(1);
+    ctr.weight_unique_bytes += sp.bytes_sparse() as u64;
+    ctr.input_unique_bytes += (batch * sp.rows * 4) as u64;
+    set_tasks(ctr, (sp.col_blocks().div_ceil(g)) as u64);
+    let mut out = vec![0f32; batch * sp.cols];
+    let cbs = sp.col_blocks();
+    let mut cb0 = 0;
+    while cb0 < cbs {
+        let group = (cbs - cb0).min(g);
+        // one accumulator register per (batch row, group block)
+        let mut accs = vec![[0f32; 16]; batch * group];
+        for kc in 0..sp.k_chunks() {
+            let mut lanes_g = Vec::with_capacity(group);
+            let mut offs_g = Vec::with_capacity(group);
+            for gi in 0..group {
+                let tile = sp.tile_index(cb0 + gi, kc);
+                let lanes = avx::vmovdqu32(sp.tile_metadata(tile), ctr);
+                let pops = avx::vpopcntd(&lanes, ctr);
+                offs_g.push(avx::prefix_sum_u32x16(&pops, ctr));
+                lanes_g.push(lanes);
+            }
+            for r in 0..16 {
+                let k0 = kc * sp.order.k_per_tile + r * 2;
+                // expand each block's weight row once; every batch row
+                // consumes the same register
+                let mut wregs = Vec::with_capacity(group);
+                for gi in 0..group {
+                    let tile = sp.tile_index(cb0 + gi, kc);
+                    let (vals, _) = sp.tile_values(tile);
+                    let start = if r == 0 { 0 } else { offs_g[gi][r - 1] as usize };
+                    let (wreg, _) = avx::vpexpandw(lanes_g[gi][r], &vals[start..], ctr);
+                    wregs.push(wreg);
+                }
+                for b in 0..batch {
+                    let row = &input[b * sp.rows..(b + 1) * sp.rows];
+                    let x0 = if k0 < sp.rows { row[k0] } else { 0.0 };
+                    let x1 = if k0 + 1 < sp.rows { row[k0 + 1] } else { 0.0 };
+                    let mut pair = [Bf16::ZERO; 32];
+                    for n in 0..16 {
+                        pair[2 * n] = Bf16::from_f32(x0);
+                        pair[2 * n + 1] = Bf16::from_f32(x1);
+                    }
+                    ctr.broadcast += 1;
+                    ctr.input_bytes += 4;
+                    for gi in 0..group {
+                        avx::vdpbf16ps(&mut accs[b * group + gi], &wregs[gi], &pair, ctr);
+                        // batch × group independent accumulators sit
+                        // between reuses of the same register, so the
+                        // dependency-chain stall shrinks with the batch
+                        // (see analytic.rs)
+                        let lat = 4u64;
+                        ctr.fma_dep_stall += lat / ((group * batch) as u64).min(lat) - 1;
+                    }
+                }
+            }
+        }
+        for b in 0..batch {
+            for (gi, acc) in accs[b * group..(b + 1) * group].iter().enumerate() {
+                let n0 = (cb0 + gi) * 16;
+                let take = (sp.cols - n0).min(16);
+                let mut dst = vec![0f32; 16];
+                avx::store_f32x16(acc, &mut dst, ctr);
+                out[b * sp.cols + n0..b * sp.cols + n0 + take].copy_from_slice(&dst[..take]);
+            }
+        }
+        cb0 += group;
+    }
+    out
+}
+
 // ---------------------------------------------------------------------
 // §4.5 INT8 kernels
 // ---------------------------------------------------------------------

@@ -79,6 +79,54 @@ impl LinearBackend for AmxBackend {
         sparse_amx_gemm_int8(input, batch, sp, ctr)
     }
 
+    // The tile kernels already walk 32-row m-blocks and stream (or
+    // decompress) each weight tile once per *call*, so a fused
+    // activation block is a single plain call — that one call is what
+    // amortizes the weight stream over the batch, vs. the default's
+    // one-stream-per-row loop. Per output element the k-accumulation
+    // schedule is row-independent, so these are bit-exact vs. looping
+    // batch 1.
+
+    fn gemm_bf16_batched(
+        &self,
+        input: &[f32],
+        batch: usize,
+        w: &DenseWeights<Bf16>,
+        ctr: &mut EventCounters,
+    ) -> Vec<f32> {
+        dense_amx_gemm_bf16(input, batch, w, ctr)
+    }
+
+    fn sparse_gemm_bf16_batched(
+        &self,
+        input: &[f32],
+        batch: usize,
+        sp: &SparseTensor<Bf16>,
+        ctr: &mut EventCounters,
+    ) -> Vec<f32> {
+        sparse_amx_gemm_bf16(input, batch, sp, ctr)
+    }
+
+    fn gemm_int8_batched(
+        &self,
+        input: &[i8],
+        batch: usize,
+        w: &DenseWeights<i8>,
+        ctr: &mut EventCounters,
+    ) -> Vec<i32> {
+        dense_amx_gemm_int8(input, batch, w, ctr)
+    }
+
+    fn sparse_gemm_int8_batched(
+        &self,
+        input: &[i8],
+        batch: usize,
+        sp: &SparseTensor<i8>,
+        ctr: &mut EventCounters,
+    ) -> Vec<i32> {
+        sparse_amx_gemm_int8(input, batch, sp, ctr)
+    }
+
     fn predict(
         &self,
         shape: GemmShape,

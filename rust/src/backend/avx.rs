@@ -9,7 +9,7 @@
 //! [`crate::baselines::systems::linear_cost`] applies).
 
 use super::{BackendKind, CpuCaps, Dtype, GemmShape, LinearBackend, RefBackend};
-use crate::amx::kernels::{avx_sparse_gemm_bf16, DenseWeights};
+use crate::amx::kernels::{avx_sparse_gemm_bf16, avx_sparse_gemm_bf16_batched, DenseWeights};
 use crate::amx::EventCounters;
 use crate::perf::cost::avx_sparse_gemm_cost;
 use crate::perf::{KernelCost, Machine};
@@ -90,7 +90,7 @@ impl LinearBackend for AvxBackend {
         w: &DenseWeights<i8>,
         ctr: &mut EventCounters,
     ) -> Vec<i32> {
-        tick_int8(ctr, batch, w.rows, w.cols, w.rows * w.cols, self.column_groups);
+        tick_int8(ctr, batch, w.rows, w.cols, w.rows * w.cols, self.column_groups, batch);
         RefBackend::matmul_i8(input, batch, &w.to_dense(), w.rows, w.cols)
     }
 
@@ -101,7 +101,52 @@ impl LinearBackend for AvxBackend {
         sp: &SparseTensor<i8>,
         ctr: &mut EventCounters,
     ) -> Vec<i32> {
-        tick_int8(ctr, batch, sp.rows, sp.cols, sp.nnz(), self.column_groups);
+        tick_int8(ctr, batch, sp.rows, sp.cols, sp.nnz(), self.column_groups, batch);
+        RefBackend::matmul_i8(input, batch, &sp.to_dense(), sp.rows, sp.cols)
+    }
+
+    fn gemm_bf16_batched(
+        &self,
+        input: &[f32],
+        batch: usize,
+        w: &DenseWeights<Bf16>,
+        ctr: &mut EventCounters,
+    ) -> Vec<f32> {
+        // one layout conversion + one multi-row kernel pass, vs. the
+        // default's per-row convert-and-stream loop
+        let sp = SparseTensor::pack_dense(&w.to_dense(), w.rows, w.cols);
+        avx_sparse_gemm_bf16_batched(input, batch, &sp, self.column_groups, ctr)
+    }
+
+    fn sparse_gemm_bf16_batched(
+        &self,
+        input: &[f32],
+        batch: usize,
+        sp: &SparseTensor<Bf16>,
+        ctr: &mut EventCounters,
+    ) -> Vec<f32> {
+        avx_sparse_gemm_bf16_batched(input, batch, sp, self.column_groups, ctr)
+    }
+
+    fn gemm_int8_batched(
+        &self,
+        input: &[i8],
+        batch: usize,
+        w: &DenseWeights<i8>,
+        ctr: &mut EventCounters,
+    ) -> Vec<i32> {
+        tick_int8(ctr, batch, w.rows, w.cols, w.rows * w.cols, self.column_groups, 1);
+        RefBackend::matmul_i8(input, batch, &w.to_dense(), w.rows, w.cols)
+    }
+
+    fn sparse_gemm_int8_batched(
+        &self,
+        input: &[i8],
+        batch: usize,
+        sp: &SparseTensor<i8>,
+        ctr: &mut EventCounters,
+    ) -> Vec<i32> {
+        tick_int8(ctr, batch, sp.rows, sp.cols, sp.nnz(), self.column_groups, 1);
         RefBackend::matmul_i8(input, batch, &sp.to_dense(), sp.rows, sp.cols)
     }
 
@@ -132,7 +177,10 @@ pub(crate) fn int8_time(cost: &KernelCost) -> f64 {
 }
 
 /// Coarse event ticks for the INT8-on-AVX path (`vpdpbusd`-class FMA:
-/// 64 MACs per op; bitmap + values stream once per batch row).
+/// 64 MACs per op). `stream_passes` is how many times the bitmap +
+/// values stream is walked: once per batch row on the per-slot entry
+/// points, once total on the batched ones (the fused block amortizes
+/// the weight stream, which is the whole point of batching).
 fn tick_int8(
     ctr: &mut EventCounters,
     batch: usize,
@@ -140,6 +188,7 @@ fn tick_int8(
     cols: usize,
     nnz: usize,
     groups: usize,
+    stream_passes: usize,
 ) {
     let col_blocks = cols.div_ceil(16);
     // INT8 bitmap: one 64-bit word per tile row, 16 rows per tile →
@@ -148,7 +197,7 @@ fn tick_int8(
     ctr.input_unique_bytes += (batch * rows) as u64;
     ctr.input_bytes += (batch * rows) as u64;
     ctr.weight_unique_bytes += (bitmap_bytes + nnz) as u64;
-    ctr.weight_stream_bytes += ((bitmap_bytes + nnz) * batch) as u64;
+    ctr.weight_stream_bytes += ((bitmap_bytes + nnz) * stream_passes) as u64;
     ctr.avx_fma += ((batch * rows * cols).div_ceil(64)) as u64;
     ctr.output_bytes += (batch * cols * 4) as u64;
     let tasks = (col_blocks.div_ceil(groups.max(1))) as u64;

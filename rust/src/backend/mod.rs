@@ -200,6 +200,75 @@ pub trait LinearBackend: Send + Sync {
         ctr: &mut EventCounters,
     ) -> Vec<i32>;
 
+    /// Dense BF16 GEMM over a fused activation block (`batch` decode
+    /// rows gathered into one call). The default loops the batch-1 path
+    /// row by row — bit-exact by construction, but it re-streams the
+    /// weights once per row. Kernel backends override this to stream
+    /// each packed weight block once across all rows; every override
+    /// must match this default bit-for-bit.
+    fn gemm_bf16_batched(
+        &self,
+        input: &[f32],
+        batch: usize,
+        w: &DenseWeights<Bf16>,
+        ctr: &mut EventCounters,
+    ) -> Vec<f32> {
+        let mut out = Vec::with_capacity(batch * w.cols);
+        for b in 0..batch {
+            out.extend(self.gemm_bf16(&input[b * w.rows..(b + 1) * w.rows], 1, w, ctr));
+        }
+        out
+    }
+
+    /// Sparse BF16 GEMM over a fused activation block. Same contract as
+    /// [`LinearBackend::gemm_bf16_batched`]: the default loops batch-1
+    /// calls (the bit-exact oracle), overrides amortize the compressed
+    /// weight stream over the rows.
+    fn sparse_gemm_bf16_batched(
+        &self,
+        input: &[f32],
+        batch: usize,
+        sp: &SparseTensor<Bf16>,
+        ctr: &mut EventCounters,
+    ) -> Vec<f32> {
+        let mut out = Vec::with_capacity(batch * sp.cols);
+        for b in 0..batch {
+            out.extend(self.sparse_gemm_bf16(&input[b * sp.rows..(b + 1) * sp.rows], 1, sp, ctr));
+        }
+        out
+    }
+
+    /// Dense INT8 GEMM over a fused activation block (see
+    /// [`LinearBackend::gemm_bf16_batched`] for the contract).
+    fn gemm_int8_batched(
+        &self,
+        input: &[i8],
+        batch: usize,
+        w: &DenseWeights<i8>,
+        ctr: &mut EventCounters,
+    ) -> Vec<i32> {
+        let mut out = Vec::with_capacity(batch * w.cols);
+        for b in 0..batch {
+            out.extend(self.gemm_int8(&input[b * w.rows..(b + 1) * w.rows], 1, w, ctr));
+        }
+        out
+    }
+
+    /// Sparse INT8 GEMM over a fused activation block.
+    fn sparse_gemm_int8_batched(
+        &self,
+        input: &[i8],
+        batch: usize,
+        sp: &SparseTensor<i8>,
+        ctr: &mut EventCounters,
+    ) -> Vec<i32> {
+        let mut out = Vec::with_capacity(batch * sp.cols);
+        for b in 0..batch {
+            out.extend(self.sparse_gemm_int8(&input[b * sp.rows..(b + 1) * sp.rows], 1, sp, ctr));
+        }
+        out
+    }
+
     /// Modeled wall seconds for one GEMM of `shape` at `sparsity` on
     /// machine `m`, running this backend's dense (`sparse == false`) or
     /// sparse kernel class. Drives [`BackendRegistry::select`]; must
@@ -243,6 +312,32 @@ pub trait LinearBackend: Send + Sync {
             .map(|p| match p {
                 PackedOperand::Sparse(sp) => self.sparse_gemm_bf16(input, batch, sp, ctr),
                 PackedOperand::Dense(dw) => self.gemm_bf16(input, batch, dw, ctr),
+                PackedOperand::Sharded(_) => unreachable!("nested sharded operand"),
+            })
+            .collect();
+        crate::shard::merge_col_outputs(&parts, &op.plan, batch, op.cols)
+    }
+
+    /// BF16 GEMM over a fused activation block on a pre-sharded
+    /// operand. The default runs each column shard's *batched* kernel
+    /// sequentially and merges in shard order, so fused GEMMs stay
+    /// bit-exact under sharding (column partitioning only — the k
+    /// dimension is never split). [`crate::shard::ShardedBackend`]
+    /// overrides this to scatter the batched per-shard calls across the
+    /// worker pool.
+    fn gemm_bf16_sharded_batched(
+        &self,
+        input: &[f32],
+        batch: usize,
+        op: &crate::shard::ShardedOperand,
+        ctr: &mut EventCounters,
+    ) -> Vec<f32> {
+        let parts: Vec<Vec<f32>> = op
+            .parts
+            .iter()
+            .map(|p| match p {
+                PackedOperand::Sparse(sp) => self.sparse_gemm_bf16_batched(input, batch, sp, ctr),
+                PackedOperand::Dense(dw) => self.gemm_bf16_batched(input, batch, dw, ctr),
                 PackedOperand::Sharded(_) => unreachable!("nested sharded operand"),
             })
             .collect();
@@ -360,6 +455,46 @@ impl Backend {
         self.0.sparse_gemm_int8(input, batch, sp, ctr)
     }
 
+    pub fn gemm_bf16_batched(
+        &self,
+        input: &[f32],
+        batch: usize,
+        w: &DenseWeights<Bf16>,
+        ctr: &mut EventCounters,
+    ) -> Vec<f32> {
+        self.0.gemm_bf16_batched(input, batch, w, ctr)
+    }
+
+    pub fn sparse_gemm_bf16_batched(
+        &self,
+        input: &[f32],
+        batch: usize,
+        sp: &SparseTensor<Bf16>,
+        ctr: &mut EventCounters,
+    ) -> Vec<f32> {
+        self.0.sparse_gemm_bf16_batched(input, batch, sp, ctr)
+    }
+
+    pub fn gemm_int8_batched(
+        &self,
+        input: &[i8],
+        batch: usize,
+        w: &DenseWeights<i8>,
+        ctr: &mut EventCounters,
+    ) -> Vec<i32> {
+        self.0.gemm_int8_batched(input, batch, w, ctr)
+    }
+
+    pub fn sparse_gemm_int8_batched(
+        &self,
+        input: &[i8],
+        batch: usize,
+        sp: &SparseTensor<i8>,
+        ctr: &mut EventCounters,
+    ) -> Vec<i32> {
+        self.0.sparse_gemm_int8_batched(input, batch, sp, ctr)
+    }
+
     pub fn predict(
         &self,
         shape: GemmShape,
@@ -387,6 +522,16 @@ impl Backend {
         ctr: &mut EventCounters,
     ) -> Vec<f32> {
         self.0.gemm_bf16_sharded(input, batch, op, ctr)
+    }
+
+    pub fn gemm_bf16_sharded_batched(
+        &self,
+        input: &[f32],
+        batch: usize,
+        op: &crate::shard::ShardedOperand,
+        ctr: &mut EventCounters,
+    ) -> Vec<f32> {
+        self.0.gemm_bf16_sharded_batched(input, batch, op, ctr)
     }
 
     pub fn shard_stats(&self) -> Option<crate::shard::ShardStatsSnapshot> {
@@ -463,6 +608,23 @@ impl PackedOperand {
             PackedOperand::Sparse(sp) => backend.sparse_gemm_bf16(x, batch, sp, ctr),
             PackedOperand::Dense(dw) => backend.gemm_bf16(x, batch, dw, ctr),
             PackedOperand::Sharded(so) => backend.gemm_bf16_sharded(x, batch, so, ctr),
+        }
+    }
+
+    /// Dispatch one fused (multi-row) BF16 GEMM on the packed operand:
+    /// the batched kernel entry points, which stream each weight block
+    /// once across all `batch` rows.
+    pub fn gemm_bf16_batched(
+        &self,
+        backend: &Backend,
+        x: &[f32],
+        batch: usize,
+        ctr: &mut EventCounters,
+    ) -> Vec<f32> {
+        match self {
+            PackedOperand::Sparse(sp) => backend.sparse_gemm_bf16_batched(x, batch, sp, ctr),
+            PackedOperand::Dense(dw) => backend.gemm_bf16_batched(x, batch, dw, ctr),
+            PackedOperand::Sharded(so) => backend.gemm_bf16_sharded_batched(x, batch, so, ctr),
         }
     }
 }

@@ -107,6 +107,11 @@ pub struct RuntimeConfig {
     /// (`DecodePlan::predicted_step_s`) exceeds the budget are rejected
     /// at admission. `0` disables the check.
     pub latency_budget_ms: f64,
+    /// Fused decode batch directive (`--max-batch-fuse` / config
+    /// `"max_batch_fuse"`): `auto` compiles the fused regime at
+    /// `max_batch`, a number caps it; 1 disables fusion. The
+    /// `SPARAMX_BATCH_FUSE` env var overrides at resolve time.
+    pub max_batch_fuse: crate::models::BatchFuseChoice,
 }
 
 impl Default for RuntimeConfig {
@@ -127,6 +132,7 @@ impl Default for RuntimeConfig {
             max_ctx: 256,
             shards: crate::shard::ShardChoice::Auto,
             latency_budget_ms: 0.0,
+            max_batch_fuse: crate::models::BatchFuseChoice::Auto,
         }
     }
 }
@@ -193,6 +199,15 @@ impl RuntimeConfig {
                 "latency_budget_ms" => {
                     cfg.latency_budget_ms =
                         val.as_f64().ok_or("latency_budget_ms: number")?
+                }
+                "max_batch_fuse" => {
+                    cfg.max_batch_fuse = if let Some(s) = val.as_str() {
+                        s.parse::<crate::models::BatchFuseChoice>()?
+                    } else if let Some(n) = val.as_usize() {
+                        crate::models::BatchFuseChoice::Fixed(n)
+                    } else {
+                        return Err("max_batch_fuse: \"auto\" or uint".into());
+                    }
                 }
                 other => return Err(format!("unknown config field '{other}'")),
             }
@@ -316,6 +331,19 @@ mod tests {
         let cfg = RuntimeConfig::from_json(r#"{"latency_budget_ms": 12.5}"#).unwrap();
         assert_eq!(cfg.latency_budget_ms, 12.5);
         assert!(RuntimeConfig::from_json(r#"{"latency_budget_ms": -1}"#).is_err());
+    }
+
+    #[test]
+    fn parses_max_batch_fuse() {
+        use crate::models::BatchFuseChoice;
+        assert_eq!(RuntimeConfig::default().max_batch_fuse, BatchFuseChoice::Auto);
+        let cfg = RuntimeConfig::from_json(r#"{"max_batch_fuse": "auto"}"#).unwrap();
+        assert_eq!(cfg.max_batch_fuse, BatchFuseChoice::Auto);
+        let cfg = RuntimeConfig::from_json(r#"{"max_batch_fuse": 4}"#).unwrap();
+        assert_eq!(cfg.max_batch_fuse, BatchFuseChoice::Fixed(4));
+        let cfg = RuntimeConfig::from_json(r#"{"max_batch_fuse": "1"}"#).unwrap();
+        assert_eq!(cfg.max_batch_fuse, BatchFuseChoice::Fixed(1));
+        assert!(RuntimeConfig::from_json(r#"{"max_batch_fuse": "many"}"#).is_err());
     }
 
     #[test]

@@ -30,7 +30,7 @@ use crate::backend::{Backend, BackendRegistry, Dtype, GemmShape, Selection};
 use crate::cfg::RuntimeConfig;
 use crate::kvcache::cache::KvCache;
 use crate::log_info;
-use crate::models::plan::{DecodePlan, NativeModel};
+use crate::models::plan::{DecodePlan, NativeModel, RegimeBatches};
 use crate::models::tinyforward::TinyModel;
 use crate::runtime::artifact::Bundle;
 use crate::runtime::executor::{lit_f32, lit_i32, to_f32, Executable, Literal, Runtime};
@@ -217,7 +217,21 @@ impl Engine {
         let topo = crate::shard::NumaTopology::detect();
         let shards = cfg.shards.resolve(&topo);
         let registry = BackendRegistry::probe().with_shards(shards, topo);
-        let native = NativeModel::new(&registry, cfg.backend, model, cfg.weight_sparsity);
+        // dual-regime plan: batch-1 decode, fused decode at the resolved
+        // fuse batch, and prefill at the prompt geometry — all selections
+        // fixed here, never in the token loop
+        let fuse = cfg.max_batch_fuse.resolve(cfg.max_batch);
+        let batches = RegimeBatches {
+            decode_fused: fuse,
+            prefill: geo.prefill_len,
+        };
+        let native = NativeModel::with_regimes(
+            &registry,
+            cfg.backend,
+            model,
+            cfg.weight_sparsity,
+            batches,
+        );
         let selection = native.plan.lm_head.selection.clone();
         log_info!(
             "engine native: {} (caps {}, {} NUMA node(s), shards={}, \
@@ -242,10 +256,16 @@ impl Engine {
             };
             for l in &native.plan.layers {
                 for p in [&l.wq, &l.wk, &l.wv, &l.wo, &l.wgate, &l.wup, &l.wdown] {
+                    // any regime's selection may route through a sharded
+                    // backend; all of them drain into the metrics
                     add(&p.selection.backend);
+                    add(&p.fused.backend);
+                    add(&p.prefill.backend);
                 }
             }
             add(&native.plan.lm_head.selection.backend);
+            add(&native.plan.lm_head.fused.backend);
+            add(&native.plan.lm_head.prefill.backend);
             add(&native.plan.attention);
         }
         Ok(Engine {
@@ -514,17 +534,58 @@ impl Engine {
         let (next_tokens, dt) = match &mut self.path {
             EnginePath::Native(np) => {
                 let t0 = Instant::now();
-                let mut next = Vec::with_capacity(active.len());
-                for &i in &active {
-                    let slot = &self.slots[i];
-                    let cache = np.caches[i].as_mut().expect("active slot has a cache");
-                    let logits =
-                        np.model.decode_step(slot.token, slot.pos, cache, &mut np.ctr);
-                    next.push((i, argmax(&logits) as u8));
-                }
+                // regime pick from live slot count: multi-slot steps fuse
+                // into one batched GEMM per projection (unless fusion is
+                // disabled); single-slot steps run the batch-1 plan. The
+                // selections themselves were fixed at plan compile.
+                let fused = active.len() > 1 && np.model.plan.fused_batch > 1;
+                self.metrics.record_decode_regime(active.len(), fused);
+                let next: Vec<(usize, u8)> = if fused {
+                    let tokens: Vec<u8> =
+                        active.iter().map(|&i| self.slots[i].token).collect();
+                    let positions: Vec<usize> =
+                        active.iter().map(|&i| self.slots[i].pos).collect();
+                    // `active` is ascending, so iterating caches in index
+                    // order keeps row b ↔ slot active[b]
+                    let mut cache_refs: Vec<&mut KvCache> = np
+                        .caches
+                        .iter_mut()
+                        .enumerate()
+                        .filter_map(|(i, c)| {
+                            active
+                                .contains(&i)
+                                .then(|| c.as_mut().expect("active slot has a cache"))
+                        })
+                        .collect();
+                    let logits = np.model.decode_step_batched(
+                        &tokens,
+                        &positions,
+                        &mut cache_refs,
+                        &mut np.ctr,
+                    );
+                    active
+                        .iter()
+                        .zip(logits.iter())
+                        .map(|(&i, l)| (i, argmax(l) as u8))
+                        .collect()
+                } else {
+                    let mut next = Vec::with_capacity(active.len());
+                    for &i in &active {
+                        let slot = &self.slots[i];
+                        let cache = np.caches[i].as_mut().expect("active slot has a cache");
+                        let logits =
+                            np.model.decode_step(slot.token, slot.pos, cache, &mut np.ctr);
+                        next.push((i, argmax(&logits) as u8));
+                    }
+                    next
+                };
                 (next, t0.elapsed().as_secs_f64())
             }
             EnginePath::Pjrt(pj) => {
+                // the AOT artifact always runs the full batch; occupancy
+                // still tracks how many slots carried live requests
+                self.metrics
+                    .record_decode_regime(active.len(), active.len() > 1);
                 let g = self.geo;
                 let b = g.decode_batch;
                 let mut token = vec![0i32; b];

@@ -39,6 +39,36 @@ impl StepHistogram {
     }
 }
 
+/// Upper bounds (active slots) of the fixed batch-occupancy buckets;
+/// one extra overflow bucket catches anything wider.
+pub const OCCUPANCY_BUCKET_BOUNDS: [u64; 7] = [1, 2, 4, 8, 16, 32, 64];
+
+/// Lock-free fixed-bucket histogram of active-slot count per decode
+/// step — how full the fused activation block actually runs.
+#[derive(Default)]
+pub struct OccupancyHistogram {
+    counts: [AtomicU64; OCCUPANCY_BUCKET_BOUNDS.len() + 1],
+}
+
+impl OccupancyHistogram {
+    pub fn record(&self, active: usize) {
+        let idx = OCCUPANCY_BUCKET_BOUNDS
+            .iter()
+            .position(|&b| active as u64 <= b)
+            .unwrap_or(OCCUPANCY_BUCKET_BOUNDS.len());
+        self.counts[idx].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Snapshot of the bucket counts (last entry is the overflow bucket).
+    pub fn counts(&self) -> Vec<u64> {
+        self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+}
+
 /// Engine-wide metrics registry (thread-safe).
 #[derive(Default)]
 pub struct Metrics {
@@ -52,6 +82,12 @@ pub struct Metrics {
     step_times_s: Mutex<Vec<f64>>,
     /// Fixed-bucket distribution of per-decode-step latency.
     pub step_hist: StepHistogram,
+    /// Fixed-bucket distribution of active slots per decode step.
+    pub batch_occupancy: OccupancyHistogram,
+    /// Decode steps served one slot at a time (batch-1 regime).
+    pub steps_decode_b1: AtomicU64,
+    /// Decode steps served through the fused multi-slot regime.
+    pub steps_decode_fused: AtomicU64,
     /// Steps served, keyed by `"<engine path>/<backend>"` (e.g.
     /// `native/amx`, `pjrt/xla`) — which path actually produced tokens.
     steps_by_path: Mutex<BTreeMap<String, u64>>,
@@ -91,6 +127,17 @@ impl Metrics {
     /// Snapshot of steps served per `"path/backend"` key.
     pub fn steps_by_path(&self) -> BTreeMap<String, u64> {
         self.steps_by_path.lock().expect("metrics lock").clone()
+    }
+
+    /// Record which decode regime served a step and how many slots it
+    /// gathered: the occupancy histogram plus the per-regime counter.
+    pub fn record_decode_regime(&self, active: usize, fused: bool) {
+        self.batch_occupancy.record(active);
+        if fused {
+            self.steps_decode_fused.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.steps_decode_b1.fetch_add(1, Ordering::Relaxed);
+        }
     }
 
     /// Fold one drained [`ShardStatsSnapshot`] into the gauges: epochs
@@ -220,6 +267,42 @@ impl Metrics {
             ("step_hist_counts", Json::Arr(hist_counts)),
             ("steps_by_path", by_path),
             (
+                "steps_by_regime",
+                Json::obj(vec![
+                    (
+                        "decode_b1",
+                        Json::Num(self.steps_decode_b1.load(Ordering::Relaxed) as f64),
+                    ),
+                    (
+                        "decode_fused",
+                        Json::Num(self.steps_decode_fused.load(Ordering::Relaxed) as f64),
+                    ),
+                    (
+                        "prefill",
+                        Json::Num(self.prefills.load(Ordering::Relaxed) as f64),
+                    ),
+                ]),
+            ),
+            (
+                "batch_occupancy_bounds",
+                Json::Arr(
+                    OCCUPANCY_BUCKET_BOUNDS
+                        .iter()
+                        .map(|&b| Json::Num(b as f64))
+                        .collect(),
+                ),
+            ),
+            (
+                "batch_occupancy_counts",
+                Json::Arr(
+                    self.batch_occupancy
+                        .counts()
+                        .into_iter()
+                        .map(|c| Json::Num(c as f64))
+                        .collect(),
+                ),
+            ),
+            (
                 "shard_epochs",
                 Json::Num(self.shard_epochs.load(Ordering::Relaxed) as f64),
             ),
@@ -274,6 +357,33 @@ mod tests {
         assert_eq!(c[4], 1, "{c:?}");
         assert_eq!(*c.last().unwrap(), 1);
         assert_eq!(h.total(), 3);
+    }
+
+    #[test]
+    fn regime_counters_and_occupancy_histogram() {
+        let m = Metrics::new();
+        m.record_decode_regime(1, false);
+        m.record_decode_regime(3, true);
+        m.record_decode_regime(5, true);
+        m.record_decode_regime(200, true);
+        assert_eq!(m.steps_decode_b1.load(Ordering::Relaxed), 1);
+        assert_eq!(m.steps_decode_fused.load(Ordering::Relaxed), 3);
+        let c = m.batch_occupancy.counts();
+        assert_eq!(c.len(), OCCUPANCY_BUCKET_BOUNDS.len() + 1);
+        assert_eq!(c[0], 1, "{c:?}"); // 1 slot → first bucket
+        assert_eq!(c[2], 1, "{c:?}"); // 3 slots → the ≤4 bucket
+        assert_eq!(c[3], 1, "{c:?}"); // 5 slots → the ≤8 bucket
+        assert_eq!(*c.last().unwrap(), 1, "overflow bucket");
+        assert_eq!(m.batch_occupancy.total(), 4);
+        let v = Json::parse(&m.stats_json("native").to_string()).unwrap();
+        let reg = v.get("steps_by_regime").unwrap();
+        assert_eq!(reg.get("decode_b1").unwrap().as_usize(), Some(1));
+        assert_eq!(reg.get("decode_fused").unwrap().as_usize(), Some(3));
+        assert_eq!(reg.get("prefill").unwrap().as_usize(), Some(0));
+        let oc = v.get("batch_occupancy_counts").unwrap().as_arr().unwrap();
+        assert_eq!(oc.len(), OCCUPANCY_BUCKET_BOUNDS.len() + 1);
+        let total: f64 = oc.iter().filter_map(|c| c.as_f64()).sum();
+        assert_eq!(total as u64, 4);
     }
 
     #[test]

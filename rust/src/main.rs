@@ -15,7 +15,7 @@ use sparamx::coordinator::batcher::{AdmissionQueue, LatencyBudget};
 use sparamx::coordinator::engine::Engine;
 use sparamx::coordinator::server::ServerCtx;
 use sparamx::coordinator::{request, server};
-use sparamx::models::plan::plan_model;
+use sparamx::models::plan::plan_model_regimes;
 use sparamx::models::tinyforward::{KvTreatment, TinyModel};
 use sparamx::models::ModelConfig;
 use sparamx::perf::Machine;
@@ -34,11 +34,12 @@ fn main() {
         Some("info") => cmd_info(&args),
         _ => {
             eprintln!(
-                "sparamx {} — usage:\n  sparamx serve    [--artifacts DIR] [--port P] [--sparsity S] [--backend {b}] [--engine {e}] [--shards {s}] [--latency-budget-ms MS]\n  sparamx generate [--artifacts DIR] [--max-tokens N] [--backend {b}] [--engine {e}] [--shards {s}] PROMPT...\n  sparamx eval     [--artifacts DIR] [--sparsity S] [--k-sparsity S] [--v-sparsity S] [--int8-kv] [--backend {b}]\n  sparamx info     [--artifacts DIR] [--cores N] [--model NAME] [--sparsity S] [--shards {s}]",
+                "sparamx {} — usage:\n  sparamx serve    [--artifacts DIR] [--port P] [--sparsity S] [--backend {b}] [--engine {e}] [--shards {s}] [--max-batch-fuse {f}] [--latency-budget-ms MS]\n  sparamx generate [--artifacts DIR] [--max-tokens N] [--backend {b}] [--engine {e}] [--shards {s}] [--max-batch-fuse {f}] PROMPT...\n  sparamx eval     [--artifacts DIR] [--sparsity S] [--k-sparsity S] [--v-sparsity S] [--int8-kv] [--backend {b}]\n  sparamx info     [--artifacts DIR] [--cores N] [--model NAME] [--sparsity S] [--shards {s}] [--max-batch-fuse {f}]",
                 sparamx::VERSION,
                 b = BackendChoice::HELP,
                 e = EngineChoice::HELP,
-                s = sparamx::shard::ShardChoice::HELP
+                s = sparamx::shard::ShardChoice::HELP,
+                f = sparamx::models::BatchFuseChoice::HELP
             );
             2
         }
@@ -64,6 +65,9 @@ fn config_from(args: &Args) -> RuntimeConfig {
     }
     if args.options.contains_key("shards") {
         cfg.shards = args.shards();
+    }
+    if args.options.contains_key("max-batch-fuse") {
+        cfg.max_batch_fuse = args.max_batch_fuse();
     }
     cfg.latency_budget_ms = args.get_parse("latency-budget-ms", cfg.latency_budget_ms);
     cfg.validate().expect("config");
@@ -249,20 +253,31 @@ fn cmd_info(args: &Args) -> i32 {
         registry.caps().describe(),
         names.join(", ")
     );
-    // decode-plan preview: the per-shape selections `plan_model` would
-    // cache for a named config at decode batch 1
+    // decode-plan preview: the per-shape selections each serving regime
+    // would cache for a named config — the Fig 12 crossover table
     let model_name = args.get("model", "tiny");
     match ModelConfig::by_name(&model_name) {
         Some(mc) => {
-            let plan = plan_model(
+            let fuse = cfg.max_batch_fuse.resolve(cfg.max_batch);
+            let batches = sparamx::models::RegimeBatches {
+                decode_fused: fuse,
+                prefill: cfg.max_ctx,
+            };
+            let rp = plan_model_regimes(
                 &registry,
                 cfg.backend,
                 &mc,
-                1,
+                batches,
                 cfg.weight_sparsity,
                 Dtype::Bf16,
             );
-            println!("decode plan [{}]: {}", mc.name, plan.describe());
+            println!(
+                "decode plan [{}]: {} ({} selections across 3 regimes)",
+                mc.name,
+                rp.decode_b1.describe(),
+                rp.selections_computed
+            );
+            println!("regime table (b1 / fused / prefill):\n{}", rp.regime_table());
         }
         None => println!("decode plan: unknown model '{model_name}'"),
     }

@@ -7,4 +7,7 @@ pub mod weights;
 pub mod tinyforward;
 
 pub use llama::{LinearShape, ModelConfig};
-pub use plan::{plan_model, DecodePlan, ModelPlan, NativeModel};
+pub use plan::{
+    plan_model, plan_model_regimes, BatchFuseChoice, DecodePlan, ModelPlan, NativeModel,
+    RegimeBatches,
+};

@@ -39,6 +39,7 @@ use crate::models::tinyforward::{
     add_inplace, rmsnorm_rows, rope_rows_from, silu, treat, TinyModel,
 };
 use std::collections::HashMap;
+use std::sync::Arc;
 
 /// One planned linear shape: the shape plus the load-time selection
 /// that every layer instance of this shape shares.
@@ -106,14 +107,47 @@ pub fn plan_model(
     sparsity: f64,
     dtype: Dtype,
 ) -> ModelPlan {
-    let mut cache: HashMap<(usize, usize), Selection> = HashMap::new();
+    let mut cache: HashMap<(usize, usize, usize), Selection> = HashMap::new();
     let mut computed = 0usize;
+    plan_model_cached(
+        registry, choice, model, batch, sparsity, dtype, &mut cache, &mut computed,
+    )
+}
+
+/// [`plan_model`] body over a caller-owned `(shape, batch)` selection
+/// cache, so multi-regime compiles share resolutions between regimes
+/// whose batches coincide. `computed` ticks once per genuine registry
+/// consultation; the returned plan's `selections_computed` counts the
+/// distinct shapes in *this* plan (equal to the consultations when the
+/// cache starts empty).
+#[allow(clippy::too_many_arguments)]
+fn plan_model_cached(
+    registry: &BackendRegistry,
+    choice: BackendChoice,
+    model: &ModelConfig,
+    batch: usize,
+    sparsity: f64,
+    dtype: Dtype,
+    cache: &mut HashMap<(usize, usize, usize), Selection>,
+    computed: &mut usize,
+) -> ModelPlan {
+    let mut local: HashMap<(usize, usize), Selection> = HashMap::new();
     let mut resolve = |shape: &LinearShape| -> Selection {
-        cache
+        local
             .entry((shape.in_features, shape.out_features))
             .or_insert_with(|| {
-                computed += 1;
-                registry.resolve(choice, GemmShape::for_linear(shape, batch), sparsity, dtype)
+                cache
+                    .entry((shape.in_features, shape.out_features, batch))
+                    .or_insert_with(|| {
+                        *computed += 1;
+                        registry.resolve(
+                            choice,
+                            GemmShape::for_linear(shape, batch),
+                            sparsity,
+                            dtype,
+                        )
+                    })
+                    .clone()
             })
             .clone()
     };
@@ -135,50 +169,318 @@ pub fn plan_model(
         linears_planned: model.layers * per_layer.len() + 1,
         per_layer,
         lm_head,
-        selections_computed: computed,
+        selections_computed: local.len(),
     }
 }
 
-/// One serving linear: pre-packed operand + the selection that chose
-/// its kernel. `run` is the only thing the token loop calls.
+/// The three serving regimes a compiled plan carries selections for.
+/// The regime is picked from live engine state each step (slot count,
+/// prefill vs. decode); the *selection per regime* is fixed at compile.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Regime {
+    /// Per-slot decode: one token, batch 1.
+    DecodeB1,
+    /// Fused decode: all active slots gathered into one activation
+    /// block, one batched GEMM per projection.
+    DecodeFused,
+    /// Prompt prefill: one multi-row pass over the prompt.
+    Prefill,
+}
+
+/// Fused decode batch the default plan compiles for (the runtime
+/// config's default `max_batch`).
+pub const DEFAULT_FUSED_BATCH: usize = 8;
+
+/// Representative prompt length the default prefill regime prices.
+pub const DEFAULT_PREFILL_BATCH: usize = 32;
+
+/// The GEMM batch each regime compiles its selections at. Batch-1
+/// decode is always 1; the other two are deployment knobs
+/// (`--max-batch-fuse`, prompt-length geometry).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RegimeBatches {
+    pub decode_fused: usize,
+    pub prefill: usize,
+}
+
+impl Default for RegimeBatches {
+    fn default() -> RegimeBatches {
+        RegimeBatches {
+            decode_fused: DEFAULT_FUSED_BATCH,
+            prefill: DEFAULT_PREFILL_BATCH,
+        }
+    }
+}
+
+impl RegimeBatches {
+    /// The GEMM batch `r`'s selections are resolved at.
+    pub fn batch_of(&self, r: Regime) -> usize {
+        match r {
+            Regime::DecodeB1 => 1,
+            Regime::DecodeFused => self.decode_fused.max(1),
+            Regime::Prefill => self.prefill.max(1),
+        }
+    }
+}
+
+/// Environment override for the fused decode batch, mirroring
+/// `SPARAMX_SHARDS` (useful in CI, where the matrix sweeps fusion on
+/// and off without touching configs).
+pub const BATCH_FUSE_ENV: &str = "SPARAMX_BATCH_FUSE";
+
+/// The `--max-batch-fuse {auto,N}` knob: `Auto` fuses up to the
+/// engine's `max_batch`; `Fixed(n)` caps the fused-regime batch at `n`
+/// (1 disables fusion — every decode step then runs the batch-1
+/// regime). The `SPARAMX_BATCH_FUSE` env var overrides at resolve time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatchFuseChoice {
+    Auto,
+    Fixed(usize),
+}
+
+impl BatchFuseChoice {
+    pub const HELP: &'static str = "auto|N (fused decode batch cap, 1 disables fusion)";
+
+    /// Resolve the fused-regime batch against the engine's `max_batch`,
+    /// honoring the `SPARAMX_BATCH_FUSE` environment override. The
+    /// result is clamped to `[1, max_batch]` — fusing beyond the
+    /// batcher's ceiling would compile a regime no step can reach.
+    pub fn resolve(self, max_batch: usize) -> usize {
+        if let Ok(v) = std::env::var(BATCH_FUSE_ENV) {
+            if let Ok(c) = v.parse::<BatchFuseChoice>() {
+                return c.resolve_no_env(max_batch);
+            }
+        }
+        self.resolve_no_env(max_batch)
+    }
+
+    fn resolve_no_env(self, max_batch: usize) -> usize {
+        match self {
+            BatchFuseChoice::Auto => max_batch.max(1),
+            BatchFuseChoice::Fixed(n) => n.clamp(1, max_batch.max(1)),
+        }
+    }
+}
+
+impl Default for BatchFuseChoice {
+    fn default() -> Self {
+        BatchFuseChoice::Auto
+    }
+}
+
+impl std::str::FromStr for BatchFuseChoice {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "auto" => Ok(BatchFuseChoice::Auto),
+            t => t.parse::<usize>().map(BatchFuseChoice::Fixed).map_err(|_| {
+                format!(
+                    "unknown max-batch-fuse value '{s}' (expected {})",
+                    Self::HELP
+                )
+            }),
+        }
+    }
+}
+
+impl std::fmt::Display for BatchFuseChoice {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BatchFuseChoice::Auto => write!(f, "auto"),
+            BatchFuseChoice::Fixed(n) => write!(f, "{n}"),
+        }
+    }
+}
+
+/// Shape-level plans for all three regimes, resolved through one shared
+/// `(shape, batch)` cache: regimes whose batches coincide (e.g. fusion
+/// disabled → fused batch 1) reuse the batch-1 resolutions instead of
+/// re-consulting the registry.
+pub struct ModelRegimePlans {
+    pub decode_b1: ModelPlan,
+    pub decode_fused: ModelPlan,
+    pub prefill: ModelPlan,
+    /// Total distinct `(shape, batch)` registry consultations across
+    /// all three regimes.
+    pub selections_computed: usize,
+    /// The batches the regimes were compiled at.
+    pub batches: RegimeBatches,
+}
+
+impl ModelRegimePlans {
+    /// One line per distinct shape showing the selection each regime
+    /// compiled — the dense/sparse crossover table `sparamx info`
+    /// prints (the Fig 12 axis: a shape may be sparse at batch 1 and
+    /// dense once the fused batch fills the compute side).
+    pub fn regime_table(&self) -> String {
+        let mut seen: Vec<(usize, usize)> = Vec::new();
+        let mut lines = Vec::new();
+        for p in self.decode_b1.per_layer.iter().chain([&self.decode_b1.lm_head]) {
+            let key = (p.shape.in_features, p.shape.out_features);
+            if seen.contains(&key) {
+                continue;
+            }
+            seen.push(key);
+            let name = p.shape.name;
+            let fused = self
+                .decode_fused
+                .for_name(name)
+                .expect("regimes share shape names");
+            let pre = self.prefill.for_name(name).expect("regimes share shape names");
+            lines.push(format!(
+                "  {name} {}x{}: b1={} fused@{}={} prefill@{}={}",
+                key.0,
+                key.1,
+                p.selection.describe(),
+                self.batches.batch_of(Regime::DecodeFused),
+                fused.selection.describe(),
+                self.batches.batch_of(Regime::Prefill),
+                pre.selection.describe(),
+            ));
+        }
+        lines.join("\n")
+    }
+}
+
+/// Resolve all three regimes' shape plans through one shared cache.
+pub fn plan_model_regimes(
+    registry: &BackendRegistry,
+    choice: BackendChoice,
+    model: &ModelConfig,
+    batches: RegimeBatches,
+    sparsity: f64,
+    dtype: Dtype,
+) -> ModelRegimePlans {
+    let mut cache: HashMap<(usize, usize, usize), Selection> = HashMap::new();
+    let mut computed = 0usize;
+    let decode_b1 = plan_model_cached(
+        registry, choice, model, 1, sparsity, dtype, &mut cache, &mut computed,
+    );
+    let decode_fused = plan_model_cached(
+        registry,
+        choice,
+        model,
+        batches.batch_of(Regime::DecodeFused),
+        sparsity,
+        dtype,
+        &mut cache,
+        &mut computed,
+    );
+    let prefill = plan_model_cached(
+        registry,
+        choice,
+        model,
+        batches.batch_of(Regime::Prefill),
+        sparsity,
+        dtype,
+        &mut cache,
+        &mut computed,
+    );
+    ModelRegimePlans {
+        decode_b1,
+        decode_fused,
+        prefill,
+        selections_computed: computed,
+        batches,
+    }
+}
+
+/// One serving linear: pre-packed operands + the per-regime selections
+/// that chose their kernels. The token loop only ever calls `run` /
+/// `run_fused` / `run_prefill` — selection and packing both happened at
+/// compile time.
 pub struct PlannedLinear {
     pub name: &'static str,
     /// Inner dimension (input features).
     pub rows: usize,
     /// Output features.
     pub cols: usize,
+    /// Batch-1 decode-regime selection (what per-slot decode runs).
     pub selection: Selection,
-    operand: PackedOperand,
+    /// Fused decode-regime selection (multi-slot steps).
+    pub fused: Selection,
+    /// Prefill-regime selection (multi-row prompt pass).
+    pub prefill: Selection,
+    operand: Arc<PackedOperand>,
+    fused_operand: Arc<PackedOperand>,
+    prefill_operand: Arc<PackedOperand>,
 }
 
 impl PlannedLinear {
-    /// Pack `w` (`rows × cols`, row-major) for `selection`'s kernel
-    /// class via the shared [`PackedOperand`] policy.
+    /// Pack `w` (`rows × cols`, row-major) once per *distinct* operand
+    /// class across the three regimes: regimes whose selections agree
+    /// on `(backend, use_sparse)` share the packed bytes, so dual-regime
+    /// plans don't double the weight footprint unless the regimes
+    /// genuinely chose different kernel classes.
     fn pack(
         name: &'static str,
         w: &[f32],
         rows: usize,
         cols: usize,
-        selection: Selection,
+        b1: Selection,
+        fused: Selection,
+        prefill: Selection,
     ) -> PlannedLinear {
         debug_assert_eq!(w.len(), rows * cols, "{name}: weight shape mismatch");
-        let operand =
-            PackedOperand::pack_f32(&selection.backend, w, rows, cols, selection.use_sparse);
+        let operand = Arc::new(PackedOperand::pack_f32(
+            &b1.backend,
+            w,
+            rows,
+            cols,
+            b1.use_sparse,
+        ));
+        let pack_for = |sel: &Selection,
+                        prior: &[(&Selection, &Arc<PackedOperand>)]|
+         -> Arc<PackedOperand> {
+            for (ps, op) in prior {
+                if ps.backend == sel.backend && ps.use_sparse == sel.use_sparse {
+                    return Arc::clone(op);
+                }
+            }
+            Arc::new(PackedOperand::pack_f32(
+                &sel.backend,
+                w,
+                rows,
+                cols,
+                sel.use_sparse,
+            ))
+        };
+        let fused_operand = pack_for(&fused, &[(&b1, &operand)]);
+        let prefill_operand = pack_for(&prefill, &[(&b1, &operand), (&fused, &fused_operand)]);
         PlannedLinear {
             name,
             rows,
             cols,
-            selection,
+            selection: b1,
+            fused,
+            prefill,
             operand,
+            fused_operand,
+            prefill_operand,
         }
     }
 
-    /// Dispatch one GEMM: `x` is `batch × rows` row-major, output is
-    /// `batch × cols`. No selection, no packing — both happened at
-    /// compile time.
+    /// Dispatch one batch-1-regime GEMM: `x` is `batch × rows`
+    /// row-major, output is `batch × cols`. No selection, no packing —
+    /// both happened at compile time.
     pub fn run(&self, x: &[f32], batch: usize, ctr: &mut EventCounters) -> Vec<f32> {
         debug_assert_eq!(x.len(), batch * self.rows, "{}: input shape", self.name);
         self.operand.gemm_bf16(&self.selection.backend, x, batch, ctr)
+    }
+
+    /// Fused decode-regime dispatch: one batched GEMM over all active
+    /// slots' gathered rows, streaming each weight block once.
+    pub fn run_fused(&self, x: &[f32], batch: usize, ctr: &mut EventCounters) -> Vec<f32> {
+        debug_assert_eq!(x.len(), batch * self.rows, "{}: input shape", self.name);
+        self.fused_operand
+            .gemm_bf16_batched(&self.fused.backend, x, batch, ctr)
+    }
+
+    /// Prefill-regime dispatch over `batch` prompt positions.
+    pub fn run_prefill(&self, x: &[f32], batch: usize, ctr: &mut EventCounters) -> Vec<f32> {
+        debug_assert_eq!(x.len(), batch * self.rows, "{}: input shape", self.name);
+        self.prefill_operand
+            .gemm_bf16_batched(&self.prefill.backend, x, batch, ctr)
     }
 }
 
@@ -200,30 +502,59 @@ pub struct DecodePlan {
     pub layers: Vec<LayerPlan>,
     pub lm_head: PlannedLinear,
     /// Backend serving the KV static-segment GEMMs in attention (the
-    /// kernel class that won the q_proj shape).
+    /// kernel class that won the q_proj shape at batch 1).
     pub attention: Backend,
-    /// Shape-level plan stats, carried over from [`plan_model`].
+    /// Total distinct `(shape, batch)` registry consultations across
+    /// all three regimes, carried over from [`plan_model_regimes`].
     pub selections_computed: usize,
     pub linears_planned: usize,
+    /// Fused decode-regime batch this plan compiled for (1 = fusion
+    /// disabled; every step then runs the batch-1 regime).
+    pub fused_batch: usize,
+    /// Prompt length the prefill regime priced.
+    pub prefill_batch: usize,
 }
 
 impl DecodePlan {
-    /// Compile a plan for `model` (weights already pruned to
-    /// `sparsity`): resolve selections per distinct shape via
-    /// [`plan_model`], then pack every projection matrix once.
+    /// Compile a plan for `model` at the default regime batches.
     pub fn compile(
         registry: &BackendRegistry,
         choice: BackendChoice,
         model: &TinyModel,
         sparsity: f64,
     ) -> DecodePlan {
+        DecodePlan::compile_with(registry, choice, model, sparsity, RegimeBatches::default())
+    }
+
+    /// Compile a plan for `model` (weights already pruned to
+    /// `sparsity`): resolve selections per distinct shape *per regime*
+    /// via [`plan_model_regimes`], then pack every projection matrix
+    /// once per distinct operand class.
+    pub fn compile_with(
+        registry: &BackendRegistry,
+        choice: BackendChoice,
+        model: &TinyModel,
+        sparsity: f64,
+        batches: RegimeBatches,
+    ) -> DecodePlan {
         let mc = model_config_of(model);
-        let sp = plan_model(registry, choice, &mc, 1, sparsity, Dtype::Bf16);
-        let sel = |name: &str| -> Selection {
-            sp.for_name(name)
+        let rp = plan_model_regimes(registry, choice, &mc, batches, sparsity, Dtype::Bf16);
+        let sel = |plan: &ModelPlan, name: &str| -> Selection {
+            plan.for_name(name)
                 .expect("plan_model covers every projection name")
                 .selection
                 .clone()
+        };
+        let pack = |name: &'static str, w: &[f32], rows: usize, cols: usize| -> PlannedLinear {
+            PlannedLinear::pack(
+                name,
+                w,
+                rows,
+                cols,
+                sel(&rp.decode_b1, name),
+                sel(&rp.decode_fused, name),
+                sel(&rp.prefill, name),
+            )
         };
         let (h, inter, qd, kvd) = (
             model.hidden,
@@ -235,32 +566,29 @@ impl DecodePlan {
             .layers
             .iter()
             .map(|l| LayerPlan {
-                wq: PlannedLinear::pack("q_proj", &l.wq, h, qd, sel("q_proj")),
-                wk: PlannedLinear::pack("k_proj", &l.wk, h, kvd, sel("k_proj")),
-                wv: PlannedLinear::pack("v_proj", &l.wv, h, kvd, sel("v_proj")),
-                wo: PlannedLinear::pack("o_proj", &l.wo, qd, h, sel("o_proj")),
-                wgate: PlannedLinear::pack("gate_proj", &l.wgate, h, inter, sel("gate_proj")),
-                wup: PlannedLinear::pack("up_proj", &l.wup, h, inter, sel("up_proj")),
-                wdown: PlannedLinear::pack("down_proj", &l.wdown, inter, h, sel("down_proj")),
+                wq: pack("q_proj", &l.wq, h, qd),
+                wk: pack("k_proj", &l.wk, h, kvd),
+                wv: pack("v_proj", &l.wv, h, kvd),
+                wo: pack("o_proj", &l.wo, qd, h),
+                wgate: pack("gate_proj", &l.wgate, h, inter),
+                wup: pack("up_proj", &l.wup, h, inter),
+                wdown: pack("down_proj", &l.wdown, inter, h),
             })
             .collect();
         DecodePlan {
             layers,
-            lm_head: PlannedLinear::pack(
-                "lm_head",
-                &model.lm_head,
-                h,
-                model.vocab,
-                sel("lm_head"),
-            ),
-            attention: sp
+            lm_head: pack("lm_head", &model.lm_head, h, model.vocab),
+            attention: rp
+                .decode_b1
                 .for_name("q_proj")
                 .expect("q_proj always planned")
                 .selection
                 .backend
                 .clone(),
-            selections_computed: sp.selections_computed,
-            linears_planned: sp.linears_planned,
+            selections_computed: rp.selections_computed,
+            linears_planned: rp.decode_b1.linears_planned,
+            fused_batch: batches.batch_of(Regime::DecodeFused),
+            prefill_batch: batches.batch_of(Regime::Prefill),
         }
     }
 
@@ -300,11 +628,51 @@ impl DecodePlan {
             })
             .unwrap_or_default();
         format!(
-            "{layer_desc}head={} ({} selections / {} linears)",
+            "{layer_desc}head={} ({} selections / {} linears, fused@{}, prefill@{})",
             head.selection.describe(),
             self.selections_computed,
-            self.linears_planned
+            self.linears_planned,
+            self.fused_batch,
+            self.prefill_batch
         )
+    }
+
+    /// Per-shape regime table (one line per distinct shape) showing the
+    /// batch-1, fused, and prefill selections side by side.
+    pub fn regime_table(&self) -> String {
+        let mut seen: Vec<(usize, usize)> = Vec::new();
+        let mut lines = Vec::new();
+        let head = [&self.lm_head];
+        let linears = self
+            .layers
+            .first()
+            .map(|l| {
+                vec![
+                    &l.wq, &l.wk, &l.wv, &l.wo, &l.wgate, &l.wup, &l.wdown,
+                ]
+            })
+            .unwrap_or_default()
+            .into_iter()
+            .chain(head);
+        for p in linears {
+            let key = (p.rows, p.cols);
+            if seen.contains(&key) {
+                continue;
+            }
+            seen.push(key);
+            lines.push(format!(
+                "  {} {}x{}: b1={} fused@{}={} prefill@{}={}",
+                p.name,
+                p.rows,
+                p.cols,
+                p.selection.describe(),
+                self.fused_batch,
+                p.fused.describe(),
+                self.prefill_batch,
+                p.prefill.describe(),
+            ));
+        }
+        lines.join("\n")
     }
 }
 
@@ -332,14 +700,28 @@ pub struct NativeModel {
 }
 
 impl NativeModel {
-    /// Compile a plan for an already-pruned model.
+    /// Compile a plan for an already-pruned model at the default regime
+    /// batches.
     pub fn new(
         registry: &BackendRegistry,
         choice: BackendChoice,
         model: TinyModel,
         sparsity: f64,
     ) -> NativeModel {
-        let plan = DecodePlan::compile(registry, choice, &model, sparsity);
+        NativeModel::with_regimes(registry, choice, model, sparsity, RegimeBatches::default())
+    }
+
+    /// Compile a plan for an already-pruned model at explicit regime
+    /// batches (the engine passes its resolved fuse batch and context
+    /// geometry here).
+    pub fn with_regimes(
+        registry: &BackendRegistry,
+        choice: BackendChoice,
+        model: TinyModel,
+        sparsity: f64,
+        batches: RegimeBatches,
+    ) -> NativeModel {
+        let plan = DecodePlan::compile_with(registry, choice, &model, sparsity, batches);
         NativeModel { model, plan }
     }
 
@@ -386,9 +768,9 @@ impl NativeModel {
         let mut cache_layers: Vec<Vec<HeadCache>> = Vec::with_capacity(m.layers.len());
         for (lw, lp) in m.layers.iter().zip(self.plan.layers.iter()) {
             let x = rmsnorm_rows(&h, s, h_dim, &lw.ln1);
-            let mut q = lp.wq.run(&x, s, ctr);
-            let mut k = lp.wk.run(&x, s, ctr);
-            let v = lp.wv.run(&x, s, ctr);
+            let mut q = lp.wq.run_prefill(&x, s, ctr);
+            let mut k = lp.wk.run_prefill(&x, s, ctr);
+            let v = lp.wv.run_prefill(&x, s, ctr);
             rope_rows_from(&mut q, s, heads, hd, 0);
             rope_rows_from(&mut k, s, kvh, hd, 0);
             // build this layer's static segment from the post-RoPE K/V
@@ -431,17 +813,17 @@ impl NativeModel {
                     }
                 }
             }
-            let o = lp.wo.run(&ctx, s, ctr);
+            let o = lp.wo.run_prefill(&ctx, s, ctr);
             add_inplace(&mut h, &o);
             let x = rmsnorm_rows(&h, s, h_dim, &lw.ln2);
-            let gate = lp.wgate.run(&x, s, ctr);
-            let up = lp.wup.run(&x, s, ctr);
+            let gate = lp.wgate.run_prefill(&x, s, ctr);
+            let up = lp.wup.run_prefill(&x, s, ctr);
             let act: Vec<f32> = gate
                 .iter()
                 .zip(up.iter())
                 .map(|(&g, &u)| silu(g) * u)
                 .collect();
-            let down = lp.wdown.run(&act, s, ctr);
+            let down = lp.wdown.run_prefill(&act, s, ctr);
             add_inplace(&mut h, &down);
         }
         KvCache {
@@ -501,6 +883,85 @@ impl NativeModel {
         }
         let xf = rmsnorm_rows(&h, 1, h_dim, &m.ln_f);
         self.plan.lm_head.run(&xf, 1, ctr)
+    }
+
+    /// One fused decode step over `nb` active slots: their hidden states
+    /// are gathered into one `nb × hidden` activation block and every
+    /// projection runs **one** batched GEMM through the fused-regime
+    /// operand, streaming each packed weight block once for the whole
+    /// batch instead of once per slot. Attention and the KV appends stay
+    /// per-slot (each slot owns its cache and position). Returns one
+    /// logits vector per slot, in input order.
+    ///
+    /// `tokens`, `positions`, and `caches` are parallel arrays: row `b`
+    /// of the activation block belongs to slot `b`.
+    pub fn decode_step_batched(
+        &self,
+        tokens: &[u8],
+        positions: &[usize],
+        caches: &mut [&mut KvCache],
+        ctr: &mut EventCounters,
+    ) -> Vec<Vec<f32>> {
+        let nb = tokens.len();
+        debug_assert_eq!(positions.len(), nb, "positions per slot");
+        debug_assert_eq!(caches.len(), nb, "one cache per slot");
+        if nb == 0 {
+            return Vec::new();
+        }
+        let m = &self.model;
+        let (h_dim, heads, kvh, hd) = (m.hidden, m.heads, m.kv_heads, m.head_dim);
+        let group = heads / kvh;
+        // gather: one activation block, row per slot
+        let mut h = vec![0f32; nb * h_dim];
+        for (b, &tok) in tokens.iter().enumerate() {
+            h[b * h_dim..(b + 1) * h_dim]
+                .copy_from_slice(&m.emb[tok as usize * h_dim..(tok as usize + 1) * h_dim]);
+        }
+        for (layer_idx, (lw, lp)) in m.layers.iter().zip(self.plan.layers.iter()).enumerate() {
+            let x = rmsnorm_rows(&h, nb, h_dim, &lw.ln1);
+            let mut q = lp.wq.run_fused(&x, nb, ctr);
+            let mut k = lp.wk.run_fused(&x, nb, ctr);
+            let v = lp.wv.run_fused(&x, nb, ctr);
+            // RoPE per slot: each row rotates at its own position
+            for b in 0..nb {
+                let (p, qr) = (positions[b], b * heads * hd);
+                rope_rows_from(&mut q[qr..qr + heads * hd], 1, heads, hd, p);
+                rope_rows_from(&mut k[b * kvh * hd..(b + 1) * kvh * hd], 1, kvh, hd, p);
+            }
+            let mut ctx = vec![0f32; nb * heads * hd];
+            for b in 0..nb {
+                let kb = &k[b * kvh * hd..(b + 1) * kvh * hd];
+                let vb = &v[b * kvh * hd..(b + 1) * kvh * hd];
+                for head in 0..kvh {
+                    caches[b].heads[layer_idx][head]
+                        .append(&kb[head * hd..(head + 1) * hd], &vb[head * hd..(head + 1) * hd]);
+                }
+                for qh in 0..heads {
+                    let hc = &caches[b].heads[layer_idx][qh / group];
+                    let qrow = &q[(b * heads + qh) * hd..(b * heads + qh) * hd + hd];
+                    let out = attend_sparse(hc, qrow, &self.plan.attention, ctr);
+                    ctx[(b * heads + qh) * hd..(b * heads + qh) * hd + hd].copy_from_slice(&out);
+                }
+            }
+            let o = lp.wo.run_fused(&ctx, nb, ctr);
+            add_inplace(&mut h, &o);
+            let x = rmsnorm_rows(&h, nb, h_dim, &lw.ln2);
+            let gate = lp.wgate.run_fused(&x, nb, ctr);
+            let up = lp.wup.run_fused(&x, nb, ctr);
+            let act: Vec<f32> = gate
+                .iter()
+                .zip(up.iter())
+                .map(|(&g, &u)| silu(g) * u)
+                .collect();
+            let down = lp.wdown.run_fused(&act, nb, ctr);
+            add_inplace(&mut h, &down);
+        }
+        let xf = rmsnorm_rows(&h, nb, h_dim, &m.ln_f);
+        let logits = self.plan.lm_head.run_fused(&xf, nb, ctr);
+        let vocab = m.vocab;
+        (0..nb)
+            .map(|b| logits[b * vocab..(b + 1) * vocab].to_vec())
+            .collect()
     }
 }
 
@@ -666,6 +1127,134 @@ mod tests {
         assert_eq!(cache.heads[0][0].len(), 4, "decode appends to the tail");
         assert_eq!(cache.heads[1][1].dyn_len(), 1);
         assert!(ctr.instructions() > 0, "planned kernels tick events");
+    }
+
+    #[test]
+    fn llama3_regimes_flip_sparse_to_dense_with_batch() {
+        // Fig 12: the dense/sparse crossover moves with batch. The
+        // 4096×4096 q/o projection is memory-bound at batch 1 (sparse
+        // wins: less to stream) and compute-bound at a filled fused
+        // batch (dense wins: the decompress work stops amortizing).
+        let reg = BackendRegistry::with_caps(CpuCaps::all());
+        let mc = ModelConfig::llama3_8b();
+        let rp = plan_model_regimes(
+            &reg,
+            BackendChoice::Auto,
+            &mc,
+            RegimeBatches {
+                decode_fused: 256,
+                prefill: 512,
+            },
+            0.5,
+            Dtype::Bf16,
+        );
+        let b1 = rp.decode_b1.for_name("q_proj").unwrap();
+        let fused = rp.decode_fused.for_name("q_proj").unwrap();
+        assert!(b1.selection.use_sparse, "batch-1 decode is memory-bound: sparse wins");
+        assert!(
+            !fused.selection.use_sparse,
+            "batch-256 fused decode is compute-bound: dense wins"
+        );
+        assert!(rp.regime_table().contains("q_proj"));
+    }
+
+    #[test]
+    fn coinciding_regime_batches_share_resolutions() {
+        // fused batch forced to 1 + prefill at 1 → all three regimes hit
+        // the same (shape, batch) cache entries: 5 consultations total.
+        let reg = BackendRegistry::with_caps(CpuCaps::all());
+        let mc = ModelConfig::tiny();
+        let rp = plan_model_regimes(
+            &reg,
+            BackendChoice::Auto,
+            &mc,
+            RegimeBatches {
+                decode_fused: 1,
+                prefill: 1,
+            },
+            0.5,
+            Dtype::Bf16,
+        );
+        assert_eq!(rp.selections_computed, 5, "coinciding batches must dedupe");
+        // distinct batches consult once each per shape
+        let reg2 = BackendRegistry::with_caps(CpuCaps::all());
+        let rp2 = plan_model_regimes(
+            &reg2,
+            BackendChoice::Auto,
+            &mc,
+            RegimeBatches::default(),
+            0.5,
+            Dtype::Bf16,
+        );
+        assert_eq!(rp2.selections_computed, 15, "3 distinct batches x 5 shapes");
+    }
+
+    #[test]
+    fn batch_fuse_choice_parses_and_clamps() {
+        assert_eq!("auto".parse::<BatchFuseChoice>().unwrap(), BatchFuseChoice::Auto);
+        assert_eq!("8".parse::<BatchFuseChoice>().unwrap(), BatchFuseChoice::Fixed(8));
+        assert!("lots".parse::<BatchFuseChoice>().is_err());
+        assert_eq!(BatchFuseChoice::Auto.to_string(), "auto");
+        assert_eq!(BatchFuseChoice::Fixed(4).to_string(), "4");
+        // resolve_no_env sidesteps SPARAMX_BATCH_FUSE interference in CI
+        assert_eq!(BatchFuseChoice::Auto.resolve_no_env(8), 8);
+        assert_eq!(BatchFuseChoice::Fixed(4).resolve_no_env(8), 4);
+        assert_eq!(BatchFuseChoice::Fixed(99).resolve_no_env(8), 8, "clamped to max_batch");
+        assert_eq!(BatchFuseChoice::Fixed(0).resolve_no_env(8), 1, "floor at 1");
+        assert_eq!(BatchFuseChoice::Auto.resolve_no_env(0), 1);
+    }
+
+    #[test]
+    fn decode_step_batched_matches_looped_decode_steps() {
+        // engine-level fusion contract in miniature: the fused step over
+        // n slots is bit-exact vs. n independent batch-1 steps. Regimes
+        // are pinned to coincide so both paths run the same kernel class
+        // — this isolates the gather/RoPE/attention/split plumbing (the
+        // per-backend batched-vs-looped kernel parity lives in
+        // tests/batched_parity.rs; regimes that pick different kernels
+        // are allowed to differ in f32 rounding).
+        let reg = BackendRegistry::with_caps(CpuCaps::all());
+        let mut model = toy_model();
+        model.prune_weights(0.5);
+        let nm = NativeModel::with_regimes(
+            &reg,
+            BackendChoice::Auto,
+            model,
+            0.5,
+            RegimeBatches {
+                decode_fused: 1,
+                prefill: 1,
+            },
+        );
+        let prompts: [&[u8]; 3] = [&[1, 2, 3], &[7, 8], &[4, 5, 6, 9]];
+        let mut ctr = EventCounters::default();
+        // looped oracle: per-slot decode_step
+        let mut caches_a: Vec<KvCache> =
+            prompts.iter().map(|p| nm.prefill(p, 0.0, 0.0, &mut ctr)).collect();
+        let mut looped = Vec::new();
+        for (b, p) in prompts.iter().enumerate() {
+            looped.push(nm.decode_step(11, p.len(), &mut caches_a[b], &mut ctr));
+        }
+        // fused: one batched step over the same slots
+        let mut caches_b: Vec<KvCache> =
+            prompts.iter().map(|p| nm.prefill(p, 0.0, 0.0, &mut ctr)).collect();
+        let mut refs: Vec<&mut KvCache> = caches_b.iter_mut().collect();
+        let positions: Vec<usize> = prompts.iter().map(|p| p.len()).collect();
+        let fused =
+            nm.decode_step_batched(&[11, 11, 11], &positions, &mut refs, &mut ctr);
+        assert_eq!(fused.len(), 3);
+        for b in 0..3 {
+            assert_eq!(fused[b], looped[b], "slot {b} diverged");
+            assert_eq!(
+                caches_a[b].heads[0][0].len(),
+                caches_b[b].heads[0][0].len(),
+                "slot {b} cache length diverged"
+            );
+        }
+        // empty batch is a no-op
+        assert!(nm
+            .decode_step_batched(&[], &[], &mut [], &mut ctr)
+            .is_empty());
     }
 
     #[test]

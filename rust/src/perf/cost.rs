@@ -206,6 +206,43 @@ pub fn sharded_dense_gemm_cost(
     sharded_time(cols, shards, m, &|w, sm| dense_gemm_cost(batch, rows, w, sm).time)
 }
 
+/// Modeled wall time of serving `batch` decode rows as `batch`
+/// independent batch-1 calls — the looped path the engine takes when
+/// fusion is disabled. Every call re-streams the full weight stream and
+/// pays its own launch overhead and DRAM ramp; this is the baseline the
+/// fused regime (one call at `batch`) amortizes away.
+pub fn looped_dense_gemm_cost(batch: usize, rows: usize, cols: usize, m: &Machine) -> f64 {
+    batch as f64 * dense_gemm_cost(1, rows, cols, m).time
+}
+
+/// Looped-path wall time for the sparse BF16 kernel (see
+/// [`looped_dense_gemm_cost`]).
+pub fn looped_sparse_gemm_cost(
+    batch: usize,
+    rows: usize,
+    cols: usize,
+    sparsity: f64,
+    m: &Machine,
+) -> f64 {
+    batch as f64 * sparse_gemm_cost(1, rows, cols, sparsity, m).time
+}
+
+/// Modeled speedup of fusing `batch` active slots into one batched
+/// sparse GEMM vs. looping batch-1 calls: `looped / fused`. In the
+/// memory-bound decode regime this approaches `batch` (the weight
+/// stream is read once instead of `batch` times); in the compute-bound
+/// regime it approaches 1 (the MACs don't amortize).
+pub fn fused_sparse_speedup(
+    batch: usize,
+    rows: usize,
+    cols: usize,
+    sparsity: f64,
+    m: &Machine,
+) -> f64 {
+    let fused = sparse_gemm_cost(batch, rows, cols, sparsity, m).time;
+    looped_sparse_gemm_cost(batch, rows, cols, sparsity, m) / fused
+}
+
 /// Convenience: AVX sparse GEMM cost.
 pub fn avx_sparse_gemm_cost(
     batch: usize,
@@ -319,6 +356,39 @@ mod tests {
     fn launch_overhead_dominates_tiny_kernels() {
         let c = KernelCost::from_counters(&analytic::dense_bf16(1, 32, 16), &m32());
         assert!(c.time >= LAUNCH_OVERHEAD_S);
+    }
+
+    #[test]
+    fn fused_batched_call_beats_looped_batch1_calls() {
+        // the tentpole's premise: N batch-1 calls stream the weights N
+        // times; one batch-N call streams them once.
+        let m = m32();
+        let mut last = 1.0;
+        for b in [2usize, 4, 8, 16] {
+            let sp = fused_sparse_speedup(b, 4096, 14336, 0.5, &m);
+            assert!(sp > 1.5, "batch {b}: fused speedup {sp} too small");
+            assert!(sp > last, "speedup must grow with batch");
+            last = sp;
+        }
+    }
+
+    #[test]
+    fn fused_speedup_saturates_when_compute_bound() {
+        // once the batched call is compute-bound, adding rows stops
+        // amortizing: the speedup flattens well below `batch`.
+        let m = m32();
+        let sp = fused_sparse_speedup(256, 4096, 4096, 0.5, &m);
+        assert!(sp < 256.0 * 0.5, "compute-bound speedup must fall off: {sp}");
+    }
+
+    #[test]
+    fn looped_cost_is_batch_times_single_call() {
+        let m = m32();
+        let one = sparse_gemm_cost(1, 1024, 1024, 0.5, &m).time;
+        let four = looped_sparse_gemm_cost(4, 1024, 1024, 0.5, &m);
+        assert!((four - 4.0 * one).abs() < 1e-15);
+        let d1 = dense_gemm_cost(1, 1024, 1024, &m).time;
+        assert!((looped_dense_gemm_cost(3, 1024, 1024, &m) - 3.0 * d1).abs() < 1e-15);
     }
 
     #[test]

@@ -294,6 +294,110 @@ impl LinearBackend for ShardedBackend {
         })
     }
 
+    // Fused (multi-row) entry points: the same epoch machinery runs the
+    // inner backend's *batched* kernels per column shard, so a fused
+    // GEMM both amortizes the weight stream over the batch and splits
+    // the column axis across workers. Still column partitioning only —
+    // merge order and per-column k-accumulation are unchanged, so these
+    // stay bit-exact vs. the unsharded batched call and vs. looping
+    // batch 1.
+
+    fn gemm_bf16_batched(
+        &self,
+        input: &[f32],
+        batch: usize,
+        w: &DenseWeights<Bf16>,
+        ctr: &mut EventCounters,
+    ) -> Vec<f32> {
+        let plan = ShardPlan::partition(w.cols, self.shards, &self.topo);
+        let parts: Vec<DenseWeights<Bf16>> = plan
+            .block_ranges
+            .iter()
+            .map(|br| w.slice_col_blocks(br.clone()))
+            .collect();
+        self.run_epoch(&plan, batch, w.cols, ctr, |s, c| {
+            self.inner.gemm_bf16_batched(input, batch, &parts[s], c)
+        })
+    }
+
+    fn sparse_gemm_bf16_batched(
+        &self,
+        input: &[f32],
+        batch: usize,
+        sp: &SparseTensor<Bf16>,
+        ctr: &mut EventCounters,
+    ) -> Vec<f32> {
+        let plan = ShardPlan::partition(sp.cols, self.shards, &self.topo);
+        let parts: Vec<SparseTensor<Bf16>> = plan
+            .block_ranges
+            .iter()
+            .map(|br| sp.slice_col_blocks(br.clone()))
+            .collect();
+        self.run_epoch(&plan, batch, sp.cols, ctr, |s, c| {
+            self.inner.sparse_gemm_bf16_batched(input, batch, &parts[s], c)
+        })
+    }
+
+    fn gemm_int8_batched(
+        &self,
+        input: &[i8],
+        batch: usize,
+        w: &DenseWeights<i8>,
+        ctr: &mut EventCounters,
+    ) -> Vec<i32> {
+        let plan = ShardPlan::partition(w.cols, self.shards, &self.topo);
+        let parts: Vec<DenseWeights<i8>> = plan
+            .block_ranges
+            .iter()
+            .map(|br| w.slice_col_blocks(br.clone()))
+            .collect();
+        self.run_epoch(&plan, batch, w.cols, ctr, |s, c| {
+            self.inner.gemm_int8_batched(input, batch, &parts[s], c)
+        })
+    }
+
+    fn sparse_gemm_int8_batched(
+        &self,
+        input: &[i8],
+        batch: usize,
+        sp: &SparseTensor<i8>,
+        ctr: &mut EventCounters,
+    ) -> Vec<i32> {
+        let plan = ShardPlan::partition(sp.cols, self.shards, &self.topo);
+        let parts: Vec<SparseTensor<i8>> = plan
+            .block_ranges
+            .iter()
+            .map(|br| sp.slice_col_blocks(br.clone()))
+            .collect();
+        self.run_epoch(&plan, batch, sp.cols, ctr, |s, c| {
+            self.inner.sparse_gemm_int8_batched(input, batch, &parts[s], c)
+        })
+    }
+
+    /// Serving path for fused decode: pre-partitioned operand, batched
+    /// inner kernels, no partitioning tick.
+    fn gemm_bf16_sharded_batched(
+        &self,
+        input: &[f32],
+        batch: usize,
+        op: &crate::shard::ShardedOperand,
+        ctr: &mut EventCounters,
+    ) -> Vec<f32> {
+        self.run_epoch(&op.plan, batch, op.cols, ctr, |s, c| {
+            match &op.parts[s] {
+                crate::backend::PackedOperand::Sparse(sp) => {
+                    self.inner.sparse_gemm_bf16_batched(input, batch, sp, c)
+                }
+                crate::backend::PackedOperand::Dense(dw) => {
+                    self.inner.gemm_bf16_batched(input, batch, dw, c)
+                }
+                crate::backend::PackedOperand::Sharded(_) => {
+                    unreachable!("nested sharded operand")
+                }
+            }
+        })
+    }
+
     /// Slowest shard on its NUMA slice of the machine + barrier; shares
     /// `perf::cost::sharded_time` with the cost-model convenience
     /// functions so registry selection agrees by construction.

@@ -111,6 +111,18 @@ impl Args {
         }
     }
 
+    /// The `--max-batch-fuse {auto,N}` fused-decode directive; defaults
+    /// to `auto` (fuse up to the engine's `max_batch`; 1 disables
+    /// fusion). Panics with the accepted spellings on a bad value.
+    pub fn max_batch_fuse(&self) -> crate::models::BatchFuseChoice {
+        match self.options.get("max-batch-fuse") {
+            None => crate::models::BatchFuseChoice::Auto,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|e: String| panic!("--max-batch-fuse={v}: {e}")),
+        }
+    }
+
     /// Comma-separated list option, e.g. `--cores 8,16,32`.
     pub fn get_list<T: std::str::FromStr>(&self, key: &str, default: &[T]) -> Vec<T>
     where
@@ -210,6 +222,26 @@ mod tests {
     #[should_panic(expected = "unknown shards value")]
     fn shards_flag_rejects_unknown() {
         let _ = parse("run --shards many").shards();
+    }
+
+    #[test]
+    fn max_batch_fuse_flag_parses_with_auto_default() {
+        use crate::models::BatchFuseChoice;
+        assert_eq!(parse("run").max_batch_fuse(), BatchFuseChoice::Auto);
+        assert_eq!(
+            parse("run --max-batch-fuse auto").max_batch_fuse(),
+            BatchFuseChoice::Auto
+        );
+        assert_eq!(
+            parse("serve --max-batch-fuse=8").max_batch_fuse(),
+            BatchFuseChoice::Fixed(8)
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown max-batch-fuse value")]
+    fn max_batch_fuse_flag_rejects_unknown() {
+        let _ = parse("run --max-batch-fuse lots").max_batch_fuse();
     }
 
     #[test]

@@ -3,11 +3,12 @@
 //!
 //! The paper's kernels parallelize over output columns with a *fixed*
 //! thread count chosen at model-load time (the `weight_value_index`
-//! partitioning bakes the count in). Historically this type spawned OS
-//! threads on every `parallel_for` call via `std::thread::scope`; it now
-//! keeps the same API but dispatches onto long-lived workers spawned
-//! once at construction, so repeated calls pay a mailbox wakeup instead
-//! of thread creation. Clones share the same worker pool.
+//! partitioning bakes the count in). Workers are spawned once at
+//! construction and live until the last clone drops: each
+//! `parallel_for`/`parallel_map` call dispatches one epoch onto the
+//! shared [`crate::shard::WorkerPool`] mailboxes — a wakeup, not a
+//! thread spawn — so per-token hot paths can call into the pool freely.
+//! Clones share the same workers.
 
 use std::sync::Arc;
 

@@ -1,0 +1,257 @@
+//! Batched-vs-looped parity: the tentpole invariant that one
+//! `*_batched` call over `batch` gathered rows is **bit-exact** against
+//! looping the batch-1 entry point row by row — for every backend
+//! (including the sharded wrapper at 1 and 4 shards), both dtypes,
+//! dense and sparse packs, across odd and pow-2 batches.
+//!
+//! The fused call is a pure performance transform (it streams each
+//! packed weight block once for the whole batch instead of once per
+//! row), so any numeric divergence is a bug, not rounding. A final
+//! regression pins the other tentpole invariant: regime selection runs
+//! at plan compile, never in the fused token loop.
+
+use sparamx::amx::kernels::DenseWeights;
+use sparamx::amx::EventCounters;
+use sparamx::backend::{Backend, BackendChoice, BackendRegistry, CpuCaps, PackedOperand};
+use sparamx::kvcache::cache::KvCache;
+use sparamx::models::plan::{NativeModel, RegimeBatches};
+use sparamx::models::tinyforward::{LayerW, TinyModel};
+use sparamx::shard::{NumaTopology, WorkerPool};
+use sparamx::sparse::format::SparseTensor;
+use sparamx::sparse::prune::magnitude_prune;
+use sparamx::util::bf16::Bf16;
+use sparamx::util::XorShift;
+use std::sync::Arc;
+
+const BATCHES: [usize; 5] = [1, 2, 3, 8, 17];
+
+fn sharded_over(inner: Backend, shards: usize) -> Backend {
+    let topo = NumaTopology::modeled(2, 8);
+    let pool = Arc::new(WorkerPool::with_topology(shards, &topo));
+    Backend::sharded(inner, shards, topo, pool)
+}
+
+/// Every backend the matrix sweeps: the three plain implementations
+/// plus the sharded wrapper at shards {1, 4} over two inner kinds.
+fn backends() -> Vec<Backend> {
+    vec![
+        Backend::amx(),
+        Backend::avx(),
+        Backend::reference(),
+        sharded_over(Backend::reference(), 1),
+        sharded_over(Backend::reference(), 4),
+        sharded_over(Backend::amx(), 4),
+    ]
+}
+
+#[test]
+fn batched_bf16_is_bit_exact_vs_looped_batch1_for_every_backend() {
+    let mut g = XorShift::new(7001);
+    let (rows, cols) = (40usize, 72usize);
+    let w = magnitude_prune(&g.normal_vec(rows * cols, 1.0), 0.5);
+    let sp: SparseTensor<Bf16> = SparseTensor::pack_f32(&w, rows, cols);
+    let dw: DenseWeights<Bf16> = DenseWeights::pack_f32(&w, rows, cols);
+    for &batch in &BATCHES {
+        let x = g.normal_vec(batch * rows, 1.0);
+        for b in backends() {
+            // looped oracle: the same backend's batch-1 path, row by row
+            let mut looped_sparse = Vec::new();
+            let mut looped_dense = Vec::new();
+            for r in 0..batch {
+                let row = &x[r * rows..(r + 1) * rows];
+                let mut c = EventCounters::default();
+                looped_sparse.extend(b.sparse_gemm_bf16(row, 1, &sp, &mut c));
+                let mut c = EventCounters::default();
+                looped_dense.extend(b.gemm_bf16(row, 1, &dw, &mut c));
+            }
+            let mut c1 = EventCounters::default();
+            let fused_sparse = b.sparse_gemm_bf16_batched(&x, batch, &sp, &mut c1);
+            assert_eq!(
+                fused_sparse,
+                looped_sparse,
+                "{} sparse bf16 batch {batch} not bit-exact",
+                b.name()
+            );
+            let mut c2 = EventCounters::default();
+            let fused_dense = b.gemm_bf16_batched(&x, batch, &dw, &mut c2);
+            assert_eq!(
+                fused_dense,
+                looped_dense,
+                "{} dense bf16 batch {batch} not bit-exact",
+                b.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn batched_int8_is_bit_exact_vs_looped_batch1_for_every_backend() {
+    let mut g = XorShift::new(7002);
+    let (rows, cols) = (48usize, 56usize);
+    let w: Vec<i8> = (0..rows * cols)
+        .map(|_| {
+            if g.next_f64() < 0.5 {
+                0
+            } else {
+                (g.below(200) as i32 - 100) as i8
+            }
+        })
+        .collect();
+    let sp: SparseTensor<i8> = SparseTensor::pack(&w, rows, cols);
+    let dw: DenseWeights<i8> = DenseWeights::pack(&w, rows, cols);
+    for &batch in &BATCHES {
+        let x: Vec<i8> = (0..batch * rows)
+            .map(|_| (g.below(200) as i32 - 100) as i8)
+            .collect();
+        for b in backends() {
+            let mut looped_sparse = Vec::new();
+            let mut looped_dense = Vec::new();
+            for r in 0..batch {
+                let row = &x[r * rows..(r + 1) * rows];
+                let mut c = EventCounters::default();
+                looped_sparse.extend(b.sparse_gemm_int8(row, 1, &sp, &mut c));
+                let mut c = EventCounters::default();
+                looped_dense.extend(b.gemm_int8(row, 1, &dw, &mut c));
+            }
+            let mut c1 = EventCounters::default();
+            assert_eq!(
+                b.sparse_gemm_int8_batched(&x, batch, &sp, &mut c1),
+                looped_sparse,
+                "{} sparse int8 batch {batch} not bit-exact",
+                b.name()
+            );
+            let mut c2 = EventCounters::default();
+            assert_eq!(
+                b.gemm_int8_batched(&x, batch, &dw, &mut c2),
+                looped_dense,
+                "{} dense int8 batch {batch} not bit-exact",
+                b.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn batched_calls_through_pre_sharded_operands_stay_bit_exact() {
+    // the serving path: operands packed once through the sharded
+    // backend (pre-partitioned), then dispatched batched — must match
+    // both the looped pre-sharded path and the unsharded inner kernel.
+    let mut g = XorShift::new(7003);
+    let (rows, cols) = (32usize, 96usize);
+    let w = magnitude_prune(&g.normal_vec(rows * cols, 1.0), 0.5);
+    for shards in [1usize, 4] {
+        for inner in [Backend::reference(), Backend::amx()] {
+            let sharded = sharded_over(inner.clone(), shards);
+            let op = PackedOperand::pack_f32(&sharded, &w, rows, cols, true);
+            let whole = PackedOperand::pack_f32(&inner, &w, rows, cols, true);
+            for &batch in &BATCHES {
+                let x = g.normal_vec(batch * rows, 1.0);
+                let mut c = EventCounters::default();
+                let fused = op.gemm_bf16_batched(&sharded, &x, batch, &mut c);
+                let mut looped = Vec::new();
+                for r in 0..batch {
+                    let mut cr = EventCounters::default();
+                    looped.extend(op.gemm_bf16(
+                        &sharded,
+                        &x[r * rows..(r + 1) * rows],
+                        1,
+                        &mut cr,
+                    ));
+                }
+                assert_eq!(
+                    fused,
+                    looped,
+                    "sharded({}x{shards}) batch {batch}: fused vs looped",
+                    inner.name()
+                );
+                let mut cu = EventCounters::default();
+                let unsharded = whole.gemm_bf16_batched(&inner, &x, batch, &mut cu);
+                assert_eq!(
+                    fused,
+                    unsharded,
+                    "sharded({}x{shards}) batch {batch}: vs unsharded inner",
+                    inner.name()
+                );
+            }
+        }
+    }
+}
+
+fn toy_model(seed: u64) -> TinyModel {
+    let mut g = XorShift::new(seed);
+    let (h, inter, heads, kvh, hd, vocab) = (16, 24, 4, 2, 4, 256);
+    let mut mk = |n: usize| g.normal_vec(n, 0.3);
+    TinyModel {
+        hidden: h,
+        inter,
+        heads,
+        kv_heads: kvh,
+        head_dim: hd,
+        vocab,
+        emb: mk(vocab * h),
+        layers: (0..2)
+            .map(|_| LayerW {
+                ln1: vec![1.0; h],
+                wq: mk(h * heads * hd),
+                wk: mk(h * kvh * hd),
+                wv: mk(h * kvh * hd),
+                wo: mk(heads * hd * h),
+                ln2: vec![1.0; h],
+                wgate: mk(h * inter),
+                wup: mk(h * inter),
+                wdown: mk(inter * h),
+            })
+            .collect(),
+        ln_f: vec![1.0; h],
+        lm_head: mk(h * vocab),
+    }
+}
+
+#[test]
+fn fused_token_loop_never_reruns_regime_selection() {
+    // all three regimes' selections resolve at plan compile; a fused
+    // decode loop over multiple slots must not consult the registry
+    // again (the per-instance resolution counter would tick and fail).
+    let reg = BackendRegistry::with_caps(CpuCaps::all());
+    assert_eq!(reg.selections_resolved(), 0);
+    let nm = NativeModel::with_regimes(
+        &reg,
+        BackendChoice::Auto,
+        toy_model(7004),
+        0.0,
+        RegimeBatches {
+            decode_fused: 4,
+            prefill: 16,
+        },
+    );
+    let at_load = reg.selections_resolved();
+    assert!(at_load > 0, "compile must consult the registry");
+    let prompts: [&[u8]; 3] = [&[1, 2, 3], &[9, 8], &[5, 5, 5, 5]];
+    let mut ctr = EventCounters::default();
+    let mut caches: Vec<KvCache> = prompts
+        .iter()
+        .map(|p| nm.prefill(p, 0.0, 0.0, &mut ctr))
+        .collect();
+    let mut tokens = [7u8, 11, 13];
+    let mut positions: Vec<usize> = prompts.iter().map(|p| p.len()).collect();
+    for _step in 0..8 {
+        let mut refs: Vec<&mut KvCache> = caches.iter_mut().collect();
+        let logits = nm.decode_step_batched(&tokens, &positions, &mut refs, &mut ctr);
+        assert_eq!(logits.len(), 3);
+        for (b, row) in logits.iter().enumerate() {
+            let mut best = 0;
+            for (i, &v) in row.iter().enumerate() {
+                if v > row[best] {
+                    best = i;
+                }
+            }
+            tokens[b] = best as u8;
+            positions[b] += 1;
+        }
+    }
+    assert_eq!(
+        reg.selections_resolved(),
+        at_load,
+        "fused token loop re-ran selection"
+    );
+}

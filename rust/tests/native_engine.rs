@@ -13,7 +13,7 @@ use sparamx::coordinator::batcher::AdmissionQueue;
 use sparamx::coordinator::engine::Engine;
 use sparamx::coordinator::request::Request;
 use sparamx::coordinator::server::{self, ServerCtx};
-use sparamx::models::plan::{plan_model, DecodePlan, NativeModel};
+use sparamx::models::plan::{plan_model, DecodePlan, NativeModel, RegimeBatches};
 use sparamx::models::tinyforward::{KvTreatment, LayerW, TinyModel};
 use sparamx::models::ModelConfig;
 use std::sync::{mpsc, Arc};
@@ -97,8 +97,9 @@ fn decode_plan_caches_one_selection_per_distinct_shape() {
     let model = toy_model(42);
     let plan = DecodePlan::compile(&reg, BackendChoice::Auto, &model, 0.5);
     // toy shapes: q=o=(16,16), k=v=(16,8), gate=up=(16,24),
-    // down=(24,16), lm_head=(16,256) → exactly 5 distinct
-    assert_eq!(plan.selections_computed, 5);
+    // down=(24,16), lm_head=(16,256) → exactly 5 distinct, resolved at
+    // each of the 3 default regime batches (1 / 8 / 32)
+    assert_eq!(plan.selections_computed, 15);
     assert_eq!(plan.linears_planned, 2 * 7 + 1);
 }
 
@@ -108,11 +109,14 @@ fn selection_runs_at_load_never_in_the_token_loop() {
     assert_eq!(reg.selections_resolved(), 0);
     let model = toy_model(42);
     let nm = NativeModel::new(&reg, BackendChoice::Auto, model, 0.0);
-    assert_eq!(nm.plan.selections_computed, 5, "one selection per distinct shape");
+    assert_eq!(
+        nm.plan.selections_computed, 15,
+        "one selection per distinct shape per regime batch"
+    );
     // the registry's own call counter confirms compile consulted it
-    // exactly once per distinct shape...
+    // exactly once per distinct (shape, regime batch)...
     let at_load = reg.selections_resolved();
-    assert_eq!(at_load, 5, "plan compile = 5 registry resolutions");
+    assert_eq!(at_load, 15, "plan compile = 5 shapes x 3 regime batches");
     // ...and a dozen decode steps later it has not moved: selection
     // runs at load, never in the token loop (ROADMAP invariant). Any
     // future re-selection through this registry on the serving path
@@ -332,7 +336,13 @@ fn engine_generation_equals_direct_plan_decode() {
     let cfg = native_cfg();
     let prompt = b"the cat sees ".to_vec();
     let registry = BackendRegistry::probe();
-    let nm = NativeModel::new(&registry, cfg.backend, toy_model(48), 0.0);
+    // Mirror the engine's regime batches so the direct model's prefill
+    // regime resolves the same selections the engine's plan did.
+    let batches = RegimeBatches {
+        decode_fused: cfg.max_batch_fuse.resolve(cfg.max_batch),
+        prefill: cfg.max_ctx,
+    };
+    let nm = NativeModel::with_regimes(&registry, cfg.backend, toy_model(48), 0.0, batches);
     let (want_tokens, _) = native_greedy(&nm, &prompt, 8);
 
     let mut engine = Engine::from_tiny_model(toy_model(48), cfg).expect("engine");

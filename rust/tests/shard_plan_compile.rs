@@ -88,7 +88,10 @@ fn partitioning_happens_at_pack_time_never_in_the_serving_loop() {
     let nm = NativeModel::new(&reg, BackendChoice::Auto, toy_model(72), 0.0);
     let at_load_parts = partitions_performed();
     let at_load_sels = reg.selections_resolved();
-    assert_eq!(at_load_sels, 5, "plan compile = one resolution per distinct shape");
+    assert_eq!(
+        at_load_sels, 15,
+        "plan compile = one resolution per distinct shape per regime batch"
+    );
 
     let prompt = [1u8, 5, 9, 2];
     let mut ctr = EventCounters::default();
