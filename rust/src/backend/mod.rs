@@ -349,6 +349,13 @@ pub trait LinearBackend: Send + Sync {
     fn shard_stats(&self) -> Option<crate::shard::ShardStatsSnapshot> {
         None
     }
+
+    /// The persistent worker pool this backend executes on, if any.
+    /// Lets other parallel phases (the fused attention head-group
+    /// scatter) reuse the same workers instead of spawning their own.
+    fn worker_pool(&self) -> Option<Arc<crate::shard::WorkerPool>> {
+        None
+    }
 }
 
 /// Cheap, cloneable handle to a [`LinearBackend`] — what call sites
@@ -536,6 +543,10 @@ impl Backend {
 
     pub fn shard_stats(&self) -> Option<crate::shard::ShardStatsSnapshot> {
         self.0.shard_stats()
+    }
+
+    pub fn worker_pool(&self) -> Option<Arc<crate::shard::WorkerPool>> {
+        self.0.worker_pool()
     }
 }
 

@@ -92,6 +92,55 @@ impl Geometry {
     }
 }
 
+/// Consecutive disagreeing steps before the decode regime may flip:
+/// occupancy oscillating around the fuse threshold (slots finishing and
+/// refilling every step) would otherwise bounce looped↔fused each step.
+const REGIME_DWELL_STEPS: u32 = 4;
+
+/// Hysteresis on the looped↔fused decode-regime pick. The instantaneous
+/// pick (`active > 1 && fused_batch > 1`) is fed in every step; the
+/// regime actually served only flips after [`REGIME_DWELL_STEPS`]
+/// consecutive steps of disagreement. Holding either regime is safe:
+/// the fused path at one active slot runs `decode_step_batched` with
+/// `nb = 1` and the looped path at several slots runs them serially —
+/// both bit-exact, only differently amortized.
+#[derive(Debug, Default)]
+struct RegimeHysteresis {
+    /// Regime currently in effect (`None` until the first step adopts
+    /// the instantaneous pick without counting a flip).
+    current: Option<bool>,
+    /// Consecutive steps the instantaneous pick disagreed with
+    /// `current`.
+    dwell: u32,
+}
+
+impl RegimeHysteresis {
+    /// Feed one step's instantaneous pick; returns `(regime_in_effect,
+    /// flipped_this_step)`.
+    fn decide(&mut self, want: bool) -> (bool, bool) {
+        match self.current {
+            None => {
+                self.current = Some(want);
+                (want, false)
+            }
+            Some(cur) if cur == want => {
+                self.dwell = 0;
+                (cur, false)
+            }
+            Some(cur) => {
+                self.dwell += 1;
+                if self.dwell >= REGIME_DWELL_STEPS {
+                    self.current = Some(want);
+                    self.dwell = 0;
+                    (want, true)
+                } else {
+                    (cur, false)
+                }
+            }
+        }
+    }
+}
+
 /// One decode slot's state.
 struct Slot {
     req: Option<Request>,
@@ -177,6 +226,9 @@ pub struct Engine {
     /// per-shard timings are drained into [`Metrics`] after every step.
     /// Empty when the plan selected no sharded kernel.
     shard_backends: Vec<Backend>,
+    /// Dwell-counted looped↔fused regime state (native path; PJRT's
+    /// artifact always runs the full batch).
+    hysteresis: RegimeHysteresis,
     cfg: RuntimeConfig,
     path: EnginePath,
 }
@@ -225,7 +277,7 @@ impl Engine {
             decode_fused: fuse,
             prefill: geo.prefill_len,
         };
-        let native = NativeModel::with_regimes(
+        let mut native = NativeModel::with_regimes(
             &registry,
             cfg.backend,
             model,
@@ -268,6 +320,19 @@ impl Engine {
             add(&native.plan.lm_head.prefill.backend);
             add(&native.plan.attention);
         }
+        // Fused-attention scatter pool: independent (slot, kv-head)
+        // groups fan out over the sharded backends' persistent worker
+        // pool when the plan has one; otherwise spin one up on
+        // multi-shard hosts. (The model ignores it when the attention
+        // backend is itself sharded — nested scatter would deadlock.)
+        let attn_pool = shard_backends
+            .iter()
+            .find_map(|b| b.worker_pool())
+            .or_else(|| {
+                (shards > 1)
+                    .then(|| Arc::new(crate::shard::WorkerPool::with_topology(shards, &topo)))
+            });
+        native.set_attention_pool(attn_pool);
         Ok(Engine {
             geo,
             slots,
@@ -275,6 +340,7 @@ impl Engine {
             step_label: format!("native/{}", selection.backend.name()),
             selection,
             shard_backends,
+            hysteresis: RegimeHysteresis::default(),
             cfg,
             path: EnginePath::Native(NativePath {
                 model: native,
@@ -333,6 +399,7 @@ impl Engine {
             step_label: "pjrt/xla".to_string(),
             selection,
             shard_backends: Vec::new(),
+            hysteresis: RegimeHysteresis::default(),
             cfg,
         })
     }
@@ -537,8 +604,16 @@ impl Engine {
                 // regime pick from live slot count: multi-slot steps fuse
                 // into one batched GEMM per projection (unless fusion is
                 // disabled); single-slot steps run the batch-1 plan. The
-                // selections themselves were fixed at plan compile.
-                let fused = active.len() > 1 && np.model.plan.fused_batch > 1;
+                // selections themselves were fixed at plan compile, and a
+                // dwell counter keeps occupancy noise around the fuse
+                // threshold from flipping the regime every step.
+                let want = active.len() > 1 && np.model.plan.fused_batch > 1;
+                let (fused, flipped) = self.hysteresis.decide(want);
+                if flipped {
+                    self.metrics
+                        .regime_flips
+                        .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                }
                 self.metrics.record_decode_regime(active.len(), fused);
                 let next: Vec<(usize, u8)> = if fused {
                     let tokens: Vec<u8> =
@@ -718,5 +793,45 @@ mod tests {
     fn argmax_picks_first_max() {
         assert_eq!(argmax(&[1.0, 5.0, 5.0, 2.0]), 1);
         assert_eq!(argmax(&[-3.0]), 0);
+    }
+
+    #[test]
+    fn hysteresis_adopts_first_pick_without_flip() {
+        let mut h = RegimeHysteresis::default();
+        assert_eq!(h.decide(true), (true, false));
+        assert_eq!(h.decide(true), (true, false));
+        let mut h = RegimeHysteresis::default();
+        assert_eq!(h.decide(false), (false, false));
+    }
+
+    #[test]
+    fn hysteresis_ignores_oscillation_around_threshold() {
+        // occupancy bouncing 1,2,1,2,... never sustains a disagreement
+        // long enough to flip
+        let mut h = RegimeHysteresis::default();
+        assert_eq!(h.decide(false), (false, false));
+        for _ in 0..20 {
+            assert_eq!(h.decide(true), (false, false), "held through blip");
+            assert_eq!(h.decide(false), (false, false), "agreement resets dwell");
+        }
+    }
+
+    #[test]
+    fn hysteresis_flips_once_after_sustained_change() {
+        let mut h = RegimeHysteresis::default();
+        assert_eq!(h.decide(false), (false, false));
+        let mut flips = 0;
+        for step in 0..10 {
+            let (fused, flipped) = h.decide(true);
+            if flipped {
+                flips += 1;
+            }
+            if step + 1 < REGIME_DWELL_STEPS as usize {
+                assert!(!fused, "step {step}: still dwelling");
+            } else {
+                assert!(fused, "step {step}: sustained change took effect");
+            }
+        }
+        assert_eq!(flips, 1, "sustained change flips exactly once");
     }
 }

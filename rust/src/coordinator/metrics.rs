@@ -88,6 +88,10 @@ pub struct Metrics {
     pub steps_decode_b1: AtomicU64,
     /// Decode steps served through the fused multi-slot regime.
     pub steps_decode_fused: AtomicU64,
+    /// Looped↔fused regime transitions the engine's dwell counter let
+    /// through (hysteresis suppresses per-step oscillation, so a high
+    /// flip count means genuinely shifting occupancy).
+    pub regime_flips: AtomicU64,
     /// Steps served, keyed by `"<engine path>/<backend>"` (e.g.
     /// `native/amx`, `pjrt/xla`) — which path actually produced tokens.
     steps_by_path: Mutex<BTreeMap<String, u64>>,
@@ -193,6 +197,7 @@ impl Metrics {
         let toks = self.tokens_generated.load(Ordering::Relaxed);
         let done = self.requests_completed.load(Ordering::Relaxed);
         let rej = self.requests_rejected.load(Ordering::Relaxed);
+        let flips = self.regime_flips.load(Ordering::Relaxed);
         let step = self
             .step_summary()
             .map(|s| format!("{:.2}ms", s.mean * 1e3))
@@ -214,7 +219,7 @@ impl Metrics {
         };
         format!(
             "completed={done} rejected={rej} tokens={toks} steps={steps} \
-             step_mean={step} latency {lat} served_by {paths}"
+             regime_flips={flips} step_mean={step} latency {lat} served_by {paths}"
         )
     }
 
@@ -282,6 +287,10 @@ impl Metrics {
                         Json::Num(self.prefills.load(Ordering::Relaxed) as f64),
                     ),
                 ]),
+            ),
+            (
+                "regime_flips",
+                Json::Num(self.regime_flips.load(Ordering::Relaxed) as f64),
             ),
             (
                 "batch_occupancy_bounds",
@@ -375,11 +384,14 @@ mod tests {
         assert_eq!(c[3], 1, "{c:?}"); // 5 slots → the ≤8 bucket
         assert_eq!(*c.last().unwrap(), 1, "overflow bucket");
         assert_eq!(m.batch_occupancy.total(), 4);
+        m.regime_flips.fetch_add(2, Ordering::Relaxed);
         let v = Json::parse(&m.stats_json("native").to_string()).unwrap();
         let reg = v.get("steps_by_regime").unwrap();
         assert_eq!(reg.get("decode_b1").unwrap().as_usize(), Some(1));
         assert_eq!(reg.get("decode_fused").unwrap().as_usize(), Some(3));
         assert_eq!(reg.get("prefill").unwrap().as_usize(), Some(0));
+        assert_eq!(v.get("regime_flips").unwrap().as_usize(), Some(2));
+        assert!(m.report().contains("regime_flips=2"));
         let oc = v.get("batch_occupancy_counts").unwrap().as_arr().unwrap();
         assert_eq!(oc.len(), OCCUPANCY_BUCKET_BOUNDS.len() + 1);
         let total: f64 = oc.iter().filter_map(|c| c.as_f64()).sum();

@@ -3,27 +3,158 @@
 //! kernel; the dynamic tail is dense (it is small and changes every
 //! token, so compressing it would cost more than it saves — §7 "not
 //! suitable for dynamic KV").
+//!
+//! Two entry points serve the token loop:
+//!
+//! * [`attend_sparse_scratched`] — one query row through the batch-1
+//!   kernels, reusing an [`AttentionScratch`] so the loop stops
+//!   allocating score buffers per call;
+//! * [`attend_sparse_batched`] — all query rows sharing one
+//!   [`HeadCache`] (a GQA group's query heads) gathered into a single
+//!   activation block and run through the `*_batched` kernel entry
+//!   points, streaming the static K/V segments **once per step** for
+//!   the whole group instead of once per query row.
+//!
+//! The fused path is a pure streaming transform: every per-row float
+//! operation (dynamic-tail dots, scaling, softmax, tail accumulation)
+//! runs through the same helpers as the looped path in the same order,
+//! and the batched GEMM entry points are bit-exact vs. looping batch-1
+//! by the PR 7 contract — so fused output is bit-exact vs. looped.
 
 use super::cache::HeadCache;
 use crate::amx::EventCounters;
 use crate::backend::{Backend, RefBackend};
 use crate::util::bf16::round_f32;
 
-/// Numerically-stable softmax in place.
+/// Numerically-stable softmax in place. Fully-masked rows — all `-inf`
+/// scores, or inputs whose exponentials underflow to a zero (or
+/// non-finite) sum — are handled explicitly: the row becomes all-zero
+/// weights (it attends nowhere) instead of silently keeping whatever
+/// unnormalized values fell out of `exp`.
 pub fn softmax(xs: &mut [f32]) {
-    if xs.is_empty() {
+    softmax_split(xs, &mut []);
+}
+
+/// Softmax over the logical concatenation `head ‖ tail` in place — the
+/// split-cache score row (static segment, then dynamic tail) without
+/// requiring the two parts to be contiguous. Operates in strict
+/// head-then-tail order so a row split across two buffers produces
+/// bit-identical results to the same row held contiguously.
+///
+/// Masked-row contract (shared with [`softmax`]): if every entry is
+/// `-inf`, or the exponential sum is zero or non-finite, both parts are
+/// explicitly zeroed.
+pub fn softmax_split(head: &mut [f32], tail: &mut [f32]) {
+    if head.is_empty() && tail.is_empty() {
         return;
     }
-    let max = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let max = head
+        .iter()
+        .chain(tail.iter())
+        .cloned()
+        .fold(f32::NEG_INFINITY, f32::max);
+    if max == f32::NEG_INFINITY {
+        // fully-masked row: attend nowhere, explicitly
+        head.fill(0.0);
+        tail.fill(0.0);
+        return;
+    }
     let mut sum = 0.0;
-    for x in xs.iter_mut() {
+    for x in head.iter_mut().chain(tail.iter_mut()) {
         *x = (*x - max).exp();
         sum += *x;
     }
-    if sum > 0.0 {
-        for x in xs.iter_mut() {
+    if sum > 0.0 && sum.is_finite() {
+        for x in head.iter_mut().chain(tail.iter_mut()) {
             *x /= sum;
         }
+    } else {
+        // exp underflowed every entry (or produced non-finite garbage):
+        // zero the row rather than leave it unnormalized
+        head.fill(0.0);
+        tail.fill(0.0);
+    }
+}
+
+/// Row-wise softmax over a contiguous `rows × cols` score block, each
+/// row independently through [`softmax`] (masked rows included).
+pub fn softmax_rows(xs: &mut [f32], cols: usize) {
+    if cols == 0 {
+        return;
+    }
+    for row in xs.chunks_mut(cols) {
+        softmax(row);
+    }
+}
+
+/// Reusable per-layer attention scratch: the static and dynamic-tail
+/// score blocks for up to `n_q` query rows. The token loop holds one of
+/// these across layers, heads, and groups so neither the looped nor the
+/// fused attention path allocates score buffers per call.
+///
+/// The static block is kept contiguous (`n_q × n_static`, row-major)
+/// because it is exactly the batched R·V GEMM's activation input; the
+/// dynamic block lives separately so appending tail tokens never
+/// reshapes the static scores.
+#[derive(Clone, Debug, Default)]
+pub struct AttentionScratch {
+    /// Static-segment scores, `n_q × n_static` row-major.
+    scores_static: Vec<f32>,
+    /// Dynamic-tail scores, `n_q × n_dyn` row-major.
+    scores_dyn: Vec<f32>,
+}
+
+impl AttentionScratch {
+    /// Size the score blocks for `n_q` query rows over a cache with
+    /// `n_static`/`n_dyn` tokens. Capacity is retained across calls, so
+    /// steady-state decode steps perform no allocation here.
+    fn reserve(&mut self, n_q: usize, n_static: usize, n_dyn: usize) {
+        self.scores_static.clear();
+        self.scores_static.resize(n_q * n_static, 0.0);
+        self.scores_dyn.clear();
+        self.scores_dyn.resize(n_q * n_dyn, 0.0);
+    }
+}
+
+/// QKᵀ over the dynamic tail for one query row: dense dots in token
+/// order, ticking the same per-token events as the looped path always
+/// has (shared by both attention entry points for bit-exactness).
+fn dyn_tail_scores(hc: &HeadCache, q: &[f32], sd: &mut [f32], ctr: &mut EventCounters) {
+    let hd = hc.head_dim;
+    for (t, s) in sd.iter_mut().enumerate() {
+        let row = &hc.k_dyn[t * hd..(t + 1) * hd];
+        let mut acc = 0.0;
+        for d in 0..hd {
+            acc += round_f32(q[d]) * row[d];
+        }
+        *s = acc;
+        ctr.input_bytes += (hd * 2) as u64;
+        ctr.avx_fma += hd.div_ceil(32) as u64;
+    }
+}
+
+/// Scale one row's split scores and softmax them — static part first,
+/// then the tail, matching the op order of a contiguous score vector.
+fn scale_softmax_row(ss: &mut [f32], sd: &mut [f32], scale: f32) {
+    for s in ss.iter_mut() {
+        *s *= scale;
+    }
+    for s in sd.iter_mut() {
+        *s *= scale;
+    }
+    softmax_split(ss, sd);
+}
+
+/// R·V over the dynamic tail for one query row, accumulating into `out`
+/// (shared by both attention entry points).
+fn dyn_tail_accum(hc: &HeadCache, sd: &[f32], out: &mut [f32], ctr: &mut EventCounters) {
+    let hd = hc.head_dim;
+    for (t, &r) in sd.iter().enumerate() {
+        let row = &hc.v_dyn[t * hd..(t + 1) * hd];
+        for d in 0..hd {
+            out[d] += r * row[d];
+        }
+        ctr.avx_fma += hd.div_ceil(16) as u64;
     }
 }
 
@@ -31,55 +162,116 @@ pub fn softmax(xs: &mut [f32]) {
 /// static segment through `backend`'s sparse kernel. Returns the
 /// `head_dim` output and ticks `ctr` with the kernel events (for the
 /// Fig 15 cost model).
+///
+/// Convenience wrapper over [`attend_sparse_scratched`] for one-shot
+/// callers; hot loops pass a reused [`AttentionScratch`] instead.
 pub fn attend_sparse(
     hc: &HeadCache,
     q: &[f32],
     backend: &Backend,
     ctr: &mut EventCounters,
 ) -> Vec<f32> {
+    let mut scratch = AttentionScratch::default();
+    let mut out = vec![0f32; hc.head_dim];
+    attend_sparse_scratched(hc, q, backend, &mut scratch, &mut out, ctr);
+    out
+}
+
+/// The looped attention path with caller-owned buffers: identical math
+/// to [`attend_sparse`], but scores live in `scratch` and the result is
+/// written into `out` (`head_dim` long) — no per-call allocation in the
+/// token loop.
+pub fn attend_sparse_scratched(
+    hc: &HeadCache,
+    q: &[f32],
+    backend: &Backend,
+    scratch: &mut AttentionScratch,
+    out: &mut [f32],
+    ctr: &mut EventCounters,
+) {
     assert_eq!(q.len(), hc.head_dim);
+    assert_eq!(out.len(), hc.head_dim);
     let scale = 1.0 / (hc.head_dim as f32).sqrt();
     let n_static = hc.n_static;
     let n_dyn = hc.dyn_len();
-    let mut scores = vec![0f32; n_static + n_dyn];
+    scratch.reserve(1, n_static, n_dyn);
 
     // QKᵀ static: q (1 × head_dim) × Kᵀ (head_dim × n_static), sparse
     if n_static > 0 {
         let s = backend.sparse_gemm_bf16(q, 1, &hc.k_static, ctr);
-        scores[..n_static].copy_from_slice(&s);
+        scratch.scores_static.copy_from_slice(&s);
     }
     // QKᵀ dynamic tail: dense dot products
-    for t in 0..n_dyn {
-        let row = &hc.k_dyn[t * hc.head_dim..(t + 1) * hc.head_dim];
-        let mut acc = 0.0;
-        for d in 0..hc.head_dim {
-            acc += round_f32(q[d]) * row[d];
-        }
-        scores[n_static + t] = acc;
-        ctr.input_bytes += (hc.head_dim * 2) as u64;
-        ctr.avx_fma += hc.head_dim.div_ceil(32) as u64;
-    }
-    for s in scores.iter_mut() {
-        *s *= scale;
-    }
-    softmax(&mut scores);
+    dyn_tail_scores(hc, q, &mut scratch.scores_dyn, ctr);
+    scale_softmax_row(&mut scratch.scores_static, &mut scratch.scores_dyn, scale);
 
     // R·V static: r (1 × n_static) × V (n_static × head_dim), sparse
-    let mut out = vec![0f32; hc.head_dim];
     if n_static > 0 {
-        let o = backend.sparse_gemm_bf16(&scores[..n_static], 1, &hc.v_static, ctr);
+        let o = backend.sparse_gemm_bf16(&scratch.scores_static, 1, &hc.v_static, ctr);
         out.copy_from_slice(&o);
+    } else {
+        out.fill(0.0);
     }
     // R·V dynamic tail
-    for t in 0..n_dyn {
-        let r = scores[n_static + t];
-        let row = &hc.v_dyn[t * hc.head_dim..(t + 1) * hc.head_dim];
-        for d in 0..hc.head_dim {
-            out[d] += r * row[d];
-        }
-        ctr.avx_fma += hc.head_dim.div_ceil(16) as u64;
+    dyn_tail_accum(hc, &scratch.scores_dyn, out, ctr);
+}
+
+/// Fused multi-query decode attention over one shared [`HeadCache`]:
+/// the `n_q` query rows that attend over the same static segment (a GQA
+/// group's query heads for one slot) gathered into one `n_q × head_dim`
+/// block. QKᵀ and R·V each run as **one** `sparse_gemm_bf16_batched`
+/// call, so the static K and V segments stream once per step for the
+/// whole group instead of once per query row; the dynamic tail, scaling,
+/// and row softmax run per row through the exact helpers the looped path
+/// uses. Output lands in `out` (`n_q × head_dim`, row-major), bit-exact
+/// vs. calling [`attend_sparse`] row by row.
+pub fn attend_sparse_batched(
+    hc: &HeadCache,
+    q_block: &[f32],
+    n_q: usize,
+    backend: &Backend,
+    scratch: &mut AttentionScratch,
+    out: &mut [f32],
+    ctr: &mut EventCounters,
+) {
+    let hd = hc.head_dim;
+    assert_eq!(q_block.len(), n_q * hd);
+    assert_eq!(out.len(), n_q * hd);
+    if n_q == 0 {
+        return;
     }
-    out
+    let scale = 1.0 / (hd as f32).sqrt();
+    let n_static = hc.n_static;
+    let n_dyn = hc.dyn_len();
+    scratch.reserve(n_q, n_static, n_dyn);
+
+    // QKᵀ static: one batched sparse GEMM over the whole group — the K
+    // static segment streams once, not `n_q` times
+    if n_static > 0 {
+        let s = backend.sparse_gemm_bf16_batched(q_block, n_q, &hc.k_static, ctr);
+        scratch.scores_static.copy_from_slice(&s);
+    }
+    // per-row dynamic tail + scale + row softmax (masked rows explicit)
+    for r in 0..n_q {
+        let qrow = &q_block[r * hd..(r + 1) * hd];
+        let ss = &mut scratch.scores_static[r * n_static..(r + 1) * n_static];
+        let sd = &mut scratch.scores_dyn[r * n_dyn..(r + 1) * n_dyn];
+        dyn_tail_scores(hc, qrow, sd, ctr);
+        scale_softmax_row(ss, sd, scale);
+    }
+    // R·V static: the softmaxed static block is already the batched
+    // GEMM's activation layout — one call streams V once for the group
+    if n_static > 0 {
+        let o = backend.sparse_gemm_bf16_batched(&scratch.scores_static, n_q, &hc.v_static, ctr);
+        out.copy_from_slice(&o);
+    } else {
+        out.fill(0.0);
+    }
+    // R·V dynamic tail per row
+    for r in 0..n_q {
+        let sd = &scratch.scores_dyn[r * n_dyn..(r + 1) * n_dyn];
+        dyn_tail_accum(hc, sd, &mut out[r * hd..(r + 1) * hd], ctr);
+    }
 }
 
 /// Dense-reference attention (the Fig 15 baseline and the numerics
@@ -131,6 +323,60 @@ mod tests {
     }
 
     #[test]
+    fn softmax_masked_rows_become_explicit_zeros() {
+        // all-(-inf) row: attends nowhere → all-zero weights, no NaNs
+        let mut xs = vec![f32::NEG_INFINITY; 4];
+        softmax(&mut xs);
+        assert_eq!(xs, vec![0.0; 4], "masked row must zero, not NaN");
+        // split layout agrees with the contiguous one
+        let mut head = vec![f32::NEG_INFINITY; 2];
+        let mut tail = vec![f32::NEG_INFINITY; 2];
+        softmax_split(&mut head, &mut tail);
+        assert_eq!(head, vec![0.0; 2]);
+        assert_eq!(tail, vec![0.0; 2]);
+        // one live entry among masked ones still normalizes
+        let mut xs = vec![f32::NEG_INFINITY, 0.5, f32::NEG_INFINITY];
+        softmax(&mut xs);
+        assert_eq!(xs, vec![0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn softmax_rows_handles_masked_rows_independently() {
+        // 3 rows × 2 cols: live, masked, live — the masked middle row
+        // zeroes explicitly while its neighbours normalize
+        let mut block = vec![
+            1.0,
+            1.0,
+            f32::NEG_INFINITY,
+            f32::NEG_INFINITY,
+            2.0,
+            0.0,
+        ];
+        softmax_rows(&mut block, 2);
+        assert!((block[0] - 0.5).abs() < 1e-6);
+        assert!((block[1] - 0.5).abs() < 1e-6);
+        assert_eq!(&block[2..4], &[0.0, 0.0], "masked row");
+        assert!((block[4] + block[5] - 1.0).abs() < 1e-6);
+        assert!(block[4] > block[5]);
+        // row-wise application is bit-identical to per-row softmax
+        let mut row = vec![2.0f32, 0.0];
+        softmax(&mut row);
+        assert_eq!(&block[4..6], &row[..]);
+    }
+
+    #[test]
+    fn softmax_split_matches_contiguous_bitwise() {
+        let mut g = XorShift::new(99);
+        let xs = g.normal_vec(12, 2.0);
+        let mut whole = xs.clone();
+        softmax(&mut whole);
+        let (mut head, mut tail) = (xs[..7].to_vec(), xs[7..].to_vec());
+        softmax_split(&mut head, &mut tail);
+        head.extend_from_slice(&tail);
+        assert_eq!(whole, head, "split softmax must be bit-exact");
+    }
+
+    #[test]
     fn sparse_attention_matches_dense_ref_at_zero_sparsity() {
         let mut g = XorShift::new(31);
         let (ctx, d) = (48, 32);
@@ -169,6 +415,56 @@ mod tests {
         }
         assert!(c_amx.tdp_bf16 > 0, "AMX path uses tile compute");
         assert!(c_avx.tdp_bf16 == 0 && c_avx.avx_fma > 0, "AVX path is vector-only");
+    }
+
+    #[test]
+    fn scratched_attention_matches_allocating_wrapper_and_reuses_buffers() {
+        let mut g = XorShift::new(36);
+        let (ctx, d) = (40, 16);
+        let k = g.normal_vec(ctx * d, 1.0);
+        let v = g.normal_vec(ctx * d, 1.0);
+        let mut hc = super::super::cache::HeadCache::from_prefill(&k, &v, ctx, d, 0.3, 0.5);
+        hc.append(&g.normal_vec(d, 1.0), &g.normal_vec(d, 1.0));
+        let mut scratch = AttentionScratch::default();
+        let mut out = vec![0f32; d];
+        for _ in 0..3 {
+            // repeated calls reuse the same scratch; results stay
+            // bit-identical to the fresh-allocation wrapper
+            let q = g.normal_vec(d, 1.0);
+            let mut c1 = EventCounters::default();
+            attend_sparse_scratched(&hc, &q, &Backend::amx(), &mut scratch, &mut out, &mut c1);
+            let mut c2 = EventCounters::default();
+            let want = attend_sparse(&hc, &q, &Backend::amx(), &mut c2);
+            assert_eq!(out, want, "scratched vs wrapper diverged");
+            assert_eq!(c1, c2, "event counters diverged");
+        }
+    }
+
+    #[test]
+    fn batched_attention_is_bit_exact_vs_looped_rows() {
+        let mut g = XorShift::new(37);
+        let (ctx, d, n_q) = (32, 16, 4);
+        let k = g.normal_vec(ctx * d, 1.0);
+        let v = g.normal_vec(ctx * d, 1.0);
+        let mut hc = super::super::cache::HeadCache::from_prefill(&k, &v, ctx, d, 0.3, 0.5);
+        hc.append(&g.normal_vec(d, 1.0), &g.normal_vec(d, 1.0));
+        let qb = g.normal_vec(n_q * d, 1.0);
+        for backend in [Backend::amx(), Backend::avx(), Backend::reference()] {
+            let mut scratch = AttentionScratch::default();
+            let mut fused = vec![0f32; n_q * d];
+            let mut cf = EventCounters::default();
+            attend_sparse_batched(&hc, &qb, n_q, &backend, &mut scratch, &mut fused, &mut cf);
+            for r in 0..n_q {
+                let mut cl = EventCounters::default();
+                let want = attend_sparse(&hc, &qb[r * d..(r + 1) * d], &backend, &mut cl);
+                assert_eq!(
+                    &fused[r * d..(r + 1) * d],
+                    &want[..],
+                    "{} row {r} diverged",
+                    backend.name()
+                );
+            }
+        }
     }
 
     #[test]
@@ -228,5 +524,11 @@ mod tests {
         let mut ctr = EventCounters::default();
         let out = attend_sparse(&hc, &[1.0; 8], &Backend::amx(), &mut ctr);
         assert_eq!(out, vec![0.0; 8]);
+        // fused path on an empty cache is likewise all-zero
+        let b = Backend::amx();
+        let mut scratch = AttentionScratch::default();
+        let mut fused = vec![9.0f32; 16];
+        attend_sparse_batched(&hc, &[1.0; 16], 2, &b, &mut scratch, &mut fused, &mut ctr);
+        assert_eq!(fused, vec![0.0; 16]);
     }
 }

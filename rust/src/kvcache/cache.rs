@@ -144,6 +144,42 @@ impl KvCache {
     }
 }
 
+/// One fused-attention work unit: a (slot, kv-head) [`HeadCache`] whose
+/// static segment is shared by that slot's GQA group of query heads —
+/// the rows `attend_sparse_batched` gathers into one activation block.
+#[derive(Debug)]
+pub struct HeadGroup<'a> {
+    /// Row index into the co-resident batch (ascending slot order).
+    pub slot: usize,
+    /// KV head this group attends through.
+    pub kv_head: usize,
+    /// The shared split cache for this (slot, kv-head).
+    pub cache: &'a HeadCache,
+}
+
+/// Layer-major view over co-resident slots' caches: every (slot,
+/// kv-head) [`HeadCache`] of layer `layer`, slot-major and
+/// kv-head-minor — the gather list the fused attention path walks (and
+/// the shard worker pool scatters; groups are mutually independent, so
+/// any execution order is bit-exact). Slots may hold caches of
+/// different context lengths; each group carries its own segment.
+pub fn layer_head_groups<'a>(
+    caches: &'a [&'a mut KvCache],
+    layer: usize,
+) -> Vec<HeadGroup<'a>> {
+    let mut groups = Vec::with_capacity(caches.len() * caches.first().map_or(0, |c| c.kv_heads));
+    for (slot, cache) in caches.iter().enumerate() {
+        for (kv_head, hc) in cache.heads[layer].iter().enumerate() {
+            groups.push(HeadGroup {
+                slot,
+                kv_head,
+                cache: hc,
+            });
+        }
+    }
+    groups
+}
+
 /// The stock-PyTorch cache behaviour for the §6.2 comparison: every
 /// appended token reallocates and copies the full cache (torch.cat), and
 /// each attention call materializes the GQA repeat.
@@ -247,6 +283,32 @@ mod tests {
         let hc = cache.head_for_query(1, 5, 8);
         // query head 5 → kv head 1 → value 1*10 + 1 + 1 = 12.0
         assert_eq!(hc.v_static.to_dense_f32()[0], 12.0);
+    }
+
+    #[test]
+    fn layer_view_walks_slots_then_kv_heads() {
+        // 2 layers × 2 kv heads, 3 slots with distinct context lengths
+        let mut caches: Vec<KvCache> = (0..3)
+            .map(|s| {
+                let ctx = 4 + s; // unequal static segments per slot
+                KvCache::from_prefill(2, 2, ctx, 4, 0.0, 0.0, |l, h| {
+                    let val = (s * 100 + l * 10 + h) as f32 + 1.0;
+                    (vec![val; ctx * 4], vec![val; ctx * 4])
+                })
+            })
+            .collect();
+        let refs: Vec<&mut KvCache> = caches.iter_mut().collect();
+        let groups = layer_head_groups(&refs, 1);
+        assert_eq!(groups.len(), 3 * 2, "slots × kv_heads per layer");
+        // slot-major, kv-head-minor order
+        let order: Vec<(usize, usize)> = groups.iter().map(|g| (g.slot, g.kv_head)).collect();
+        assert_eq!(order, vec![(0, 0), (0, 1), (1, 0), (1, 1), (2, 0), (2, 1)]);
+        // each group exposes its own slot's segment, layer-selected
+        for g in &groups {
+            assert_eq!(g.cache.n_static, 4 + g.slot, "slot geometry preserved");
+            let want = (g.slot * 100 + 10 + g.kv_head) as f32 + 1.0;
+            assert_eq!(g.cache.v_static.to_dense_f32()[0], want);
+        }
     }
 
     #[test]

@@ -278,6 +278,38 @@ fn cmd_info(args: &Args) -> i32 {
                 rp.selections_computed
             );
             println!("regime table (b1 / fused / prefill):\n{}", rp.regime_table());
+            // fused-attention pricing: one batched QKᵀ+R·V per (slot,
+            // KV head) group streams the static K/V segment once,
+            // amortized over the group's query rows (the GQA ratio; Fig
+            // 15 regime)
+            let n_q = (mc.heads / mc.kv_heads.max(1)).max(1);
+            let looped = sparamx::perf::cost::looped_attention_cost(
+                n_q,
+                cfg.max_ctx,
+                mc.head_dim,
+                cfg.k_sparsity,
+                cfg.v_sparsity,
+                &m,
+            );
+            let fused_c = sparamx::perf::cost::fused_attention_cost(
+                n_q,
+                cfg.max_ctx,
+                mc.head_dim,
+                cfg.k_sparsity,
+                cfg.v_sparsity,
+                &m,
+            );
+            println!(
+                "fused attention [{}]: {} query rows/KV head (GQA {}:{}) @ ctx {} → looped {:.1}µs fused {:.1}µs ({:.2}x)",
+                mc.name,
+                n_q,
+                mc.heads,
+                mc.kv_heads,
+                cfg.max_ctx,
+                looped * 1e6,
+                fused_c * 1e6,
+                looped / fused_c
+            );
         }
         None => println!("decode plan: unknown model '{model_name}'"),
     }

@@ -32,12 +32,13 @@ use crate::amx::EventCounters;
 use crate::backend::{
     Backend, BackendChoice, BackendRegistry, Dtype, GemmShape, PackedOperand, Selection,
 };
-use crate::kvcache::attention::attend_sparse;
-use crate::kvcache::cache::{HeadCache, KvCache};
+use crate::kvcache::attention::{attend_sparse_batched, attend_sparse_scratched, AttentionScratch};
+use crate::kvcache::cache::{layer_head_groups, HeadCache, HeadGroup, KvCache};
 use crate::models::llama::{LinearShape, ModelConfig};
 use crate::models::tinyforward::{
     add_inplace, rmsnorm_rows, rope_rows_from, silu, treat, TinyModel,
 };
+use crate::shard::WorkerPool;
 use std::collections::HashMap;
 use std::sync::Arc;
 
@@ -697,6 +698,12 @@ fn model_config_of(model: &TinyModel) -> ModelConfig {
 pub struct NativeModel {
     pub model: TinyModel,
     pub plan: DecodePlan,
+    /// Optional worker pool for scattering independent KV head groups of
+    /// the fused attention path across cores. Attention shards by head
+    /// group — never by k — so the column-partitioning invariant of the
+    /// sharded *linear* backends is untouched. Left `None` (sequential
+    /// fused attention) unless the engine wires a pool in.
+    attn_pool: Option<Arc<WorkerPool>>,
 }
 
 impl NativeModel {
@@ -722,7 +729,21 @@ impl NativeModel {
         batches: RegimeBatches,
     ) -> NativeModel {
         let plan = DecodePlan::compile_with(registry, choice, &model, sparsity, batches);
-        NativeModel { model, plan }
+        NativeModel {
+            model,
+            plan,
+            attn_pool: None,
+        }
+    }
+
+    /// Wire a worker pool into the fused attention path: independent
+    /// (slot, kv-head) groups of `decode_step_batched` scatter across
+    /// its workers. Ignored (kept for bit-exactness, see the deadlock
+    /// guard in `decode_step_batched`) when the attention backend is
+    /// itself sharded — a nested scatter from inside a worker would
+    /// deadlock the pool.
+    pub fn set_attention_pool(&mut self, pool: Option<Arc<WorkerPool>>) {
+        self.attn_pool = pool;
     }
 
     pub fn vocab(&self) -> usize {
@@ -834,8 +855,9 @@ impl NativeModel {
 
     /// One token of plan-driven decode: every projection runs its
     /// pre-selected kernel on its pre-packed operand, attention runs
-    /// [`attend_sparse`] over the slot's cache (sparse static segment +
-    /// dense dynamic tail), and the new K/V rows append to the tail.
+    /// [`attend_sparse_scratched`] over the slot's cache (sparse static
+    /// segment + dense dynamic tail) through one scratch reused across
+    /// layers and heads, and the new K/V rows append to the tail.
     /// Returns the next-token logits (`vocab` long).
     pub fn decode_step(
         &self,
@@ -849,6 +871,9 @@ impl NativeModel {
         let group = heads / kvh;
         let mut h =
             m.emb[token as usize * h_dim..(token as usize + 1) * h_dim].to_vec();
+        // one scratch reused across every (layer, head) attention call:
+        // the token loop performs no per-call score allocation
+        let mut scratch = AttentionScratch::default();
         for (layer_idx, (lw, lp)) in m.layers.iter().zip(self.plan.layers.iter()).enumerate() {
             let x = rmsnorm_rows(&h, 1, h_dim, &lw.ln1);
             let mut q = lp.wq.run(&x, 1, ctr);
@@ -865,8 +890,14 @@ impl NativeModel {
             let mut ctx = vec![0f32; heads * hd];
             for qh in 0..heads {
                 let hc = &cache.heads[layer_idx][qh / group];
-                let out = attend_sparse(hc, &q[qh * hd..(qh + 1) * hd], &self.plan.attention, ctr);
-                ctx[qh * hd..(qh + 1) * hd].copy_from_slice(&out);
+                attend_sparse_scratched(
+                    hc,
+                    &q[qh * hd..(qh + 1) * hd],
+                    &self.plan.attention,
+                    &mut scratch,
+                    &mut ctx[qh * hd..(qh + 1) * hd],
+                    ctr,
+                );
             }
             let o = lp.wo.run(&ctx, 1, ctr);
             add_inplace(&mut h, &o);
@@ -889,9 +920,14 @@ impl NativeModel {
     /// are gathered into one `nb × hidden` activation block and every
     /// projection runs **one** batched GEMM through the fused-regime
     /// operand, streaming each packed weight block once for the whole
-    /// batch instead of once per slot. Attention and the KV appends stay
-    /// per-slot (each slot owns its cache and position). Returns one
-    /// logits vector per slot, in input order.
+    /// batch instead of once per slot. Attention runs fused per (slot,
+    /// kv-head) group whenever `heads / kv_heads > 1`: the group's query
+    /// rows go through one batched QKᵀ + R·V pair so the static K/V
+    /// segment streams once per step instead of once per query head
+    /// (bit-exact vs. the looped path by the PR 7 batched-GEMM
+    /// invariant). KV appends stay per-slot (each slot owns its cache
+    /// and position). Returns one logits vector per slot, in input
+    /// order.
     ///
     /// `tokens`, `positions`, and `caches` are parallel arrays: row `b`
     /// of the activation block belongs to slot `b`.
@@ -917,6 +953,8 @@ impl NativeModel {
             h[b * h_dim..(b + 1) * h_dim]
                 .copy_from_slice(&m.emb[tok as usize * h_dim..(tok as usize + 1) * h_dim]);
         }
+        // one scratch reused across every layer's attention groups
+        let mut scratch = AttentionScratch::default();
         for (layer_idx, (lw, lp)) in m.layers.iter().zip(self.plan.layers.iter()).enumerate() {
             let x = rmsnorm_rows(&h, nb, h_dim, &lw.ln1);
             let mut q = lp.wq.run_fused(&x, nb, ctr);
@@ -929,6 +967,10 @@ impl NativeModel {
                 rope_rows_from(&mut k[b * kvh * hd..(b + 1) * kvh * hd], 1, kvh, hd, p);
             }
             let mut ctx = vec![0f32; nb * heads * hd];
+            // append every slot's new K/V row *before* any attention so
+            // the fused path sees all tails at position `pos` — bit-exact
+            // vs. the interleaved order (each slot's attention only ever
+            // reads its own cache, which is fully appended either way)
             for b in 0..nb {
                 let kb = &k[b * kvh * hd..(b + 1) * kvh * hd];
                 let vb = &v[b * kvh * hd..(b + 1) * kvh * hd];
@@ -936,11 +978,81 @@ impl NativeModel {
                     caches[b].heads[layer_idx][head]
                         .append(&kb[head * hd..(head + 1) * hd], &vb[head * hd..(head + 1) * hd]);
                 }
-                for qh in 0..heads {
-                    let hc = &caches[b].heads[layer_idx][qh / group];
-                    let qrow = &q[(b * heads + qh) * hd..(b * heads + qh) * hd + hd];
-                    let out = attend_sparse(hc, qrow, &self.plan.attention, ctr);
-                    ctx[(b * heads + qh) * hd..(b * heads + qh) * hd + hd].copy_from_slice(&out);
+            }
+            if group > 1 {
+                // fused path: the `group` query heads sharing a KV head
+                // are contiguous in the q layout, so each (slot, kv-head)
+                // group is one `group × hd` activation block — one
+                // batched QKᵀ + R·V pair per group streams that group's
+                // static K/V segment once per step
+                let groups = layer_head_groups(caches, layer_idx);
+                let q_off =
+                    |g: &HeadGroup| -> usize { (g.slot * heads + g.kv_head * group) * hd };
+                // Scatter independent head groups across the worker pool
+                // when one is wired in — unless the attention backend is
+                // itself sharded (its GEMM would scatter on the same pool
+                // from inside a worker and deadlock).
+                let scatter = self.attn_pool.as_ref().filter(|_| {
+                    groups.len() > 1
+                        && self.plan.attention.kind() != crate::backend::BackendKind::Sharded
+                });
+                if let Some(pool) = scatter {
+                    let backend = &self.plan.attention;
+                    let parts: Vec<(Vec<f32>, EventCounters)> =
+                        pool.parallel_map(groups.len(), |gi| {
+                            let g = &groups[gi];
+                            let off = q_off(g);
+                            let mut local = AttentionScratch::default();
+                            let mut out = vec![0f32; group * hd];
+                            let mut c = EventCounters::default();
+                            attend_sparse_batched(
+                                g.cache,
+                                &q[off..off + group * hd],
+                                group,
+                                backend,
+                                &mut local,
+                                &mut out,
+                                &mut c,
+                            );
+                            (out, c)
+                        });
+                    // deterministic merge: fixed group order regardless of
+                    // worker completion order
+                    for (g, (out, c)) in groups.iter().zip(parts.iter()) {
+                        let off = q_off(g);
+                        ctx[off..off + group * hd].copy_from_slice(out);
+                        ctr.merge(c);
+                    }
+                } else {
+                    for g in &groups {
+                        let off = q_off(g);
+                        attend_sparse_batched(
+                            g.cache,
+                            &q[off..off + group * hd],
+                            group,
+                            &self.plan.attention,
+                            &mut scratch,
+                            &mut ctx[off..off + group * hd],
+                            ctr,
+                        );
+                    }
+                }
+            } else {
+                // MHA (group == 1): no query rows share a static segment,
+                // fall back to the looped scratched path
+                for b in 0..nb {
+                    for qh in 0..heads {
+                        let hc = &caches[b].heads[layer_idx][qh / group];
+                        let qrow = &q[(b * heads + qh) * hd..(b * heads + qh) * hd + hd];
+                        attend_sparse_scratched(
+                            hc,
+                            qrow,
+                            &self.plan.attention,
+                            &mut scratch,
+                            &mut ctx[(b * heads + qh) * hd..(b * heads + qh) * hd + hd],
+                            ctr,
+                        );
+                    }
                 }
             }
             let o = lp.wo.run_fused(&ctx, nb, ctr);

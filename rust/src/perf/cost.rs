@@ -243,6 +243,59 @@ pub fn fused_sparse_speedup(
     looped_sparse_gemm_cost(batch, rows, cols, sparsity, m) / fused
 }
 
+/// Modeled wall time of the *looped* split-cache attention path for one
+/// KV head group with `n_q` query rows: each row runs its own batch-1
+/// QKᵀ (K stored transposed, `head_dim × ctx`, sparse at `k_sparsity`)
+/// and R·V (`ctx × head_dim`, sparse at `v_sparsity`), so the static
+/// K/V segment streams once *per query row* — same shape as
+/// [`looped_sparse_gemm_cost`]. The dense dynamic tail is a few rows of
+/// cache-hot work and is excluded (both paths pay it identically).
+pub fn looped_attention_cost(
+    n_q: usize,
+    ctx: usize,
+    head_dim: usize,
+    k_sparsity: f64,
+    v_sparsity: f64,
+    m: &Machine,
+) -> f64 {
+    n_q as f64
+        * (sparse_gemm_cost(1, head_dim, ctx, k_sparsity, m).time
+            + sparse_gemm_cost(1, ctx, head_dim, v_sparsity, m).time)
+}
+
+/// Modeled wall time of the *fused* attention path for the same group:
+/// one batched QKᵀ and one batched R·V over all `n_q` rows, so each
+/// static K/V segment's stream bytes are read once per step and
+/// amortized over the query rows. At `n_q == 1` this degenerates to the
+/// looped cost exactly (same two batch-1 calls).
+pub fn fused_attention_cost(
+    n_q: usize,
+    ctx: usize,
+    head_dim: usize,
+    k_sparsity: f64,
+    v_sparsity: f64,
+    m: &Machine,
+) -> f64 {
+    sparse_gemm_cost(n_q, head_dim, ctx, k_sparsity, m).time
+        + sparse_gemm_cost(n_q, ctx, head_dim, v_sparsity, m).time
+}
+
+/// Modeled speedup of fused over looped attention for one KV head group:
+/// `looped_attention_cost / fused_attention_cost`. Approaches `n_q` in
+/// the memory-bound long-context regime (Fig 15's setting) and 1.0 when
+/// the group is a single row.
+pub fn fused_attention_speedup(
+    n_q: usize,
+    ctx: usize,
+    head_dim: usize,
+    k_sparsity: f64,
+    v_sparsity: f64,
+    m: &Machine,
+) -> f64 {
+    looped_attention_cost(n_q, ctx, head_dim, k_sparsity, v_sparsity, m)
+        / fused_attention_cost(n_q, ctx, head_dim, k_sparsity, v_sparsity, m)
+}
+
 /// Convenience: AVX sparse GEMM cost.
 pub fn avx_sparse_gemm_cost(
     batch: usize,
@@ -389,6 +442,40 @@ mod tests {
         assert!((four - 4.0 * one).abs() < 1e-15);
         let d1 = dense_gemm_cost(1, 1024, 1024, &m).time;
         assert!((looped_dense_gemm_cost(3, 1024, 1024, &m) - 3.0 * d1).abs() < 1e-15);
+    }
+
+    #[test]
+    fn fused_attention_never_loses_in_fig15_regime() {
+        // acceptance: fused ≤ looped for >1 query row in the modeled
+        // Fig 15 regime (long context, 50% unstructured K/V sparsity).
+        let m = m32();
+        for n_q in [2usize, 4, 8] {
+            let looped = looped_attention_cost(n_q, 4096, 128, 0.5, 0.5, &m);
+            let fused = fused_attention_cost(n_q, 4096, 128, 0.5, 0.5, &m);
+            assert!(fused <= looped, "n_q={n_q}: fused {fused} !<= looped {looped}");
+        }
+    }
+
+    #[test]
+    fn fused_attention_degenerates_to_looped_at_one_row() {
+        let m = m32();
+        let looped = looped_attention_cost(1, 2048, 128, 0.5, 0.3, &m);
+        let fused = fused_attention_cost(1, 2048, 128, 0.5, 0.3, &m);
+        assert!((fused - looped).abs() < 1e-15, "n_q=1 must price identically");
+    }
+
+    #[test]
+    fn fused_attention_speedup_grows_with_group_size() {
+        // the KV stream amortizes over more query rows as the GQA group
+        // (× co-resident slots) grows.
+        let m = m32();
+        let mut last = 1.0;
+        for n_q in [2usize, 4, 8, 16] {
+            let sp = fused_attention_speedup(n_q, 4096, 128, 0.5, 0.5, &m);
+            assert!(sp >= last, "speedup must not shrink with n_q: {sp} < {last}");
+            last = sp;
+        }
+        assert!(last > 1.2, "16-row group should clearly beat looped: {last}");
     }
 
     #[test]

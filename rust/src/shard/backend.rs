@@ -423,6 +423,10 @@ impl LinearBackend for ShardedBackend {
             epochs: self.epochs.swap(0, Ordering::Relaxed),
         })
     }
+
+    fn worker_pool(&self) -> Option<Arc<WorkerPool>> {
+        Some(Arc::clone(&self.pool))
+    }
 }
 
 #[cfg(test)]

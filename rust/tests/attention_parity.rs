@@ -1,0 +1,334 @@
+//! Fused-vs-looped attention parity: `attend_sparse_batched` gathers
+//! all query rows sharing one (slot, KV head) cache into a single pair
+//! of batched GEMMs — QKᵀ over the static segment, then R·V — and must
+//! be **bit-exact** against looping `attend_sparse` row by row, for
+//! every backend (including the sharded wrapper at shards {1, 4}),
+//! every slot count, MHA and GQA head layouts, and every static/dynamic
+//! tail split of the cache.
+//!
+//! The fused call is a pure streaming transform: each static K/V
+//! segment's packed weights are streamed once per step for the whole
+//! query group instead of once per row. A counter test pins that
+//! invariant (`weight_stream_bytes` fused == batch-1, looped == n_q ×),
+//! and a model-level regression pins that the fused attention path
+//! never re-runs backend regime selection inside the token loop.
+
+use sparamx::amx::EventCounters;
+use sparamx::backend::{Backend, BackendChoice, BackendRegistry, CpuCaps};
+use sparamx::kvcache::attention::{attend_sparse, attend_sparse_batched, AttentionScratch};
+use sparamx::kvcache::cache::{HeadCache, KvCache};
+use sparamx::models::plan::{NativeModel, RegimeBatches};
+use sparamx::models::tinyforward::{LayerW, TinyModel};
+use sparamx::shard::{NumaTopology, WorkerPool};
+use sparamx::util::XorShift;
+use std::sync::Arc;
+
+fn sharded_over(inner: Backend, shards: usize) -> Backend {
+    let topo = NumaTopology::modeled(2, 8);
+    let pool = Arc::new(WorkerPool::with_topology(shards, &topo));
+    Backend::sharded(inner, shards, topo, pool)
+}
+
+/// Every backend the matrix sweeps: the three plain implementations
+/// plus the sharded wrapper at shards {1, 4}.
+fn backends() -> Vec<Backend> {
+    vec![
+        Backend::amx(),
+        Backend::avx(),
+        Backend::reference(),
+        sharded_over(Backend::reference(), 1),
+        sharded_over(Backend::reference(), 4),
+        sharded_over(Backend::amx(), 4),
+    ]
+}
+
+/// One (slot, KV head) cache: `ctx` prefill tokens split into the
+/// sparse static segment, then `tail` dynamically appended rows.
+fn head_cache(g: &mut XorShift, ctx: usize, tail: usize, hd: usize) -> HeadCache {
+    let k = g.normal_vec(ctx * hd, 1.0);
+    let v = g.normal_vec(ctx * hd, 1.0);
+    let mut hc = HeadCache::from_prefill(&k, &v, ctx, hd, 0.4, 0.4);
+    for _ in 0..tail {
+        let kr = g.normal_vec(hd, 1.0);
+        let vr = g.normal_vec(hd, 1.0);
+        hc.append(&kr, &vr);
+    }
+    hc
+}
+
+/// Fused call over one (slot, KV head) group vs looping
+/// `attend_sparse` over its rows — must match bitwise, row by row.
+fn check_group(
+    backend: &Backend,
+    hc: &HeadCache,
+    qb: &[f32],
+    group: usize,
+    hd: usize,
+    scratch: &mut AttentionScratch,
+    tag: &str,
+) {
+    let mut fused = vec![0f32; group * hd];
+    let mut cf = EventCounters::default();
+    attend_sparse_batched(hc, qb, group, backend, scratch, &mut fused, &mut cf);
+    for r in 0..group {
+        let row = &qb[r * hd..(r + 1) * hd];
+        let mut cl = EventCounters::default();
+        let want = attend_sparse(hc, row, backend, &mut cl);
+        let got = &fused[r * hd..(r + 1) * hd];
+        assert_eq!(got, &want[..], "{tag} row {r} diverged");
+    }
+}
+
+#[test]
+fn fused_attention_bit_exact_across_backends_slots_gqa_and_splits() {
+    let hd = 16usize;
+    // (heads, kv_heads): MHA single head, GQA-degenerate group 4, and
+    // the GQA shape the native model fuses (group 2).
+    let head_layouts = [(1usize, 1usize), (4, 1), (4, 2)];
+    // (static ctx, dynamic tail): static-only, static + tail, tail-only.
+    let splits = [(24usize, 0usize), (24, 3), (0, 3)];
+    for backend in backends() {
+        for &slots in &[1usize, 2, 3, 8] {
+            for &(heads, kvh) in &head_layouts {
+                let group = heads / kvh;
+                for &(ctx, tail) in &splits {
+                    let seed = (slots * 1000 + heads * 100 + kvh * 10 + ctx + tail) as u64;
+                    let mut g = XorShift::new(8100 + seed);
+                    // one scratch shared across every group in the
+                    // step, as the decode loop reuses it per layer
+                    let mut scratch = AttentionScratch::default();
+                    for s in 0..slots {
+                        // slot-varying lengths: no two slots share a shape
+                        let (sctx, stail) = if ctx > 0 {
+                            (ctx + s, tail)
+                        } else {
+                            (0, tail + s)
+                        };
+                        let q = g.normal_vec(heads * hd, 1.0);
+                        for h in 0..kvh {
+                            let hc = head_cache(&mut g, sctx, stail, hd);
+                            let qb = &q[h * group * hd..(h + 1) * group * hd];
+                            let tag = format!(
+                                "{} slots={slots} heads={heads}/{kvh} ctx={sctx} tail={stail} slot={s} kv_head={h}",
+                                backend.name()
+                            );
+                            check_group(&backend, &hc, qb, group, hd, &mut scratch, &tag);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_path_streams_each_static_segment_once_per_step() {
+    // The whole point of the fused path: the static K/V segment's packed
+    // weights stream once for the entire query group. `weight_stream_bytes`
+    // for the fused call must equal a single batch-1 call, while looping
+    // the batch-1 entry pays the stream once per row.
+    let mut g = XorShift::new(8200);
+    let (ctx, hd, n_q) = (32usize, 16usize, 4usize);
+    let hc = head_cache(&mut g, ctx, 1, hd);
+    let qb = g.normal_vec(n_q * hd, 1.0);
+    let backend = Backend::amx();
+
+    let mut c1 = EventCounters::default();
+    let _ = attend_sparse(&hc, &qb[..hd], &backend, &mut c1);
+    assert!(c1.weight_stream_bytes > 0, "AMX path must stream K/V tiles");
+
+    let mut cl = EventCounters::default();
+    for r in 0..n_q {
+        let _ = attend_sparse(&hc, &qb[r * hd..(r + 1) * hd], &backend, &mut cl);
+    }
+
+    let mut scratch = AttentionScratch::default();
+    let mut fused = vec![0f32; n_q * hd];
+    let mut cf = EventCounters::default();
+    attend_sparse_batched(&hc, &qb, n_q, &backend, &mut scratch, &mut fused, &mut cf);
+
+    assert_eq!(
+        cf.weight_stream_bytes,
+        c1.weight_stream_bytes,
+        "fused step must stream each static K/V segment exactly once"
+    );
+    assert_eq!(
+        cl.weight_stream_bytes,
+        n_q as u64 * c1.weight_stream_bytes,
+        "looped path pays the K/V stream once per query row"
+    );
+}
+
+fn toy_model(seed: u64) -> TinyModel {
+    let mut g = XorShift::new(seed);
+    let (h, inter, heads, kvh, hd, vocab) = (16, 24, 4, 2, 4, 256);
+    let mut mk = |n: usize| g.normal_vec(n, 0.3);
+    TinyModel {
+        hidden: h,
+        inter,
+        heads,
+        kv_heads: kvh,
+        head_dim: hd,
+        vocab,
+        emb: mk(vocab * h),
+        layers: (0..2)
+            .map(|_| LayerW {
+                ln1: vec![1.0; h],
+                wq: mk(h * heads * hd),
+                wk: mk(h * kvh * hd),
+                wv: mk(h * kvh * hd),
+                wo: mk(heads * hd * h),
+                ln2: vec![1.0; h],
+                wgate: mk(h * inter),
+                wup: mk(h * inter),
+                wdown: mk(inter * h),
+            })
+            .collect(),
+        ln_f: vec![1.0; h],
+        lm_head: mk(h * vocab),
+    }
+}
+
+fn prefill_slots(nm: &NativeModel, prompts: &[&[u8]]) -> Vec<KvCache> {
+    let mut ctr = EventCounters::default();
+    prompts
+        .iter()
+        .map(|p| nm.prefill(p, 0.0, 0.0, &mut ctr))
+        .collect()
+}
+
+#[test]
+fn fused_gqa_decode_matches_per_slot_looped_decode() {
+    // Model-level parity: the batched GQA decode (fused attention per
+    // (slot, KV head) group) against running each slot through the
+    // single-slot decode path. decode_fused pinned to 1 so both sides
+    // compile the same projection regime — attention fusion is then the
+    // only difference, and it must be bit-exact over multiple steps.
+    let reg = BackendRegistry::with_caps(CpuCaps::all());
+    let nm = NativeModel::with_regimes(
+        &reg,
+        BackendChoice::Auto,
+        toy_model(8300),
+        0.0,
+        RegimeBatches {
+            decode_fused: 1,
+            prefill: 8,
+        },
+    );
+    let prompts: [&[u8]; 3] = [&[1, 2, 3], &[9, 8], &[5, 5, 5, 5]];
+    let mut batched_caches = prefill_slots(&nm, &prompts);
+    let mut looped_caches = batched_caches.clone();
+    let mut tokens = [7u8, 11, 13];
+    let mut positions: Vec<usize> = prompts.iter().map(|p| p.len()).collect();
+    for step in 0..6 {
+        let mut ctr = EventCounters::default();
+        let mut refs: Vec<&mut KvCache> = batched_caches.iter_mut().collect();
+        let fused = nm.decode_step_batched(&tokens, &positions, &mut refs, &mut ctr);
+        for (b, cache) in looped_caches.iter_mut().enumerate() {
+            let mut cl = EventCounters::default();
+            let want = nm.decode_step(tokens[b], positions[b], cache, &mut cl);
+            assert_eq!(
+                fused[b],
+                want,
+                "step {step} slot {b}: fused GQA attention diverged from looped decode"
+            );
+        }
+        for (b, row) in fused.iter().enumerate() {
+            let mut best = 0;
+            for (i, &v) in row.iter().enumerate() {
+                if v > row[best] {
+                    best = i;
+                }
+            }
+            tokens[b] = best as u8;
+            positions[b] += 1;
+        }
+    }
+}
+
+#[test]
+fn pool_scattered_fused_attention_matches_sequential() {
+    // Scattering independent (slot, KV head) groups across the worker
+    // pool must be invisible: same outputs, in order, as the sequential
+    // fused loop. Attention shards by head group, never by k.
+    let reg = BackendRegistry::with_caps(CpuCaps::all());
+    let batches = RegimeBatches {
+        decode_fused: 4,
+        prefill: 8,
+    };
+    let seq = NativeModel::with_regimes(&reg, BackendChoice::Auto, toy_model(8400), 0.0, batches);
+    let mut par =
+        NativeModel::with_regimes(&reg, BackendChoice::Auto, toy_model(8400), 0.0, batches);
+    let topo = NumaTopology::modeled(2, 8);
+    par.set_attention_pool(Some(Arc::new(WorkerPool::with_topology(4, &topo))));
+    let prompts: [&[u8]; 3] = [&[1, 2, 3], &[9, 8], &[5, 5, 5, 5]];
+    let mut seq_caches = prefill_slots(&seq, &prompts);
+    let mut par_caches = seq_caches.clone();
+    let mut tokens = [7u8, 11, 13];
+    let mut positions: Vec<usize> = prompts.iter().map(|p| p.len()).collect();
+    for step in 0..4 {
+        let mut cs = EventCounters::default();
+        let mut refs: Vec<&mut KvCache> = seq_caches.iter_mut().collect();
+        let a = seq.decode_step_batched(&tokens, &positions, &mut refs, &mut cs);
+        let mut cp = EventCounters::default();
+        let mut refs: Vec<&mut KvCache> = par_caches.iter_mut().collect();
+        let b = par.decode_step_batched(&tokens, &positions, &mut refs, &mut cp);
+        assert_eq!(a, b, "step {step}: pool-scattered attention diverged");
+        for (s, row) in a.iter().enumerate() {
+            let mut best = 0;
+            for (i, &v) in row.iter().enumerate() {
+                if v > row[best] {
+                    best = i;
+                }
+            }
+            tokens[s] = best as u8;
+            positions[s] += 1;
+        }
+    }
+}
+
+#[test]
+fn fused_attention_token_loop_never_reruns_regime_selection() {
+    // Backend selection resolves at plan compile; the fused attention
+    // path (including the pool scatter) must never consult the registry
+    // inside the token loop.
+    let reg = BackendRegistry::with_caps(CpuCaps::all());
+    let mut nm = NativeModel::with_regimes(
+        &reg,
+        BackendChoice::Auto,
+        toy_model(8500),
+        0.0,
+        RegimeBatches {
+            decode_fused: 4,
+            prefill: 16,
+        },
+    );
+    let topo = NumaTopology::modeled(2, 8);
+    nm.set_attention_pool(Some(Arc::new(WorkerPool::with_topology(4, &topo))));
+    let at_load = reg.selections_resolved();
+    assert!(at_load > 0, "compile must consult the registry");
+    let prompts: [&[u8]; 3] = [&[1, 2, 3], &[9, 8], &[5, 5, 5, 5]];
+    let mut caches = prefill_slots(&nm, &prompts);
+    let mut tokens = [7u8, 11, 13];
+    let mut positions: Vec<usize> = prompts.iter().map(|p| p.len()).collect();
+    for _step in 0..8 {
+        let mut ctr = EventCounters::default();
+        let mut refs: Vec<&mut KvCache> = caches.iter_mut().collect();
+        let logits = nm.decode_step_batched(&tokens, &positions, &mut refs, &mut ctr);
+        for (b, row) in logits.iter().enumerate() {
+            let mut best = 0;
+            for (i, &v) in row.iter().enumerate() {
+                if v > row[best] {
+                    best = i;
+                }
+            }
+            tokens[b] = best as u8;
+            positions[b] += 1;
+        }
+    }
+    assert_eq!(
+        reg.selections_resolved(),
+        at_load,
+        "fused attention token loop re-ran selection"
+    );
+}
