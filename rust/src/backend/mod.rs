@@ -360,6 +360,15 @@ pub trait LinearBackend: Send + Sync {
 
 /// Cheap, cloneable handle to a [`LinearBackend`] — what call sites
 /// carry (engine, attention, model forward, benches).
+///
+/// The handle's GEMM entry points are also the **kernel fault-recovery
+/// seam**: when a [`crate::fault`] plan is armed, a panic inside the
+/// kernel is caught here, retried once on the same backend (bit-exact —
+/// deterministic faults are spent once fired), and on a second failure
+/// the f32 reference oracle completes the call on the same
+/// backend-agnostic operand while the failure is recorded for registry
+/// quarantine. With no plan armed every entry point is a plain
+/// delegating call.
 #[derive(Clone)]
 pub struct Backend(Arc<dyn LinearBackend>);
 
@@ -422,6 +431,39 @@ impl Backend {
         self.0.supported_dtype(caps, dtype)
     }
 
+    /// Run one GEMM entry point under the kernel fault-recovery ladder
+    /// (see the struct docs). Unarmed: a plain delegating call. Armed:
+    /// attempt → same-backend retry → reference fallback, with the
+    /// failure recorded for quarantine before falling back. Event
+    /// counters merge only from the attempt that produced the returned
+    /// output, so recovered calls account identically to fault-free ones.
+    fn guarded<T>(
+        &self,
+        ctr: &mut EventCounters,
+        f: impl Fn(&dyn LinearBackend, &mut EventCounters) -> T,
+    ) -> T {
+        if !crate::fault::armed() {
+            return f(self.0.as_ref(), ctr);
+        }
+        let name = self.name();
+        for _attempt in 0..2 {
+            let mut tmp = EventCounters::default();
+            let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                crate::fault::on_kernel_call(name);
+                f(self.0.as_ref(), &mut tmp)
+            }));
+            if let Ok(out) = out {
+                ctr.merge(&tmp);
+                return out;
+            }
+        }
+        crate::fault::record_backend_failure(name);
+        let mut tmp = EventCounters::default();
+        let out = f(&RefBackend, &mut tmp);
+        ctr.merge(&tmp);
+        out
+    }
+
     pub fn gemm_bf16(
         &self,
         input: &[f32],
@@ -429,7 +471,7 @@ impl Backend {
         w: &DenseWeights<Bf16>,
         ctr: &mut EventCounters,
     ) -> Vec<f32> {
-        self.0.gemm_bf16(input, batch, w, ctr)
+        self.guarded(ctr, |b, c| b.gemm_bf16(input, batch, w, c))
     }
 
     pub fn sparse_gemm_bf16(
@@ -439,7 +481,7 @@ impl Backend {
         sp: &SparseTensor<Bf16>,
         ctr: &mut EventCounters,
     ) -> Vec<f32> {
-        self.0.sparse_gemm_bf16(input, batch, sp, ctr)
+        self.guarded(ctr, |b, c| b.sparse_gemm_bf16(input, batch, sp, c))
     }
 
     pub fn gemm_int8(
@@ -449,7 +491,7 @@ impl Backend {
         w: &DenseWeights<i8>,
         ctr: &mut EventCounters,
     ) -> Vec<i32> {
-        self.0.gemm_int8(input, batch, w, ctr)
+        self.guarded(ctr, |b, c| b.gemm_int8(input, batch, w, c))
     }
 
     pub fn sparse_gemm_int8(
@@ -459,7 +501,7 @@ impl Backend {
         sp: &SparseTensor<i8>,
         ctr: &mut EventCounters,
     ) -> Vec<i32> {
-        self.0.sparse_gemm_int8(input, batch, sp, ctr)
+        self.guarded(ctr, |b, c| b.sparse_gemm_int8(input, batch, sp, c))
     }
 
     pub fn gemm_bf16_batched(
@@ -469,7 +511,7 @@ impl Backend {
         w: &DenseWeights<Bf16>,
         ctr: &mut EventCounters,
     ) -> Vec<f32> {
-        self.0.gemm_bf16_batched(input, batch, w, ctr)
+        self.guarded(ctr, |b, c| b.gemm_bf16_batched(input, batch, w, c))
     }
 
     pub fn sparse_gemm_bf16_batched(
@@ -479,7 +521,7 @@ impl Backend {
         sp: &SparseTensor<Bf16>,
         ctr: &mut EventCounters,
     ) -> Vec<f32> {
-        self.0.sparse_gemm_bf16_batched(input, batch, sp, ctr)
+        self.guarded(ctr, |b, c| b.sparse_gemm_bf16_batched(input, batch, sp, c))
     }
 
     pub fn gemm_int8_batched(
@@ -489,7 +531,7 @@ impl Backend {
         w: &DenseWeights<i8>,
         ctr: &mut EventCounters,
     ) -> Vec<i32> {
-        self.0.gemm_int8_batched(input, batch, w, ctr)
+        self.guarded(ctr, |b, c| b.gemm_int8_batched(input, batch, w, c))
     }
 
     pub fn sparse_gemm_int8_batched(
@@ -499,7 +541,7 @@ impl Backend {
         sp: &SparseTensor<i8>,
         ctr: &mut EventCounters,
     ) -> Vec<i32> {
-        self.0.sparse_gemm_int8_batched(input, batch, sp, ctr)
+        self.guarded(ctr, |b, c| b.sparse_gemm_int8_batched(input, batch, sp, c))
     }
 
     pub fn predict(
@@ -528,7 +570,7 @@ impl Backend {
         op: &crate::shard::ShardedOperand,
         ctr: &mut EventCounters,
     ) -> Vec<f32> {
-        self.0.gemm_bf16_sharded(input, batch, op, ctr)
+        self.guarded(ctr, |b, c| b.gemm_bf16_sharded(input, batch, op, c))
     }
 
     pub fn gemm_bf16_sharded_batched(
@@ -538,7 +580,7 @@ impl Backend {
         op: &crate::shard::ShardedOperand,
         ctr: &mut EventCounters,
     ) -> Vec<f32> {
-        self.0.gemm_bf16_sharded_batched(input, batch, op, ctr)
+        self.guarded(ctr, |b, c| b.gemm_bf16_sharded_batched(input, batch, op, c))
     }
 
     pub fn shard_stats(&self) -> Option<crate::shard::ShardStatsSnapshot> {

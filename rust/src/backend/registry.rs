@@ -13,7 +13,35 @@
 
 use super::{Backend, BackendChoice, BackendKind, CpuCaps, Dtype, GemmShape};
 use crate::perf::Machine;
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Kernel failures (reference-fallback events recorded via
+/// [`BackendRegistry::record_failure`]) before a backend is quarantined.
+pub const QUARANTINE_THRESHOLD: u32 = 2;
+
+/// Whether `name` — or, for a sharded wrapper, the kernel class it wraps
+/// — is in the quarantined set. Quarantining "amx" also sidelines
+/// "sharded-amx" (same failing kernel class); quarantining
+/// "sharded-amx" alone leaves the unsharded "amx" eligible (the pool,
+/// not the kernel, was the problem).
+/// Lock a health-state mutex, tolerating poison: each critical section
+/// is a single insert/increment, so a panicked holder cannot leave the
+/// maps logically inconsistent.
+fn lock_clean<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn name_quarantined(q: &BTreeSet<String>, name: &str) -> bool {
+    if q.contains(name) {
+        return true;
+    }
+    match name.strip_prefix("sharded-") {
+        Some(inner) => q.contains(inner),
+        None => false,
+    }
+}
 
 /// Outcome of one selection: which backend, which kernel class, and the
 /// modeled time that won.
@@ -49,6 +77,13 @@ pub struct BackendRegistry {
     /// plan compilation, decode, snapshot again — any re-selection on
     /// the serving path ticks this counter.
     resolutions: AtomicU64,
+    /// Backend-health state (PR 9): kernel failures recorded per backend
+    /// name by the engine's recovery drain. A backend that keeps failing
+    /// crosses [`QUARANTINE_THRESHOLD`] and lands in `quarantined`, after
+    /// which `select` skips it and a pinned `resolve` reroutes to the
+    /// reference oracle — the input to degraded-mode re-planning.
+    failure_counts: Mutex<BTreeMap<String, u32>>,
+    quarantined: Mutex<BTreeSet<String>>,
 }
 
 impl BackendRegistry {
@@ -65,7 +100,40 @@ impl BackendRegistry {
             machine: Machine::default(),
             backends: vec![Backend::amx(), Backend::avx(), Backend::reference()],
             resolutions: AtomicU64::new(0),
+            failure_counts: Mutex::new(BTreeMap::new()),
+            quarantined: Mutex::new(BTreeSet::new()),
         }
+    }
+
+    /// Record one kernel failure for the named backend: a GEMM call that
+    /// still panicked after the guarded same-backend retry and had to be
+    /// served by the reference oracle. Returns `true` when this failure
+    /// crossed [`QUARANTINE_THRESHOLD`] and newly quarantined the
+    /// backend — the caller's cue to recompile the decode plan on the
+    /// survivors. The reference backend is never quarantined: it is the
+    /// recovery floor.
+    pub fn record_failure(&self, name: &str) -> bool {
+        if name == "ref" {
+            return false;
+        }
+        let crossed = {
+            let mut counts = lock_clean(&self.failure_counts);
+            let c = counts.entry(name.to_string()).or_insert(0);
+            *c += 1;
+            *c >= QUARANTINE_THRESHOLD
+        };
+        crossed && lock_clean(&self.quarantined).insert(name.to_string())
+    }
+
+    /// Names currently quarantined, in sorted order.
+    pub fn quarantined(&self) -> Vec<String> {
+        lock_clean(&self.quarantined).iter().cloned().collect()
+    }
+
+    /// Whether the named backend (or, for a sharded wrapper, the kernel
+    /// class it wraps) is quarantined.
+    pub fn is_quarantined(&self, name: &str) -> bool {
+        name_quarantined(&lock_clean(&self.quarantined), name)
     }
 
     /// How many selections this registry has computed so far.
@@ -141,9 +209,13 @@ impl BackendRegistry {
     pub fn select(&self, shape: GemmShape, sparsity: f64, dtype: Dtype) -> Selection {
         self.resolutions.fetch_add(1, Ordering::Relaxed);
         let mut best: Option<Selection> = None;
+        let quarantined = lock_clean(&self.quarantined).clone();
         for b in &self.backends {
             if b.kind() == BackendKind::Reference {
                 continue; // fallback only, handled below
+            }
+            if name_quarantined(&quarantined, b.name()) {
+                continue; // degraded mode: failing kernel class sidelined
             }
             if !b.supported_dtype(&self.caps, dtype) {
                 continue;
@@ -153,7 +225,11 @@ impl BackendRegistry {
                     continue;
                 }
                 let t = b.predict(shape, sparsity, dtype, sparse, &self.machine);
-                if best.as_ref().map_or(true, |s| t < s.predicted_s) {
+                let better = match &best {
+                    None => true,
+                    Some(s) => t < s.predicted_s,
+                };
+                if better {
                     best = Some(Selection {
                         backend: b.clone(),
                         use_sparse: sparse,
@@ -188,6 +264,11 @@ impl BackendRegistry {
             .get(kind)
             .expect("standard inventory always holds amx/avx/ref");
         if kind == BackendKind::Reference {
+            return self.reference_fallback(shape, sparsity, dtype);
+        }
+        if self.is_quarantined(backend.name()) {
+            // Pinning does not override quarantine: a backend that kept
+            // failing reroutes to the oracle rather than keep crashing.
             return self.reference_fallback(shape, sparsity, dtype);
         }
         let dense_t = backend.predict(shape, sparsity, dtype, false, &self.machine);
@@ -334,5 +415,76 @@ mod tests {
         let reg = amx_only();
         let sel = reg.select(GemmShape::new(1, 1024, 1024), 0.0, Dtype::Bf16);
         assert!(!sel.use_sparse, "zero sparsity must never plan sparse");
+    }
+
+    #[test]
+    fn repeated_failures_quarantine_and_select_reroutes() {
+        let reg = BackendRegistry::with_caps(CpuCaps::all());
+        let shape = GemmShape::new(1, 4096, 14336);
+        let before = reg.select(shape, 0.5, Dtype::Bf16);
+        let winner = before.backend.name().to_string();
+        assert_ne!(before.backend.kind(), BackendKind::Reference);
+        assert!(
+            !reg.record_failure(&winner),
+            "one failure is below the threshold"
+        );
+        assert!(reg.quarantined().is_empty());
+        assert!(
+            reg.record_failure(&winner),
+            "second failure newly quarantines"
+        );
+        assert!(
+            !reg.record_failure(&winner),
+            "already quarantined — not 'newly'"
+        );
+        assert_eq!(reg.quarantined(), vec![winner.clone()]);
+        assert!(reg.is_quarantined(&winner));
+        let after = reg.select(shape, 0.5, Dtype::Bf16);
+        assert_ne!(
+            after.backend.name(),
+            winner,
+            "select must skip the quarantined backend"
+        );
+    }
+
+    #[test]
+    fn reference_is_never_quarantined() {
+        let reg = BackendRegistry::with_caps(CpuCaps::none());
+        for _ in 0..5 {
+            assert!(!reg.record_failure("ref"));
+        }
+        assert!(reg.quarantined().is_empty());
+        let sel = reg.select(GemmShape::new(1, 512, 512), 0.5, Dtype::Bf16);
+        assert_eq!(sel.backend.kind(), BackendKind::Reference);
+    }
+
+    #[test]
+    fn quarantining_a_kernel_class_sidelines_its_sharded_wrapper() {
+        let topo = crate::shard::NumaTopology::modeled(2, 8);
+        let reg = BackendRegistry::with_caps(CpuCaps::all()).with_shards(4, topo);
+        reg.record_failure("amx");
+        reg.record_failure("amx");
+        assert!(reg.is_quarantined("amx"));
+        assert!(
+            reg.is_quarantined("sharded-amx"),
+            "the sharded wrapper runs the same failing kernel class"
+        );
+        assert!(
+            !reg.is_quarantined("sharded-avx"),
+            "other kernel classes stay eligible"
+        );
+        let shape = GemmShape::new(1, 4096, 14336);
+        let sel = reg.select(shape, 0.5, Dtype::Bf16);
+        assert_ne!(sel.backend.name(), "amx");
+        assert_ne!(sel.backend.name(), "sharded-amx");
+        // pinning does not override quarantine
+        let pinned = reg.resolve(BackendChoice::Amx, shape, 0.5, Dtype::Bf16);
+        assert_eq!(pinned.backend.kind(), BackendKind::Reference);
+        // quarantining only the wrapper leaves the inner kernel eligible
+        let reg2 = BackendRegistry::with_caps(CpuCaps::all()).with_shards(4, topo);
+        reg2.record_failure("sharded-avx");
+        reg2.record_failure("sharded-avx");
+        assert!(reg2.is_quarantined("sharded-avx"));
+        assert!(!reg2.is_quarantined("avx"));
     }
 }

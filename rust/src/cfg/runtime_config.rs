@@ -112,6 +112,11 @@ pub struct RuntimeConfig {
     /// `max_batch`, a number caps it; 1 disables fusion. The
     /// `SPARAMX_BATCH_FUSE` env var overrides at resolve time.
     pub max_batch_fuse: crate::models::BatchFuseChoice,
+    /// Deterministic fault-injection schedule (`--faults` / config
+    /// `"faults"`), e.g. `"worker_panic@epoch=3,shard=1"` — see
+    /// [`crate::fault::FaultPlan`] for the grammar. Empty disables
+    /// injection; the `SPARAMX_FAULTS` env var fills in when empty.
+    pub faults: String,
 }
 
 impl Default for RuntimeConfig {
@@ -133,6 +138,7 @@ impl Default for RuntimeConfig {
             shards: crate::shard::ShardChoice::Auto,
             latency_budget_ms: 0.0,
             max_batch_fuse: crate::models::BatchFuseChoice::Auto,
+            faults: String::new(),
         }
     }
 }
@@ -209,6 +215,7 @@ impl RuntimeConfig {
                         return Err("max_batch_fuse: \"auto\" or uint".into());
                     }
                 }
+                "faults" => cfg.faults = val.as_str().ok_or("faults: string")?.to_string(),
                 other => return Err(format!("unknown config field '{other}'")),
             }
         }
@@ -251,6 +258,12 @@ impl RuntimeConfig {
                 "latency_budget_ms must be >= 0 (0 disables), got {}",
                 self.latency_budget_ms
             ));
+        }
+        if !self.faults.trim().is_empty() {
+            // reject bad fault grammar at config load, not mid-serve
+            self.faults
+                .parse::<crate::fault::FaultPlan>()
+                .map_err(|e| format!("faults: {e}"))?;
         }
         Ok(())
     }
@@ -344,6 +357,22 @@ mod tests {
         let cfg = RuntimeConfig::from_json(r#"{"max_batch_fuse": "1"}"#).unwrap();
         assert_eq!(cfg.max_batch_fuse, BatchFuseChoice::Fixed(1));
         assert!(RuntimeConfig::from_json(r#"{"max_batch_fuse": "many"}"#).is_err());
+    }
+
+    #[test]
+    fn parses_faults_and_rejects_bad_grammar() {
+        assert!(RuntimeConfig::default().faults.is_empty());
+        let cfg = RuntimeConfig::from_json(
+            r#"{"faults": "worker_panic@epoch=3,shard=1;slow_shard@shard=0,delay_us=500"}"#,
+        )
+        .unwrap();
+        assert!(cfg.faults.starts_with("worker_panic"));
+        let err =
+            RuntimeConfig::from_json(r#"{"faults": "worker_panic@epoch=3"}"#).unwrap_err();
+        assert!(err.contains("faults:"), "{err}");
+        assert!(RuntimeConfig::from_json(r#"{"faults": 3}"#).is_err());
+        // empty spec is fine (injection disabled)
+        RuntimeConfig::from_json(r#"{"faults": ""}"#).unwrap();
     }
 
     #[test]

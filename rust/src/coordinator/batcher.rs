@@ -159,6 +159,8 @@ mod tests {
             max_new_tokens,
             arrived: Instant::now(),
             respond: tx,
+            deadline_ms: None,
+            cancel: std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false)),
         }
     }
 

@@ -202,6 +202,13 @@ struct NativePath {
     caches: Vec<Option<KvCache>>,
     /// Accumulated kernel events across prefills and decode steps.
     ctr: EventCounters,
+    /// The registry the plan was compiled against, kept live for
+    /// degraded-mode re-planning: backend quarantines recorded here
+    /// steer the next [`Engine::recompile_plan`] onto the survivors.
+    registry: BackendRegistry,
+    /// Regime batches the plan was compiled at; recompiles reuse them
+    /// (degraded mode changes backends, never geometry).
+    batches: RegimeBatches,
 }
 
 enum EnginePath {
@@ -226,6 +233,13 @@ pub struct Engine {
     /// per-shard timings are drained into [`Metrics`] after every step.
     /// Empty when the plan selected no sharded kernel.
     shard_backends: Vec<Backend>,
+    /// Distinct persistent worker pools reachable from the plan
+    /// (sharded linear backends + the attention scatter pool); their
+    /// respawn counters drain into [`Metrics`] after every step.
+    pools: Vec<Arc<crate::shard::WorkerPool>>,
+    /// The attention scatter pool chosen at load, re-wired into the
+    /// model after every plan recompile.
+    attn_pool: Option<Arc<crate::shard::WorkerPool>>,
     /// Dwell-counted looped↔fused regime state (native path; PJRT's
     /// artifact always runs the full batch).
     hysteresis: RegimeHysteresis,
@@ -297,29 +311,7 @@ impl Engine {
         );
         let slots = (0..geo.decode_batch).map(|_| Slot::empty()).collect();
         let caches = (0..geo.decode_batch).map(|_| None).collect();
-        let mut shard_backends: Vec<Backend> = Vec::new();
-        {
-            let mut add = |b: &Backend| {
-                if b.kind() == crate::backend::BackendKind::Sharded
-                    && !shard_backends.iter().any(|x| x == b)
-                {
-                    shard_backends.push(b.clone());
-                }
-            };
-            for l in &native.plan.layers {
-                for p in [&l.wq, &l.wk, &l.wv, &l.wo, &l.wgate, &l.wup, &l.wdown] {
-                    // any regime's selection may route through a sharded
-                    // backend; all of them drain into the metrics
-                    add(&p.selection.backend);
-                    add(&p.fused.backend);
-                    add(&p.prefill.backend);
-                }
-            }
-            add(&native.plan.lm_head.selection.backend);
-            add(&native.plan.lm_head.fused.backend);
-            add(&native.plan.lm_head.prefill.backend);
-            add(&native.plan.attention);
-        }
+        let shard_backends = collect_shard_backends(&native.plan);
         // Fused-attention scatter pool: independent (slot, kv-head)
         // groups fan out over the sharded backends' persistent worker
         // pool when the plan has one; otherwise spin one up on
@@ -332,7 +324,8 @@ impl Engine {
                 (shards > 1)
                     .then(|| Arc::new(crate::shard::WorkerPool::with_topology(shards, &topo)))
             });
-        native.set_attention_pool(attn_pool);
+        native.set_attention_pool(attn_pool.clone());
+        let pools = collect_pools(&shard_backends, attn_pool.as_ref());
         Ok(Engine {
             geo,
             slots,
@@ -340,12 +333,16 @@ impl Engine {
             step_label: format!("native/{}", selection.backend.name()),
             selection,
             shard_backends,
+            pools,
+            attn_pool,
             hysteresis: RegimeHysteresis::default(),
             cfg,
             path: EnginePath::Native(NativePath {
                 model: native,
                 caches,
                 ctr: EventCounters::default(),
+                registry,
+                batches,
             }),
         })
     }
@@ -399,6 +396,8 @@ impl Engine {
             step_label: "pjrt/xla".to_string(),
             selection,
             shard_backends: Vec::new(),
+            pools: Vec::new(),
+            attn_pool: None,
             hysteresis: RegimeHysteresis::default(),
             cfg,
         })
@@ -451,6 +450,30 @@ impl Engine {
         match &self.path {
             EnginePath::Native(np) => np.ctr.clone(),
             EnginePath::Pjrt(_) => EventCounters::default(),
+        }
+    }
+
+    /// Slots currently holding an in-flight request.
+    pub fn active_slots(&self) -> usize {
+        self.slots.iter().filter(|s| s.active()).count()
+    }
+
+    /// Bytes resident in per-slot KV caches (native path; 0 on PJRT,
+    /// whose monolithic cache never shrinks). Cancelled and finished
+    /// slots free their cache, so chaos tests assert this returns to 0.
+    pub fn kv_resident_bytes(&self) -> usize {
+        match &self.path {
+            EnginePath::Native(np) => np.caches.iter().flatten().map(|c| c.bytes()).sum(),
+            EnginePath::Pjrt(_) => 0,
+        }
+    }
+
+    /// The registry the native plan was compiled against (tests assert
+    /// quarantine state through this; `None` on PJRT).
+    pub fn registry(&self) -> Option<&BackendRegistry> {
+        match &self.path {
+            EnginePath::Native(np) => Some(&np.registry),
+            EnginePath::Pjrt(_) => None,
         }
     }
 
@@ -591,70 +614,29 @@ impl Engine {
     /// One decode step over all active slots (path-dispatched). Returns
     /// the number of active slots processed.
     fn step(&mut self) -> Result<usize> {
+        self.cancel_expired_slots();
         let active: Vec<usize> = (0..self.slots.len())
             .filter(|&i| self.slots[i].active())
             .collect();
         if active.is_empty() {
+            self.drain_recovery();
             return Ok(0);
         }
         // produce the next token per active slot
-        let (next_tokens, dt) = match &mut self.path {
+        let produced = match &mut self.path {
             EnginePath::Native(np) => {
-                let t0 = Instant::now();
-                // regime pick from live slot count: multi-slot steps fuse
-                // into one batched GEMM per projection (unless fusion is
-                // disabled); single-slot steps run the batch-1 plan. The
-                // selections themselves were fixed at plan compile, and a
-                // dwell counter keeps occupancy noise around the fuse
-                // threshold from flipping the regime every step.
-                let want = active.len() > 1 && np.model.plan.fused_batch > 1;
-                let (fused, flipped) = self.hysteresis.decide(want);
-                if flipped {
-                    self.metrics
-                        .regime_flips
-                        .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                }
-                self.metrics.record_decode_regime(active.len(), fused);
-                let next: Vec<(usize, u8)> = if fused {
-                    let tokens: Vec<u8> =
-                        active.iter().map(|&i| self.slots[i].token).collect();
-                    let positions: Vec<usize> =
-                        active.iter().map(|&i| self.slots[i].pos).collect();
-                    // `active` is ascending, so iterating caches in index
-                    // order keeps row b ↔ slot active[b]
-                    let mut cache_refs: Vec<&mut KvCache> = np
-                        .caches
-                        .iter_mut()
-                        .enumerate()
-                        .filter_map(|(i, c)| {
-                            active
-                                .contains(&i)
-                                .then(|| c.as_mut().expect("active slot has a cache"))
-                        })
-                        .collect();
-                    let logits = np.model.decode_step_batched(
-                        &tokens,
-                        &positions,
-                        &mut cache_refs,
-                        &mut np.ctr,
-                    );
-                    active
-                        .iter()
-                        .zip(logits.iter())
-                        .map(|(&i, l)| (i, argmax(l) as u8))
-                        .collect()
+                let slots = &self.slots;
+                let metrics = &self.metrics;
+                let hysteresis = &mut self.hysteresis;
+                let run = || native_produce(np, slots, metrics, hysteresis, &active);
+                if crate::fault::armed() {
+                    // Last-resort backstop: while fault injection is
+                    // live, no panic escapes the engine step. Unarmed
+                    // panics are real bugs and propagate unchanged.
+                    std::panic::catch_unwind(std::panic::AssertUnwindSafe(run)).ok()
                 } else {
-                    let mut next = Vec::with_capacity(active.len());
-                    for &i in &active {
-                        let slot = &self.slots[i];
-                        let cache = np.caches[i].as_mut().expect("active slot has a cache");
-                        let logits =
-                            np.model.decode_step(slot.token, slot.pos, cache, &mut np.ctr);
-                        next.push((i, argmax(&logits) as u8));
-                    }
-                    next
-                };
-                (next, t0.elapsed().as_secs_f64())
+                    Some(run())
+                }
             }
             EnginePath::Pjrt(pj) => {
                 // the AOT artifact always runs the full batch; occupancy
@@ -694,8 +676,18 @@ impl Engine {
                     .iter()
                     .map(|&i| (i, argmax(&logits[i * g.vocab..(i + 1) * g.vocab]) as u8))
                     .collect();
-                (next, dt)
+                Some((next, dt))
             }
+        };
+        let Some((next_tokens, dt)) = produced else {
+            // an injected fault escaped every recovery layer: this
+            // step's model state is unknowable, so drain the active
+            // slots with partial results instead of crashing the server
+            for &i in &active {
+                self.finish_slot_with(i, Some("engine_fault".to_string()));
+            }
+            self.drain_recovery();
+            return Ok(active.len());
         };
         self.metrics.record_step(dt, &self.step_label);
         // drain per-shard timings accumulated by sharded kernels this step
@@ -734,10 +726,116 @@ impl Engine {
         for i in finished {
             self.finish_slot(i);
         }
+        self.drain_recovery();
         Ok(active.len())
     }
 
+    /// Sweep the slots for expired deadlines and disconnected clients:
+    /// each cancelled slot frees its KV cache immediately and answers
+    /// with the partial result decoded so far.
+    fn cancel_expired_slots(&mut self) {
+        let mut expired: Vec<(usize, &'static str)> = Vec::new();
+        for (i, slot) in self.slots.iter().enumerate() {
+            let Some(req) = &slot.req else { continue };
+            if req.cancel.load(std::sync::atomic::Ordering::Relaxed) {
+                expired.push((i, "cancelled"));
+            } else if let Some(d) = req.deadline_ms {
+                if req.arrived.elapsed().as_millis() as u64 >= d {
+                    expired.push((i, "deadline"));
+                }
+            }
+        }
+        for (i, reason) in expired {
+            if reason == "deadline" {
+                self.metrics
+                    .deadline_expirations
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            }
+            self.finish_slot_with(i, Some(reason.to_string()));
+        }
+    }
+
+    /// Post-step recovery drain: surface injected-fault and respawn
+    /// counters, fold kernel-failure records into the registry's health
+    /// state, and recompile the plan when a backend was newly
+    /// quarantined (degraded-mode re-planning).
+    fn drain_recovery(&mut self) {
+        self.metrics
+            .faults_injected
+            .store(crate::fault::injected_count(), std::sync::atomic::Ordering::Relaxed);
+        for p in &self.pools {
+            let r = p.take_respawns();
+            if r > 0 {
+                self.metrics
+                    .worker_respawns
+                    .fetch_add(r, std::sync::atomic::Ordering::Relaxed);
+            }
+        }
+        let failures = crate::fault::drain_backend_failures();
+        if failures.is_empty() {
+            return;
+        }
+        let mut newly_quarantined = false;
+        if let EnginePath::Native(np) = &self.path {
+            for name in &failures {
+                if np.registry.record_failure(name) {
+                    self.metrics
+                        .backend_quarantines
+                        .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    newly_quarantined = true;
+                }
+            }
+        }
+        if newly_quarantined {
+            self.recompile_plan();
+        }
+    }
+
+    /// Degraded-mode re-planning: recompile the decode plan against the
+    /// registry's current health state (quarantined backends are
+    /// skipped; a quarantined pinned backend reroutes to the reference
+    /// oracle). KV caches are untouched — they store plain f32 K/V, not
+    /// backend state — so in-flight slots keep decoding mid-request on
+    /// the new plan without losing a step.
+    fn recompile_plan(&mut self) {
+        let EnginePath::Native(np) = &mut self.path else { return };
+        np.model.plan = DecodePlan::compile_with(
+            &np.registry,
+            self.cfg.backend,
+            &np.model.model,
+            self.cfg.weight_sparsity,
+            np.batches,
+        );
+        self.shard_backends = collect_shard_backends(&np.model.plan);
+        // rewire the attention scatter pool (a fresh plan starts bare)
+        let attn = self
+            .shard_backends
+            .iter()
+            .find_map(|b| b.worker_pool())
+            .or_else(|| self.attn_pool.clone());
+        np.model.set_attention_pool(attn.clone());
+        self.attn_pool = attn;
+        self.pools = collect_pools(&self.shard_backends, self.attn_pool.as_ref());
+        self.selection = np.model.plan.lm_head.selection.clone();
+        self.step_label = format!("native/{}", self.selection.backend.name());
+        self.metrics
+            .plan_recompiles
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        log_info!(
+            "plan recompiled (degraded mode): {} — quarantined [{}]",
+            np.model.plan.describe(),
+            np.registry.quarantined().join(", ")
+        );
+    }
+
     fn finish_slot(&mut self, i: usize) {
+        self.finish_slot_with(i, None)
+    }
+
+    /// Retire slot `i`, releasing its KV cache and answering its
+    /// request. `partial_reason` marks an early stop (deadline,
+    /// cancellation, engine fault); `None` means ran to completion.
+    fn finish_slot_with(&mut self, i: usize, partial_reason: Option<String>) {
         if let EnginePath::Native(np) = &mut self.path {
             np.caches[i] = None; // release the slot's KV memory
         }
@@ -755,6 +853,7 @@ impl Engine {
             total_latency_s: total,
             queue_latency_s: queue_latency,
             per_token_s: slot.decode_time / n as f64,
+            partial_reason,
         };
         self.metrics.record_latency(total);
         self.metrics
@@ -773,6 +872,112 @@ impl Engine {
             }
         }
     }
+}
+
+/// Produce one decode step's tokens on the native path. Free-standing
+/// over disjoint engine fields so the caller can wrap it in
+/// `catch_unwind` (the fault-injection backstop) without borrowing the
+/// whole engine.
+fn native_produce(
+    np: &mut NativePath,
+    slots: &[Slot],
+    metrics: &Metrics,
+    hysteresis: &mut RegimeHysteresis,
+    active: &[usize],
+) -> (Vec<(usize, u8)>, f64) {
+    let t0 = Instant::now();
+    // regime pick from live slot count: multi-slot steps fuse into one
+    // batched GEMM per projection (unless fusion is disabled);
+    // single-slot steps run the batch-1 plan. The selections themselves
+    // were fixed at plan compile, and a dwell counter keeps occupancy
+    // noise around the fuse threshold from flipping the regime every
+    // step.
+    let want = active.len() > 1 && np.model.plan.fused_batch > 1;
+    let (fused, flipped) = hysteresis.decide(want);
+    if flipped {
+        metrics
+            .regime_flips
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    }
+    metrics.record_decode_regime(active.len(), fused);
+    let next: Vec<(usize, u8)> = if fused {
+        let tokens: Vec<u8> = active.iter().map(|&i| slots[i].token).collect();
+        let positions: Vec<usize> = active.iter().map(|&i| slots[i].pos).collect();
+        // `active` is ascending, so iterating caches in index order
+        // keeps row b ↔ slot active[b]
+        let mut cache_refs: Vec<&mut KvCache> = np
+            .caches
+            .iter_mut()
+            .enumerate()
+            .filter_map(|(i, c)| {
+                active
+                    .contains(&i)
+                    .then(|| c.as_mut().expect("active slot has a cache"))
+            })
+            .collect();
+        let logits =
+            np.model
+                .decode_step_batched(&tokens, &positions, &mut cache_refs, &mut np.ctr);
+        active
+            .iter()
+            .zip(logits.iter())
+            .map(|(&i, l)| (i, argmax(l) as u8))
+            .collect()
+    } else {
+        let mut next = Vec::with_capacity(active.len());
+        for &i in active {
+            let slot = &slots[i];
+            let cache = np.caches[i].as_mut().expect("active slot has a cache");
+            let logits = np.model.decode_step(slot.token, slot.pos, cache, &mut np.ctr);
+            next.push((i, argmax(&logits) as u8));
+        }
+        next
+    };
+    (next, t0.elapsed().as_secs_f64())
+}
+
+/// Distinct sharded backends reachable from any regime's selection in
+/// `plan` (their per-shard timings drain into metrics each step).
+fn collect_shard_backends(plan: &DecodePlan) -> Vec<Backend> {
+    let mut out: Vec<Backend> = Vec::new();
+    let mut add = |b: &Backend| {
+        if b.kind() == crate::backend::BackendKind::Sharded && !out.iter().any(|x| x == b) {
+            out.push(b.clone());
+        }
+    };
+    for l in &plan.layers {
+        for p in [&l.wq, &l.wk, &l.wv, &l.wo, &l.wgate, &l.wup, &l.wdown] {
+            // any regime's selection may route through a sharded
+            // backend; all of them drain into the metrics
+            add(&p.selection.backend);
+            add(&p.fused.backend);
+            add(&p.prefill.backend);
+        }
+    }
+    add(&plan.lm_head.selection.backend);
+    add(&plan.lm_head.fused.backend);
+    add(&plan.lm_head.prefill.backend);
+    add(&plan.attention);
+    out
+}
+
+/// Distinct persistent worker pools (by identity) reachable from the
+/// sharded backends plus the attention scatter pool.
+fn collect_pools(
+    shard_backends: &[Backend],
+    attn_pool: Option<&Arc<crate::shard::WorkerPool>>,
+) -> Vec<Arc<crate::shard::WorkerPool>> {
+    let mut pools: Vec<Arc<crate::shard::WorkerPool>> = Vec::new();
+    let candidates = shard_backends
+        .iter()
+        .filter_map(|b| b.worker_pool())
+        .chain(attn_pool.cloned());
+    for p in candidates {
+        if !pools.iter().any(|q| Arc::ptr_eq(q, &p)) {
+            pools.push(p);
+        }
+    }
+    pools
 }
 
 fn argmax(xs: &[f32]) -> usize {

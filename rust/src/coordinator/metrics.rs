@@ -100,6 +100,18 @@ pub struct Metrics {
     /// Accumulated busy seconds per shard lane (index = shard id),
     /// summed across all flushed epochs.
     shard_time_s: Mutex<Vec<f64>>,
+    /// Fault-recovery counters (PR 9). `faults_injected` mirrors the
+    /// fault subsystem's cumulative injection count; the rest count
+    /// recovery actions the serving stack actually took, so a chaos run
+    /// can assert the ladder fired: injected faults → worker respawns /
+    /// epoch retries at the pool, backend quarantines → plan recompiles
+    /// at the engine, deadline expirations at admission/step level.
+    pub faults_injected: AtomicU64,
+    pub worker_respawns: AtomicU64,
+    pub epoch_retries: AtomicU64,
+    pub backend_quarantines: AtomicU64,
+    pub plan_recompiles: AtomicU64,
+    pub deadline_expirations: AtomicU64,
 }
 
 impl Metrics {
@@ -148,10 +160,11 @@ impl Metrics {
     /// add up, per-shard busy seconds accumulate lane-by-lane (the
     /// vector grows to the widest shard count seen).
     pub fn record_shard_stats(&self, snap: &crate::shard::ShardStatsSnapshot) {
-        if snap.epochs == 0 && snap.per_shard_time_s.is_empty() {
+        if snap.epochs == 0 && snap.epoch_retries == 0 && snap.per_shard_time_s.is_empty() {
             return;
         }
         self.shard_epochs.fetch_add(snap.epochs, Ordering::Relaxed);
+        self.epoch_retries.fetch_add(snap.epoch_retries, Ordering::Relaxed);
         let mut times = self.shard_time_s.lock().expect("metrics lock");
         if times.len() < snap.per_shard_time_s.len() {
             times.resize(snap.per_shard_time_s.len(), 0.0);
@@ -217,10 +230,23 @@ impl Metrics {
                     .join(" ")
             }
         };
-        format!(
+        let mut line = format!(
             "completed={done} rejected={rej} tokens={toks} steps={steps} \
              regime_flips={flips} step_mean={step} latency {lat} served_by {paths}"
-        )
+        );
+        let faults = self.faults_injected.load(Ordering::Relaxed);
+        let respawns = self.worker_respawns.load(Ordering::Relaxed);
+        let retries = self.epoch_retries.load(Ordering::Relaxed);
+        let quar = self.backend_quarantines.load(Ordering::Relaxed);
+        let recompiles = self.plan_recompiles.load(Ordering::Relaxed);
+        let deadlines = self.deadline_expirations.load(Ordering::Relaxed);
+        if faults + respawns + retries + quar + recompiles + deadlines > 0 {
+            line.push_str(&format!(
+                " recovery faults={faults} respawns={respawns} retries={retries} \
+                 quarantines={quar} recompiles={recompiles} deadlines={deadlines}"
+            ));
+        }
+        line
     }
 
     /// Structured stats for the server's `{"stats": true}` endpoint:
@@ -325,6 +351,30 @@ impl Metrics {
                 ),
             ),
             ("shard_imbalance", Json::Num(self.shard_imbalance())),
+            (
+                "faults_injected",
+                Json::Num(self.faults_injected.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "worker_respawns",
+                Json::Num(self.worker_respawns.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "epoch_retries",
+                Json::Num(self.epoch_retries.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "backend_quarantines",
+                Json::Num(self.backend_quarantines.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "plan_recompiles",
+                Json::Num(self.plan_recompiles.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "deadline_expirations",
+                Json::Num(self.deadline_expirations.load(Ordering::Relaxed) as f64),
+            ),
         ])
     }
 }
@@ -407,17 +457,21 @@ mod tests {
         m.record_shard_stats(&ShardStatsSnapshot {
             per_shard_time_s: vec![0.001, 0.002],
             epochs: 3,
+            epoch_retries: 1,
         });
         m.record_shard_stats(&ShardStatsSnapshot {
             per_shard_time_s: vec![0.001, 0.002],
             epochs: 2,
+            epoch_retries: 0,
         });
         // empty snapshots (nothing drained this step) are a no-op
         m.record_shard_stats(&ShardStatsSnapshot {
             per_shard_time_s: vec![],
             epochs: 0,
+            epoch_retries: 0,
         });
         assert_eq!(m.shard_epochs.load(Ordering::Relaxed), 5);
+        assert_eq!(m.epoch_retries.load(Ordering::Relaxed), 1);
         let times = m.shard_times_s();
         assert_eq!(times.len(), 2);
         assert!((times[0] - 0.002).abs() < 1e-12);
@@ -449,5 +503,31 @@ mod tests {
         assert_eq!(counts.len(), STEP_BUCKET_BOUNDS_MS.len() + 1);
         let total: f64 = counts.iter().filter_map(|c| c.as_f64()).sum();
         assert_eq!(total as u64, 3);
+    }
+
+    #[test]
+    fn recovery_counters_surface_in_stats_and_report() {
+        let m = Metrics::new();
+        // quiet engines keep the report line free of recovery noise
+        assert!(!m.report().contains("recovery"));
+        let v = Json::parse(&m.stats_json("native").to_string()).unwrap();
+        assert_eq!(v.get("faults_injected").unwrap().as_usize(), Some(0));
+        assert_eq!(v.get("worker_respawns").unwrap().as_usize(), Some(0));
+        m.faults_injected.store(3, Ordering::Relaxed);
+        m.worker_respawns.fetch_add(2, Ordering::Relaxed);
+        m.epoch_retries.fetch_add(1, Ordering::Relaxed);
+        m.backend_quarantines.fetch_add(1, Ordering::Relaxed);
+        m.plan_recompiles.fetch_add(1, Ordering::Relaxed);
+        m.deadline_expirations.fetch_add(4, Ordering::Relaxed);
+        let v = Json::parse(&m.stats_json("native").to_string()).unwrap();
+        assert_eq!(v.get("faults_injected").unwrap().as_usize(), Some(3));
+        assert_eq!(v.get("worker_respawns").unwrap().as_usize(), Some(2));
+        assert_eq!(v.get("epoch_retries").unwrap().as_usize(), Some(1));
+        assert_eq!(v.get("backend_quarantines").unwrap().as_usize(), Some(1));
+        assert_eq!(v.get("plan_recompiles").unwrap().as_usize(), Some(1));
+        assert_eq!(v.get("deadline_expirations").unwrap().as_usize(), Some(4));
+        let r = m.report();
+        assert!(r.contains("respawns=2"), "{r}");
+        assert!(r.contains("deadlines=4"), "{r}");
     }
 }

@@ -1,6 +1,7 @@
 //! Request types for the serving coordinator.
 
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
 /// Unique request id.
@@ -17,6 +18,23 @@ pub struct Request {
     pub arrived: Instant,
     /// Completion channel.
     pub respond: mpsc::Sender<Response>,
+    /// Per-request deadline, measured from `arrived`. When the engine
+    /// reaches a decode step past the deadline the slot is cancelled and
+    /// the partial result is returned with `partial_reason: "deadline"`.
+    /// `None` → no deadline.
+    pub deadline_ms: Option<u64>,
+    /// Cooperative cancellation token. The server's connection thread
+    /// sets this when the client disconnects; the engine checks it each
+    /// step and frees the slot (returning whatever was decoded so far
+    /// with `partial_reason: "cancelled"`).
+    pub cancel: Arc<AtomicBool>,
+}
+
+impl Request {
+    /// Whether this request has been cancelled (client gone).
+    pub fn cancelled(cancel: &Arc<AtomicBool>) -> bool {
+        cancel.load(Ordering::Relaxed)
+    }
 }
 
 /// The engine's reply.
@@ -31,6 +49,12 @@ pub struct Response {
     pub queue_latency_s: f64,
     /// Mean seconds per generated token (decode only).
     pub per_token_s: f64,
+    /// `None` → the request ran to completion. `Some(reason)` → the
+    /// engine stopped early and `tokens` holds a partial result;
+    /// reasons: `"deadline"` (per-request deadline expired),
+    /// `"cancelled"` (client disconnected), `"engine_fault"` (an
+    /// injected fault escaped recovery and the slot was drained).
+    pub partial_reason: Option<String>,
 }
 
 impl Response {
@@ -53,6 +77,8 @@ mod tests {
             max_new_tokens: 4,
             arrived: Instant::now(),
             respond: tx,
+            deadline_ms: None,
+            cancel: Arc::new(AtomicBool::new(false)),
         };
         let r = Response {
             id: 1,
@@ -60,7 +86,16 @@ mod tests {
             total_latency_s: 0.1,
             queue_latency_s: 0.0,
             per_token_s: 0.03,
+            partial_reason: None,
         };
         assert!(r.text().starts_with("hi"));
+    }
+
+    #[test]
+    fn cancel_token_flips_once_set() {
+        let cancel = Arc::new(AtomicBool::new(false));
+        assert!(!Request::cancelled(&cancel));
+        cancel.store(true, Ordering::Relaxed);
+        assert!(Request::cancelled(&cancel));
     }
 }

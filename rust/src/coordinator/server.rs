@@ -7,9 +7,18 @@
 //! Stats:    `{"stats": true}` → serving counters, the per-decode-step
 //!           latency histogram, and which engine path/backend served
 //!           each step (see [`crate::coordinator::metrics`]).
-//! Errors:   `{"error": "..."}` (malformed request, backpressure, or a
-//!           predicted decode time over the `--latency-budget-ms`
-//!           admission budget).
+//! Errors:   structured `{"error": "...", ...}` objects (malformed
+//!           request, backpressure, or a predicted decode time over the
+//!           `--latency-budget-ms` admission budget). Backpressure
+//!           rejections carry a `retry_after_ms` hint derived from the
+//!           plan's predicted step time, so well-behaved clients can
+//!           back off for roughly one request's worth of decode.
+//!
+//! Hardening (PR 9): every accepted socket gets read/write timeouts so
+//! a stalled client cannot pin a connection thread forever, requests
+//! may carry a `deadline_ms`, and a client that disconnects mid-decode
+//! has its slot cancelled (detected by a non-blocking `peek` while the
+//! handler waits on the engine).
 
 use super::batcher::{AdmissionQueue, AdmitError};
 use super::metrics::Metrics;
@@ -19,9 +28,19 @@ use crate::log_info;
 use crate::util::error::Result;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
-use std::time::Instant;
+use std::time::{Duration, Instant};
+
+/// Per-connection socket timeouts: a client that stops sending (read)
+/// or stops draining (write) is disconnected rather than pinning its
+/// handler thread forever.
+pub const READ_TIMEOUT: Duration = Duration::from_secs(30);
+pub const WRITE_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// How often the handler probes for client disconnect while waiting on
+/// the engine.
+const DISCONNECT_PROBE: Duration = Duration::from_millis(100);
 
 /// Everything a client handler needs besides its socket.
 pub struct ServerCtx {
@@ -31,6 +50,9 @@ pub struct ServerCtx {
     pub metrics: Arc<Metrics>,
     /// Engine description string (path + plan) echoed in stats output.
     pub engine: String,
+    /// Plan-predicted seconds per decode step: the basis of the
+    /// `retry_after_ms` backoff hint on queue-full rejections.
+    pub predicted_step_s: f64,
 }
 
 static NEXT_ID: AtomicU64 = AtomicU64::new(1);
@@ -59,6 +81,7 @@ pub fn request_from_json(
         .get("max_new_tokens")
         .and_then(|x| x.as_usize())
         .unwrap_or(default_max_tokens);
+    let deadline_ms = v.get("deadline_ms").and_then(|x| x.as_usize()).map(|x| x as u64);
     let (tx, rx) = mpsc::channel();
     Ok((
         Request {
@@ -67,26 +90,59 @@ pub fn request_from_json(
             max_new_tokens,
             arrived: Instant::now(),
             respond: tx,
+            deadline_ms,
+            cancel: Arc::new(AtomicBool::new(false)),
         },
         rx,
     ))
 }
 
-/// Format a response line.
+/// Format a response line. Partial results (deadline, cancellation,
+/// engine fault) carry a `partial_reason` field.
 pub fn format_response(resp: &super::request::Response) -> String {
-    Json::obj(vec![
+    let mut fields = vec![
         ("id", Json::Num(resp.id as f64)),
         ("text", Json::Str(resp.text())),
         ("tokens", Json::Num(resp.tokens.len() as f64)),
         ("latency_ms", Json::Num(resp.total_latency_s * 1e3)),
         ("queue_ms", Json::Num(resp.queue_latency_s * 1e3)),
         ("per_token_ms", Json::Num(resp.per_token_s * 1e3)),
-    ])
-    .to_string()
+    ];
+    if let Some(reason) = &resp.partial_reason {
+        fields.push(("partial_reason", Json::Str(reason.clone())));
+    }
+    Json::obj(fields).to_string()
 }
 
-fn error_line(msg: &str) -> String {
-    Json::obj(vec![("error", Json::Str(msg.into()))]).to_string()
+/// Structured error object; backpressure rejections attach a
+/// `retry_after_ms` backoff hint.
+fn error_json(msg: &str, retry_after_ms: Option<f64>) -> String {
+    let mut fields = vec![("error", Json::Str(msg.into()))];
+    if let Some(ms) = retry_after_ms {
+        fields.push(("retry_after_ms", Json::Num(ms)));
+    }
+    Json::obj(fields).to_string()
+}
+
+/// Whether the peer has closed its end: a non-blocking `peek` that sees
+/// EOF. Safe to call while no other thread reads this socket (each
+/// connection has exactly one handler thread). `WouldBlock`/`TimedOut`
+/// mean "no data yet, still alive"; any other error counts as closed.
+fn connection_closed(stream: &TcpStream) -> bool {
+    if stream.set_nonblocking(true).is_err() {
+        return false;
+    }
+    let mut byte = [0u8; 1];
+    let closed = match stream.peek(&mut byte) {
+        Ok(0) => true,
+        Ok(_) => false,
+        Err(e) => !matches!(
+            e.kind(),
+            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+        ),
+    };
+    let _ = stream.set_nonblocking(false);
+    closed
 }
 
 /// Whether a parsed request is a stats query (`{"stats": true}`).
@@ -111,28 +167,49 @@ fn handle_client(stream: TcpStream, ctx: Arc<ServerCtx>) {
         }
         // each line is parsed exactly once, then routed
         let reply = match Json::parse(line.trim()) {
-            Err(e) => error_line(&e),
+            Err(e) => error_json(&e, None),
             Ok(v) if is_stats_request(&v) => ctx.metrics.stats_json(&ctx.engine).to_string(),
             Ok(v) => match request_from_json(&v, ctx.default_max_tokens) {
-                Err(e) => error_line(&e),
-                Ok((req, rx)) => match ctx.queue.admit(req) {
-                    Err(AdmitError::Full) => {
-                        ctx.metrics.requests_rejected.fetch_add(1, Ordering::Relaxed);
-                        error_line("queue full, retry later")
-                    }
-                    Err(AdmitError::OverBudget) => {
-                        ctx.metrics.requests_rejected.fetch_add(1, Ordering::Relaxed);
-                        error_line("request exceeds latency budget")
-                    }
-                    Err(AdmitError::Closed) => error_line("server shutting down"),
-                    Ok(()) => {
-                        ctx.metrics.requests_admitted.fetch_add(1, Ordering::Relaxed);
-                        match rx.recv() {
-                            Ok(resp) => format_response(&resp),
-                            Err(_) => error_line("engine dropped request"),
+                Err(e) => error_json(&e, None),
+                Ok((req, rx)) => {
+                    let cancel = Arc::clone(&req.cancel);
+                    match ctx.queue.admit(req) {
+                        Err(AdmitError::Full) => {
+                            ctx.metrics.requests_rejected.fetch_add(1, Ordering::Relaxed);
+                            // back off for roughly one request's worth of
+                            // predicted decode time
+                            let hint =
+                                ctx.predicted_step_s * ctx.default_max_tokens as f64 * 1e3;
+                            error_json("queue full, retry later", Some(hint))
+                        }
+                        Err(AdmitError::OverBudget) => {
+                            ctx.metrics.requests_rejected.fetch_add(1, Ordering::Relaxed);
+                            error_json("request exceeds latency budget", None)
+                        }
+                        Err(AdmitError::Closed) => error_json("server shutting down", None),
+                        Ok(()) => {
+                            ctx.metrics.requests_admitted.fetch_add(1, Ordering::Relaxed);
+                            loop {
+                                match rx.recv_timeout(DISCONNECT_PROBE) {
+                                    Ok(resp) => break format_response(&resp),
+                                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                                        // client gone mid-decode → cancel the
+                                        // slot; the engine still responds (a
+                                        // partial), so this loop terminates.
+                                        if !cancel.load(Ordering::Relaxed)
+                                            && connection_closed(&writer)
+                                        {
+                                            cancel.store(true, Ordering::Relaxed);
+                                        }
+                                    }
+                                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                                        break error_json("engine dropped request", None)
+                                    }
+                                }
+                            }
                         }
                     }
-                },
+                }
             },
         };
         if writer.write_all(reply.as_bytes()).is_err()
@@ -156,6 +233,9 @@ pub fn serve(listener: TcpListener, ctx: ServerCtx) {
     for stream in listener.incoming() {
         match stream {
             Ok(s) => {
+                // stalled peers time out instead of pinning the thread
+                let _ = s.set_read_timeout(Some(READ_TIMEOUT));
+                let _ = s.set_write_timeout(Some(WRITE_TIMEOUT));
                 let c = Arc::clone(&ctx);
                 std::thread::spawn(move || handle_client(s, c));
             }
@@ -208,10 +288,37 @@ mod tests {
             total_latency_s: 0.5,
             queue_latency_s: 0.1,
             per_token_s: 0.01,
+            partial_reason: None,
         };
         let line = format_response(&resp);
         let v = Json::parse(&line).unwrap();
         assert_eq!(v.get("text").unwrap().as_str(), Some("ok"));
         assert_eq!(v.get("tokens").unwrap().as_usize(), Some(2));
+        assert!(v.get("partial_reason").is_none(), "complete → no reason field");
+        let partial = super::super::request::Response {
+            partial_reason: Some("deadline".into()),
+            ..resp
+        };
+        let v = Json::parse(&format_response(&partial)).unwrap();
+        assert_eq!(v.get("partial_reason").unwrap().as_str(), Some("deadline"));
+    }
+
+    #[test]
+    fn parse_request_reads_deadline_and_cancel_starts_clear() {
+        let (req, _rx) =
+            parse_request(r#"{"prompt": "x", "deadline_ms": 250}"#, 8).unwrap();
+        assert_eq!(req.deadline_ms, Some(250));
+        assert!(!req.cancel.load(Ordering::Relaxed));
+        let (req, _rx) = parse_request(r#"{"prompt": "x"}"#, 8).unwrap();
+        assert_eq!(req.deadline_ms, None);
+    }
+
+    #[test]
+    fn error_json_is_structured() {
+        let v = Json::parse(&error_json("queue full, retry later", Some(12.5))).unwrap();
+        assert_eq!(v.get("error").unwrap().as_str(), Some("queue full, retry later"));
+        assert!((v.get("retry_after_ms").unwrap().as_f64().unwrap() - 12.5).abs() < 1e-9);
+        let v = Json::parse(&error_json("bad request", None)).unwrap();
+        assert!(v.get("retry_after_ms").is_none());
     }
 }

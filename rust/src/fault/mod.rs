@@ -1,0 +1,397 @@
+//! Deterministic fault injection for chaos-testing the serving stack.
+//!
+//! A [`FaultPlan`] is parsed from `--faults` / the `SPARAMX_FAULTS` env var
+//! and installed process-globally. Instrumented seams — the shard pool's
+//! job dispatch ([`on_shard_job`]) and the `Backend` handle GEMM entry
+//! points ([`on_kernel_call`]) — consult the plan through cheap
+//! counter-based hooks, so a CI job can replay an exact failure schedule
+//! and assert on the recovery behaviour.
+//!
+//! Grammar: specs separated by `;`, keys by `,`:
+//!
+//! ```text
+//! worker_panic@epoch=3,shard=1           panic shard 1's job in pool epoch 3 (0-based), once
+//! kernel_fail@backend=amx,call=50        panic the 50th GEMM call on backend "amx" (1-based)
+//! kernel_fail@backend=amx,call=5,count=2 panic calls 5 and 6 (defeats the same-backend retry)
+//! slow_shard@shard=0,delay_us=500        delay shard 0's job by 500us in every pool epoch
+//! ```
+//!
+//! Every trigger is counter-based — no clocks, no randomness — so a given
+//! schedule against a given workload injects the same faults on every run.
+//! `worker_panic` and each `kernel_fail` window fire a bounded number of
+//! times (once, resp. `count` times), which is what lets the recovery
+//! ladder (same-backend retry, healed-pool epoch retry) restore bit-exact
+//! output: the retry re-runs the identical computation with the fault spent.
+
+use std::collections::BTreeMap;
+use std::str::FromStr;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+/// Env var holding a fault schedule; `--faults` takes precedence.
+pub const FAULTS_ENV: &str = "SPARAMX_FAULTS";
+
+/// One deterministic fault trigger.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FaultSpec {
+    /// Panic the job for `shard` in pool epoch `epoch` (0-based), at most once.
+    WorkerPanic { epoch: u64, shard: usize },
+    /// Panic GEMM calls `[call, call + count)` (1-based, counted per
+    /// backend name) on the named backend.
+    KernelFail { backend: String, call: u64, count: u64 },
+    /// Sleep `delay_us` before running `shard`'s job, every pool epoch.
+    SlowShard { shard: usize, delay_us: u64 },
+}
+
+/// A parsed fault schedule.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub specs: Vec<FaultSpec>,
+}
+
+impl FaultPlan {
+    /// Parse a `;`-separated list of fault specs. Empty input (or only
+    /// separators/whitespace) yields an empty, unarmed plan.
+    pub fn parse(text: &str) -> Result<FaultPlan, String> {
+        let mut specs = Vec::new();
+        for part in text.split(';') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            specs.push(parse_spec(part)?);
+        }
+        Ok(FaultPlan { specs })
+    }
+}
+
+impl FromStr for FaultPlan {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        FaultPlan::parse(s)
+    }
+}
+
+fn parse_spec(text: &str) -> Result<FaultSpec, String> {
+    let (kind, rest) = text
+        .split_once('@')
+        .ok_or_else(|| format!("fault spec `{text}` is missing `@` (expected kind@key=value,...)"))?;
+    let mut keys: BTreeMap<&str, &str> = BTreeMap::new();
+    for kv in rest.split(',') {
+        let (k, v) = kv
+            .split_once('=')
+            .ok_or_else(|| format!("fault spec `{text}`: `{kv}` is not key=value"))?;
+        if keys.insert(k.trim(), v.trim()).is_some() {
+            return Err(format!("fault spec `{text}`: duplicate key `{}`", k.trim()));
+        }
+    }
+    let num = |key: &str| -> Result<u64, String> {
+        keys.get(key)
+            .ok_or_else(|| format!("fault spec `{text}` is missing `{key}=`"))?
+            .parse::<u64>()
+            .map_err(|_| format!("fault spec `{text}`: `{key}` must be an unsigned integer"))
+    };
+    let allow = |allowed: &[&str]| -> Result<(), String> {
+        for k in keys.keys() {
+            if !allowed.contains(k) {
+                return Err(format!("fault spec `{text}`: unknown key `{k}`"));
+            }
+        }
+        Ok(())
+    };
+    match kind.trim() {
+        "worker_panic" => {
+            allow(&["epoch", "shard"])?;
+            Ok(FaultSpec::WorkerPanic { epoch: num("epoch")?, shard: num("shard")? as usize })
+        }
+        "kernel_fail" => {
+            allow(&["backend", "call", "count"])?;
+            let backend = keys
+                .get("backend")
+                .ok_or_else(|| format!("fault spec `{text}` is missing `backend=`"))?
+                .to_string();
+            if backend.is_empty() {
+                return Err(format!("fault spec `{text}`: `backend` must be non-empty"));
+            }
+            let call = num("call")?;
+            if call == 0 {
+                return Err(format!("fault spec `{text}`: `call` is 1-based, must be >= 1"));
+            }
+            let count = if keys.contains_key("count") { num("count")? } else { 1 };
+            if count == 0 {
+                return Err(format!("fault spec `{text}`: `count` must be >= 1"));
+            }
+            Ok(FaultSpec::KernelFail { backend, call, count })
+        }
+        "slow_shard" => {
+            allow(&["shard", "delay_us"])?;
+            Ok(FaultSpec::SlowShard { shard: num("shard")? as usize, delay_us: num("delay_us")? })
+        }
+        other => Err(format!(
+            "unknown fault kind `{other}` (expected worker_panic, kernel_fail, or slow_shard)"
+        )),
+    }
+}
+
+/// Armed runtime state for one installed plan.
+struct ArmedPlan {
+    plan: FaultPlan,
+    /// Per-spec fire counter: `worker_panic` fires while 0, a
+    /// `kernel_fail` window fires while below its `count`. `slow_shard`
+    /// never consults it.
+    fired: Vec<AtomicU64>,
+    /// Per-backend GEMM call counters (1-based, per installed plan).
+    calls: Mutex<BTreeMap<String, u64>>,
+}
+
+static ARMED: AtomicBool = AtomicBool::new(false);
+static STATE: Mutex<Option<Arc<ArmedPlan>>> = Mutex::new(None);
+static INJECTED: AtomicU64 = AtomicU64::new(0);
+static FAILURES: Mutex<Vec<String>> = Mutex::new(Vec::new());
+
+/// Lock that shrugs off poisoning: an injected panic may unwind through a
+/// thread that observed these globals, and the data is plain counters.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Install `plan` process-globally, resetting all injection counters and
+/// pending failure records. An empty plan leaves injection disarmed.
+pub fn install(plan: FaultPlan) {
+    let armed = !plan.specs.is_empty();
+    let state = ArmedPlan {
+        fired: plan.specs.iter().map(|_| AtomicU64::new(0)).collect(),
+        calls: Mutex::new(BTreeMap::new()),
+        plan,
+    };
+    *lock(&STATE) = Some(Arc::new(state));
+    INJECTED.store(0, Ordering::Relaxed);
+    lock(&FAILURES).clear();
+    ARMED.store(armed, Ordering::Release);
+}
+
+/// Disarm injection and reset all counters and failure records.
+pub fn clear() {
+    ARMED.store(false, Ordering::Release);
+    *lock(&STATE) = None;
+    INJECTED.store(0, Ordering::Relaxed);
+    lock(&FAILURES).clear();
+}
+
+/// Parse and install `text` when non-empty, otherwise fall back to the
+/// `SPARAMX_FAULTS` env var. Returns whether a non-empty plan is armed.
+pub fn install_str_or_env(text: &str) -> Result<bool, String> {
+    let source = if text.trim().is_empty() {
+        std::env::var(FAULTS_ENV).unwrap_or_default()
+    } else {
+        text.to_string()
+    };
+    if source.trim().is_empty() {
+        return Ok(false);
+    }
+    let plan: FaultPlan = source.parse()?;
+    let armed = !plan.specs.is_empty();
+    install(plan);
+    Ok(armed)
+}
+
+/// Cheap check the instrumented seams gate on: true iff a non-empty plan
+/// is installed.
+#[inline]
+pub fn armed() -> bool {
+    ARMED.load(Ordering::Acquire)
+}
+
+/// Total faults injected (panics + delays) since the last install/clear.
+pub fn injected_count() -> u64 {
+    INJECTED.load(Ordering::Relaxed)
+}
+
+fn state() -> Option<Arc<ArmedPlan>> {
+    if !armed() {
+        return None;
+    }
+    lock(&STATE).clone()
+}
+
+/// Shard-pool seam: called once per scattered job with the pool's 0-based
+/// epoch index and the job (= shard) index. May sleep (`slow_shard`) or
+/// panic (`worker_panic`); the pool catches the panic and surfaces it as
+/// an `EpochError`.
+pub fn on_shard_job(epoch: u64, shard: usize) {
+    let Some(st) = state() else { return };
+    for (i, spec) in st.plan.specs.iter().enumerate() {
+        match spec {
+            FaultSpec::SlowShard { shard: s, delay_us } if *s == shard => {
+                INJECTED.fetch_add(1, Ordering::Relaxed);
+                std::thread::sleep(Duration::from_micros(*delay_us));
+            }
+            FaultSpec::WorkerPanic { epoch: e, shard: s } if *e == epoch && *s == shard => {
+                if st.fired[i].swap(1, Ordering::Relaxed) == 0 {
+                    INJECTED.fetch_add(1, Ordering::Relaxed);
+                    panic!("injected worker_panic (epoch {epoch}, shard {shard})");
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Backend-handle seam: called once per GEMM entry with the backend's
+/// name. Counts calls per backend (1-based) and panics while inside a
+/// matching `kernel_fail` window; the handle catches the panic, retries
+/// once on the same backend, then falls back to the reference kernel.
+pub fn on_kernel_call(backend: &str) {
+    let Some(st) = state() else { return };
+    let call = {
+        let mut calls = lock(&st.calls);
+        let c = calls.entry(backend.to_string()).or_insert(0);
+        *c += 1;
+        *c
+    };
+    for (i, spec) in st.plan.specs.iter().enumerate() {
+        if let FaultSpec::KernelFail { backend: b, call: first, count } = spec {
+            if b == backend
+                && call >= *first
+                && call < first + count
+                && st.fired[i].fetch_add(1, Ordering::Relaxed) < *count
+            {
+                INJECTED.fetch_add(1, Ordering::Relaxed);
+                panic!("injected kernel_fail (backend {backend}, call {call})");
+            }
+        }
+    }
+}
+
+/// Record that `name` failed a GEMM call even after the same-backend
+/// retry (the reference fallback completed the call). The engine drains
+/// these into `BackendRegistry` health state to drive quarantine.
+pub fn record_backend_failure(name: &str) {
+    lock(&FAILURES).push(name.to_string());
+}
+
+/// Drain all backend failure records accumulated since the last drain.
+pub fn drain_backend_failures() -> Vec<String> {
+    std::mem::take(&mut *lock(&FAILURES))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    /// Fault state is process-global; tests that install plans serialize
+    /// here and use trigger values no other test's seams can reach.
+    static SERIAL: Mutex<()> = Mutex::new(());
+
+    fn serial() -> MutexGuard<'static, ()> {
+        SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn parses_every_kind_and_count_default() {
+        let plan = FaultPlan::parse(
+            "worker_panic@epoch=3,shard=1; kernel_fail@backend=amx,call=50; \
+             kernel_fail@backend=avx,call=5,count=2; slow_shard@shard=0,delay_us=500",
+        )
+        .unwrap();
+        assert_eq!(
+            plan.specs,
+            vec![
+                FaultSpec::WorkerPanic { epoch: 3, shard: 1 },
+                FaultSpec::KernelFail { backend: "amx".into(), call: 50, count: 1 },
+                FaultSpec::KernelFail { backend: "avx".into(), call: 5, count: 2 },
+                FaultSpec::SlowShard { shard: 0, delay_us: 500 },
+            ]
+        );
+    }
+
+    #[test]
+    fn empty_and_separator_only_inputs_are_unarmed() {
+        assert!(FaultPlan::parse("").unwrap().specs.is_empty());
+        assert!(FaultPlan::parse(" ; ;; ").unwrap().specs.is_empty());
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in [
+            "worker_panic",                          // missing @
+            "worker_panic@epoch=1",                  // missing shard
+            "worker_panic@epoch=1,shard=2,zzz=3",    // unknown key
+            "worker_panic@epoch=x,shard=2",          // non-numeric
+            "worker_panic@epoch=1,epoch=2,shard=0",  // duplicate key
+            "kernel_fail@backend=amx,call=0",        // call is 1-based
+            "kernel_fail@backend=amx,call=1,count=0",
+            "kernel_fail@call=1",                    // missing backend
+            "slow_shard@shard=0",                    // missing delay_us
+            "meteor_strike@shard=0",                 // unknown kind
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "`{bad}` should fail to parse");
+        }
+    }
+
+    #[test]
+    fn worker_panic_fires_exactly_once() {
+        let _g = serial();
+        install(FaultPlan::parse("worker_panic@epoch=999983,shard=7").unwrap());
+        assert!(armed());
+        // Non-matching (epoch, shard) never fires.
+        on_shard_job(999983, 6);
+        on_shard_job(1, 7);
+        let hit = catch_unwind(AssertUnwindSafe(|| on_shard_job(999983, 7)));
+        assert!(hit.is_err(), "matching job should panic");
+        // Spent: the healed-pool retry of the same epoch passes.
+        on_shard_job(999983, 7);
+        assert_eq!(injected_count(), 1);
+        clear();
+        assert!(!armed());
+    }
+
+    #[test]
+    fn kernel_fail_window_counts_calls_per_backend() {
+        let _g = serial();
+        install(FaultPlan::parse("kernel_fail@backend=zz-test,call=3,count=2").unwrap());
+        // Calls 1, 2 pass; other backends never trip the window.
+        on_kernel_call("zz-test");
+        on_kernel_call("zz-other");
+        on_kernel_call("zz-test");
+        // Calls 3 and 4 (the retry) panic; call 5 passes — window spent.
+        assert!(catch_unwind(AssertUnwindSafe(|| on_kernel_call("zz-test"))).is_err());
+        assert!(catch_unwind(AssertUnwindSafe(|| on_kernel_call("zz-test"))).is_err());
+        on_kernel_call("zz-test");
+        assert_eq!(injected_count(), 2);
+        clear();
+    }
+
+    #[test]
+    fn slow_shard_delays_without_failing() {
+        let _g = serial();
+        install(FaultPlan::parse("slow_shard@shard=97,delay_us=1").unwrap());
+        on_shard_job(0, 97);
+        on_shard_job(1, 97);
+        on_shard_job(0, 96);
+        assert_eq!(injected_count(), 2);
+        clear();
+    }
+
+    #[test]
+    fn failure_records_drain_once() {
+        let _g = serial();
+        clear();
+        record_backend_failure("zz-test");
+        record_backend_failure("zz-test");
+        assert_eq!(drain_backend_failures(), vec!["zz-test".to_string(), "zz-test".to_string()]);
+        assert!(drain_backend_failures().is_empty());
+    }
+
+    #[test]
+    fn install_str_or_env_prefers_explicit_text() {
+        let _g = serial();
+        assert!(install_str_or_env("worker_panic@epoch=999991,shard=3").unwrap());
+        assert!(armed());
+        assert!(install_str_or_env("nope").is_err());
+        clear();
+    }
+}

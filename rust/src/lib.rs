@@ -22,6 +22,7 @@
 //! | [`amx`] | AMX tile + AVX-512 instruction simulator and the four kernels |
 //! | [`backend`] | `LinearBackend` dispatch: capability probing, registry, sparsity-aware selection |
 //! | [`shard`] | NUMA/core-partitioned sharded execution: shard plans, persistent worker pool, `ShardedBackend` |
+//! | [`fault`] | deterministic fault injection: `FaultPlan` grammar, counter-based seams, failure records |
 //! | [`perf`] | Sapphire Rapids memory/cost model, pipeline slots, roofline |
 //! | [`models`] | Llama-family shape configs, synthetic weights, per-layer decode plans + native forward |
 //! | [`kvcache`] | §6.2 static-sparse + dynamic-dense KV cache manager |
@@ -36,6 +37,7 @@ pub mod sparse;
 pub mod amx;
 pub mod backend;
 pub mod shard;
+pub mod fault;
 pub mod perf;
 pub mod models;
 pub mod kvcache;

@@ -34,7 +34,7 @@ fn main() {
         Some("info") => cmd_info(&args),
         _ => {
             eprintln!(
-                "sparamx {} — usage:\n  sparamx serve    [--artifacts DIR] [--port P] [--sparsity S] [--backend {b}] [--engine {e}] [--shards {s}] [--max-batch-fuse {f}] [--latency-budget-ms MS]\n  sparamx generate [--artifacts DIR] [--max-tokens N] [--backend {b}] [--engine {e}] [--shards {s}] [--max-batch-fuse {f}] PROMPT...\n  sparamx eval     [--artifacts DIR] [--sparsity S] [--k-sparsity S] [--v-sparsity S] [--int8-kv] [--backend {b}]\n  sparamx info     [--artifacts DIR] [--cores N] [--model NAME] [--sparsity S] [--shards {s}] [--max-batch-fuse {f}]",
+                "sparamx {} — usage:\n  sparamx serve    [--artifacts DIR] [--port P] [--sparsity S] [--backend {b}] [--engine {e}] [--shards {s}] [--max-batch-fuse {f}] [--latency-budget-ms MS] [--faults SPEC]\n  sparamx generate [--artifacts DIR] [--max-tokens N] [--backend {b}] [--engine {e}] [--shards {s}] [--max-batch-fuse {f}] [--faults SPEC] PROMPT...\n  sparamx eval     [--artifacts DIR] [--sparsity S] [--k-sparsity S] [--v-sparsity S] [--int8-kv] [--backend {b}]\n  sparamx info     [--artifacts DIR] [--cores N] [--model NAME] [--sparsity S] [--shards {s}] [--max-batch-fuse {f}]",
                 sparamx::VERSION,
                 b = BackendChoice::HELP,
                 e = EngineChoice::HELP,
@@ -70,8 +70,33 @@ fn config_from(args: &Args) -> RuntimeConfig {
         cfg.max_batch_fuse = args.max_batch_fuse();
     }
     cfg.latency_budget_ms = args.get_parse("latency-budget-ms", cfg.latency_budget_ms);
+    if args.options.contains_key("faults") {
+        cfg.faults = args.faults();
+    }
     cfg.validate().expect("config");
     cfg
+}
+
+/// Arm the deterministic fault-injection plan for this process:
+/// `--faults` / config takes precedence, `SPARAMX_FAULTS` fills in when
+/// empty. Serving continues fault-free on an empty spec.
+fn install_faults(cfg: &RuntimeConfig) {
+    match sparamx::fault::install_str_or_env(&cfg.faults) {
+        Ok(true) => {
+            let source = if cfg.faults.trim().is_empty() {
+                format!("env {}", sparamx::fault::FAULTS_ENV)
+            } else {
+                cfg.faults.clone()
+            };
+            eprintln!("fault injection armed: {source}");
+        }
+        Ok(false) => {}
+        Err(e) => {
+            // config validation already rejects bad --faults; this
+            // catches a malformed SPARAMX_FAULTS env var
+            panic!("fault spec: {e}");
+        }
+    }
 }
 
 /// Build the engine for the resolved `--engine` directive. The PJRT
@@ -90,6 +115,7 @@ fn load_engine(bundle: &Bundle, cfg: &RuntimeConfig) -> (Engine, Option<Runtime>
 
 fn cmd_serve(args: &Args) -> i32 {
     let cfg = config_from(args);
+    install_faults(&cfg);
     let bundle = Bundle::load(&cfg.artifacts_dir).expect("load artifacts");
     let (mut engine, _rt) = load_engine(&bundle, &cfg);
     // plan-aware admission: the compiled plan predicts a decode step's
@@ -125,6 +151,7 @@ fn cmd_serve(args: &Args) -> i32 {
         default_max_tokens: cfg.max_new_tokens,
         metrics: Arc::clone(&engine.metrics),
         engine: engine.describe(),
+        predicted_step_s: engine.predicted_step_s(),
     };
     std::thread::spawn(move || server::serve(listener, ctx));
     engine.run(&queue).expect("engine loop");
@@ -138,6 +165,7 @@ fn cmd_generate(args: &Args) -> i32 {
         eprintln!("generate: missing prompt");
         return 2;
     }
+    install_faults(&cfg);
     let bundle = Bundle::load(&cfg.artifacts_dir).expect("load artifacts");
     let (mut engine, _rt) = load_engine(&bundle, &cfg);
     let queue = Arc::new(AdmissionQueue::new(4));
@@ -149,6 +177,8 @@ fn cmd_generate(args: &Args) -> i32 {
             max_new_tokens: cfg.max_new_tokens,
             arrived: Instant::now(),
             respond: tx,
+            deadline_ms: None,
+            cancel: Arc::new(std::sync::atomic::AtomicBool::new(false)),
         })
         .expect("admit");
     queue.close();

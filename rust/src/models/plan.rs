@@ -998,24 +998,41 @@ impl NativeModel {
                 });
                 if let Some(pool) = scatter {
                     let backend = &self.plan.attention;
-                    let parts: Vec<(Vec<f32>, EventCounters)> =
-                        pool.parallel_map(groups.len(), |gi| {
-                            let g = &groups[gi];
-                            let off = q_off(g);
-                            let mut local = AttentionScratch::default();
-                            let mut out = vec![0f32; group * hd];
-                            let mut c = EventCounters::default();
+                    // Per-worker scratch arena: each pool thread keeps its
+                    // own `AttentionScratch` alive across groups, layers,
+                    // and steps, so the scatter path stops allocating
+                    // fresh score/probability buffers on every group.
+                    thread_local! {
+                        static SCATTER_SCRATCH: std::cell::RefCell<AttentionScratch> =
+                            std::cell::RefCell::new(AttentionScratch::default());
+                    }
+                    let run_group = |gi: usize| {
+                        let g = &groups[gi];
+                        let off = q_off(g);
+                        let mut out = vec![0f32; group * hd];
+                        let mut c = EventCounters::default();
+                        SCATTER_SCRATCH.with(|s| {
                             attend_sparse_batched(
                                 g.cache,
                                 &q[off..off + group * hd],
                                 group,
                                 backend,
-                                &mut local,
+                                &mut s.borrow_mut(),
                                 &mut out,
                                 &mut c,
                             );
-                            (out, c)
                         });
+                        (out, c)
+                    };
+                    let parts: Vec<(Vec<f32>, EventCounters)> =
+                        match pool.try_parallel_map(groups.len(), &run_group) {
+                            Ok(v) => v,
+                            // A worker died mid-epoch: the pool has healed
+                            // itself; recompute every group inline for this
+                            // step. The closure is pure per group, so the
+                            // sequential re-run is bit-exact.
+                            Err(_) => (0..groups.len()).map(&run_group).collect(),
+                        };
                     // deterministic merge: fixed group order regardless of
                     // worker completion order
                     for (g, (out, c)) in groups.iter().zip(parts.iter()) {

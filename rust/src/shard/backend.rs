@@ -16,6 +16,14 @@
 //! epoch barrier ([`crate::perf::cost::sharded_time`]) — the Fig 11
 //! crossover where sharding wins large memory-bound shapes and loses
 //! small batch-1 shapes.
+//!
+//! Recovery contract: a failed pool epoch (a worker panicked —
+//! [`crate::shard::EpochError`]) is retried **once** on the healed pool,
+//! then falls back to running the shards sequentially inline. Both rungs
+//! reuse the exact same per-shard kernels and fixed merge order, so
+//! recovery is bit-exact vs. a fault-free run; per-job event counters
+//! merge only from the attempt that completed. Retries are surfaced in
+//! [`ShardStatsSnapshot::epoch_retries`].
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -37,6 +45,9 @@ pub struct ShardStatsSnapshot {
     pub per_shard_time_s: Vec<f64>,
     /// Pool epochs contributing to the accumulation.
     pub epochs: u64,
+    /// Epochs that had to be retried on the healed pool after a worker
+    /// panic (see the module's recovery contract).
+    pub epoch_retries: u64,
 }
 
 impl ShardStatsSnapshot {
@@ -62,6 +73,8 @@ pub struct ShardedBackend {
     /// Accumulated per-shard kernel seconds since the last snapshot.
     stats: Mutex<Vec<f64>>,
     epochs: AtomicU64,
+    /// Epoch retries since the last snapshot (see module docs).
+    retries: AtomicU64,
 }
 
 impl ShardedBackend {
@@ -84,6 +97,7 @@ impl ShardedBackend {
             pool,
             stats: Mutex::new(Vec::new()),
             epochs: AtomicU64::new(0),
+            retries: AtomicU64::new(0),
         }
     }
 
@@ -113,6 +127,12 @@ impl ShardedBackend {
     /// of `plan` on the worker pool, merge event counters in fixed
     /// shard order, record per-shard times, and concatenate the output
     /// columns. A degenerate single-shard plan runs inline.
+    ///
+    /// Recovery ladder (module docs): a failed pool epoch is retried
+    /// once on the healed pool, then falls back to sequential inline
+    /// execution of the same shards. Every rung is bit-exact vs. a
+    /// fault-free run, and counters merge only from the attempt that
+    /// completed.
     fn run_epoch<T, F>(
         &self,
         plan: &ShardPlan,
@@ -132,32 +152,56 @@ impl ShardedBackend {
             self.record_epoch(&[t0.elapsed().as_secs_f64()]);
             return out;
         }
-        let mut slots: Vec<Option<(Vec<T>, EventCounters, f64)>> = (0..n).map(|_| None).collect();
-        {
-            let slot_refs: Vec<Mutex<&mut Option<(Vec<T>, EventCounters, f64)>>> =
-                slots.iter_mut().map(Mutex::new).collect();
-            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..n)
-                .map(|s| {
-                    let slot = &slot_refs[s];
-                    let run = &run;
-                    Box::new(move || {
-                        let t0 = std::time::Instant::now();
-                        let mut c = EventCounters::default();
-                        let out = run(s, &mut c);
-                        **slot.lock().expect("shard slot lock") =
-                            Some((out, c, t0.elapsed().as_secs_f64()));
-                    }) as Box<dyn FnOnce() + Send + '_>
-                })
-                .collect();
-            self.pool.scatter(jobs);
+        for attempt in 0..2 {
+            let mut slots: Vec<Option<(Vec<T>, EventCounters, f64)>> =
+                (0..n).map(|_| None).collect();
+            let scattered = {
+                let slot_refs: Vec<Mutex<&mut Option<(Vec<T>, EventCounters, f64)>>> =
+                    slots.iter_mut().map(Mutex::new).collect();
+                let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..n)
+                    .map(|s| {
+                        let slot = &slot_refs[s];
+                        let run = &run;
+                        Box::new(move || {
+                            let t0 = std::time::Instant::now();
+                            let mut c = EventCounters::default();
+                            let out = run(s, &mut c);
+                            **slot.lock().expect("shard slot lock") =
+                                Some((out, c, t0.elapsed().as_secs_f64()));
+                        }) as Box<dyn FnOnce() + Send + '_>
+                    })
+                    .collect();
+                self.pool.try_scatter(jobs)
+            };
+            match scattered {
+                Ok(()) => {
+                    let mut parts = Vec::with_capacity(n);
+                    let mut times = vec![0.0f64; n];
+                    for (s, slot) in slots.into_iter().enumerate() {
+                        let (out, c, dt) = slot.expect("shard job ran (barrier passed)");
+                        ctr.merge(&c);
+                        times[s] = dt;
+                        parts.push(out);
+                    }
+                    self.record_epoch(&times);
+                    return merge_col_outputs(&parts, plan, batch, cols);
+                }
+                Err(_) if attempt == 0 => {
+                    self.retries.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(_) => break,
+            }
         }
+        // Sequential inline fallback: same shards, same kernels, same
+        // fixed merge order — identical numerics to the pool path.
         let mut parts = Vec::with_capacity(n);
         let mut times = vec![0.0f64; n];
-        for (s, slot) in slots.into_iter().enumerate() {
-            let (out, c, dt) = slot.expect("shard job ran (barrier passed)");
+        for (s, time) in times.iter_mut().enumerate() {
+            let t0 = std::time::Instant::now();
+            let mut c = EventCounters::default();
+            parts.push(run(s, &mut c));
             ctr.merge(&c);
-            times[s] = dt;
-            parts.push(out);
+            *time = t0.elapsed().as_secs_f64();
         }
         self.record_epoch(&times);
         merge_col_outputs(&parts, plan, batch, cols)
@@ -421,6 +465,7 @@ impl LinearBackend for ShardedBackend {
         Some(ShardStatsSnapshot {
             per_shard_time_s,
             epochs: self.epochs.swap(0, Ordering::Relaxed),
+            epoch_retries: self.retries.swap(0, Ordering::Relaxed),
         })
     }
 
@@ -459,11 +504,13 @@ mod tests {
         let s = ShardStatsSnapshot {
             per_shard_time_s: vec![2.0, 1.0, 4.0],
             epochs: 3,
+            epoch_retries: 0,
         };
         assert!((s.imbalance() - 4.0).abs() < 1e-12);
         let empty = ShardStatsSnapshot {
             per_shard_time_s: vec![],
             epochs: 0,
+            epoch_retries: 0,
         };
         assert_eq!(empty.imbalance(), 1.0);
     }
@@ -489,9 +536,60 @@ mod tests {
         let snap = b.shard_stats().expect("sharded backend reports stats");
         assert_eq!(snap.epochs, 1);
         assert_eq!(snap.per_shard_time_s.len(), 2);
+        assert_eq!(snap.epoch_retries, 0);
         // drained: second snapshot starts empty
         let again = b.shard_stats().expect("still Some");
         assert_eq!(again.epochs, 0);
         assert!(again.per_shard_time_s.is_empty());
+    }
+
+    #[test]
+    fn run_epoch_retries_once_on_worker_panic_and_stays_bit_exact() {
+        let topo = NumaTopology::modeled(1, 4);
+        let pool = Arc::new(WorkerPool::with_topology(2, &topo));
+        let sb = ShardedBackend::new(Backend::reference(), 2, topo, Arc::clone(&pool));
+        let plan = ShardPlan::build(32, 2, &topo);
+        let shard_cols = 16; // 32 cols / 2 shards
+        let fails = AtomicU64::new(0);
+        let mut ctr = EventCounters::default();
+        let out = sb.run_epoch(&plan, 1, 32, &mut ctr, |s, _c| {
+            // shard 1's first invocation dies like a worker fault would
+            if s == 1 && fails.fetch_add(1, Ordering::SeqCst) == 0 {
+                panic!("injected shard failure");
+            }
+            vec![(s as f32) + 1.0; shard_cols]
+        });
+        let mut want = vec![1.0f32; shard_cols];
+        want.extend(vec![2.0f32; shard_cols]);
+        assert_eq!(out, want, "retry reproduces the fault-free output exactly");
+        let snap = sb.shard_stats().expect("stats");
+        assert_eq!(snap.epoch_retries, 1);
+        assert_eq!(snap.epochs, 1, "only the successful attempt is recorded");
+        assert_eq!(pool.respawns(), 1, "the panicked worker was replaced");
+    }
+
+    #[test]
+    fn run_epoch_falls_back_to_sequential_after_two_failed_attempts() {
+        let topo = NumaTopology::modeled(1, 4);
+        let pool = Arc::new(WorkerPool::with_topology(2, &topo));
+        let sb = ShardedBackend::new(Backend::reference(), 2, topo, Arc::clone(&pool));
+        let plan = ShardPlan::build(32, 2, &topo);
+        let shard_cols = 16;
+        let fails = AtomicU64::new(0);
+        let mut ctr = EventCounters::default();
+        let out = sb.run_epoch(&plan, 1, 32, &mut ctr, |s, _c| {
+            // shard 0 dies on both pool attempts; the sequential inline
+            // fallback (third invocation) completes it
+            if s == 0 && fails.fetch_add(1, Ordering::SeqCst) < 2 {
+                panic!("injected shard failure");
+            }
+            vec![(s as f32) + 1.0; shard_cols]
+        });
+        let mut want = vec![1.0f32; shard_cols];
+        want.extend(vec![2.0f32; shard_cols]);
+        assert_eq!(out, want, "sequential fallback is the bit-exact oracle");
+        let snap = sb.shard_stats().expect("stats");
+        assert_eq!(snap.epoch_retries, 1);
+        assert_eq!(snap.epochs, 1);
     }
 }

@@ -9,6 +9,8 @@
 //! * [`pool::WorkerPool`] — persistent worker threads with per-worker
 //!   mailboxes and an epoch barrier (replaces per-call thread spawning
 //!   in `util/threadpool.rs`, which is now a shim over this pool);
+//!   panicked workers are respawned on the next scatter and a failed
+//!   epoch surfaces as [`pool::EpochError`] instead of re-panicking;
 //! * [`backend::ShardedBackend`] — wraps any inner `LinearBackend`,
 //!   runs shards in parallel, and merges outputs by column
 //!   concatenation in fixed shard order — bit-exact vs. the unsharded
@@ -28,4 +30,4 @@ pub use plan::{
     merge_col_outputs, partitions_performed, NumaTopology, ShardChoice, ShardPlan,
     ShardedOperand, COLS_PER_BLOCK, SHARDS_ENV,
 };
-pub use pool::WorkerPool;
+pub use pool::{EpochError, WorkerPool};

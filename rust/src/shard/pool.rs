@@ -1,5 +1,5 @@
-//! [`WorkerPool`]: persistent worker threads with per-worker mailboxes
-//! and an epoch barrier.
+//! [`WorkerPool`]: persistent worker threads with per-worker mailboxes,
+//! an epoch barrier, and self-healing on worker panic.
 //!
 //! The paper's deployment pins one worker per partition for the process
 //! lifetime (§7: the `weight_value_index` thread partition is computed
@@ -12,50 +12,96 @@
 //! Execution model:
 //!
 //! * every worker owns a **mailbox** (FIFO + condvar) and sleeps on it;
-//! * [`WorkerPool::scatter`] posts one closure per shard — shard `i`
+//! * [`WorkerPool::try_scatter`] posts one closure per shard — shard `i`
 //!   goes to worker `i * workers / shards`, keeping consecutive shards
 //!   on consecutive workers (contiguous NUMA placement when the worker
-//!   range is split across nodes);
+//!   range is split across nodes). A worker's jobs are posted under a
+//!   single mailbox lock, so a worker observes either none or all of its
+//!   epoch's jobs;
 //! * a shared **epoch barrier** (pending counter + condvar) blocks the
-//!   caller until every posted job ran — which is also what makes the
-//!   scoped-borrow transmute below sound;
-//! * worker panics are caught, the epoch still completes, and the panic
-//!   is re-raised on the caller so a broken shard can't hang the pool.
+//!   caller until every posted job ran or was abandoned — which is also
+//!   what makes the scoped-borrow transmute below sound;
+//! * a job panic **kills its worker**: the worker drains its remaining
+//!   queued jobs (same epoch) so the barrier still completes, flags
+//!   itself dead, and exits. The epoch then reports the failed job
+//!   indices through [`EpochError`] instead of re-panicking, and the next
+//!   scatter **heals** the pool by joining dead workers and spawning
+//!   replacements (counted in [`WorkerPool::respawns`]);
+//! * the legacy entry points ([`WorkerPool::scatter`],
+//!   [`WorkerPool::parallel_for`], [`WorkerPool::parallel_map`]) keep the
+//!   old contract and re-raise a failed epoch as a panic; recovery-aware
+//!   callers use the `try_` forms;
+//! * deterministic fault injection ([`crate::fault`]) hooks every
+//!   scattered job with its (epoch, job index) pair, so a pinned
+//!   `SPARAMX_FAULTS` schedule replays the exact same failure.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+/// An epoch that completed with failed jobs: the indicated job indices
+/// did not run (their job panicked, or their worker died before reaching
+/// them). The pool stays usable — dead workers are respawned on the next
+/// scatter.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EpochError {
+    /// 0-based index of the epoch that failed.
+    pub epoch: u64,
+    /// Ascending indices of jobs that did not run to completion.
+    pub failed_jobs: Vec<usize>,
+}
+
+impl std::fmt::Display for EpochError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "shard epoch {} failed: jobs {:?} did not complete",
+            self.epoch, self.failed_jobs
+        )
+    }
+}
+
+impl std::error::Error for EpochError {}
+
 /// One worker's job queue. `closed` tells the worker to exit once the
-/// queue drains (set by `Drop`).
+/// queue drains (set by `Drop`). Jobs carry their epoch index so a dying
+/// worker can report which ones it abandoned.
 struct Mailbox {
-    queue: Mutex<(VecDeque<Job>, bool)>,
+    queue: Mutex<(VecDeque<(usize, Job)>, bool)>,
     ready: Condvar,
 }
 
-/// Epoch barrier: jobs outstanding in the current scatter, plus whether
-/// any of them panicked.
+/// Epoch barrier: jobs outstanding in the current scatter, plus the
+/// indices of jobs that did not complete.
 struct Barrier {
-    state: Mutex<(usize, bool)>,
+    state: Mutex<(usize, Vec<usize>)>,
     done: Condvar,
 }
 
 struct Shared {
     mailboxes: Vec<Mailbox>,
     barrier: Barrier,
+    /// Set by a worker that is exiting after a panicked job; cleared by
+    /// `heal()` when the replacement thread is spawned.
+    dead: Vec<AtomicBool>,
 }
 
 /// Fixed-size persistent worker pool (workers spawned once, at
-/// construction; see module docs).
+/// construction, and respawned individually after a panicked job; see
+/// module docs).
 pub struct WorkerPool {
     shared: Arc<Shared>,
-    handles: Vec<std::thread::JoinHandle<()>>,
+    handles: Mutex<Vec<Option<std::thread::JoinHandle<()>>>>,
     /// Serializes scatters: the epoch barrier tracks one epoch at a time.
     submit: Mutex<()>,
     workers: usize,
     epochs: AtomicU64,
+    /// Cumulative workers respawned since construction.
+    respawns_total: AtomicU64,
+    /// Respawns not yet drained by [`WorkerPool::take_respawns`].
+    respawns_pending: AtomicU64,
     /// NUMA node hint per worker (from the topology the pool was built
     /// for); purely advisory in this simulated setting.
     node_hints: Vec<usize>,
@@ -81,26 +127,23 @@ impl WorkerPool {
                 })
                 .collect(),
             barrier: Barrier {
-                state: Mutex::new((0, false)),
+                state: Mutex::new((0, Vec::new())),
                 done: Condvar::new(),
             },
+            dead: (0..workers).map(|_| AtomicBool::new(false)).collect(),
         });
         let handles = (0..workers)
-            .map(|w| {
-                let shared = Arc::clone(&shared);
-                std::thread::Builder::new()
-                    .name(format!("sparamx-shard-{w}"))
-                    .spawn(move || worker_loop(&shared, w))
-                    .expect("spawn pool worker")
-            })
+            .map(|w| Some(spawn_worker(&shared, w)))
             .collect();
         let node_hints = (0..workers).map(|w| topo.node_of(w, workers)).collect();
         WorkerPool {
             shared,
-            handles,
+            handles: Mutex::new(handles),
             submit: Mutex::new(()),
             workers,
             epochs: AtomicU64::new(0),
+            respawns_total: AtomicU64::new(0),
+            respawns_pending: AtomicU64::new(0),
             node_hints,
         }
     }
@@ -115,40 +158,94 @@ impl WorkerPool {
         self.node_hints[w]
     }
 
-    /// Barrier epochs completed so far (one per [`WorkerPool::scatter`]
-    /// that posted at least one job) — lets tests assert the same
-    /// persistent workers served every epoch.
+    /// Barrier epochs completed so far (one per scatter that posted at
+    /// least one job, failed epochs included) — lets tests assert the
+    /// same persistent workers served every epoch.
     pub fn epochs(&self) -> u64 {
         self.epochs.load(Ordering::Relaxed)
     }
 
+    /// Cumulative workers respawned since construction.
+    pub fn respawns(&self) -> u64 {
+        self.respawns_total.load(Ordering::Relaxed)
+    }
+
+    /// Drain the respawn counter (the engine pulls this into its
+    /// `worker_respawns` metric every step).
+    pub fn take_respawns(&self) -> u64 {
+        self.respawns_pending.swap(0, Ordering::Relaxed)
+    }
+
+    /// Join workers that died on a panicked job and spawn replacements.
+    /// Runs under the submit lock at every scatter entry, so the pool is
+    /// whole again before any new jobs are posted.
+    fn heal(&self) {
+        let mut handles = self.handles.lock().expect("pool handles lock");
+        for w in 0..self.workers {
+            if !self.shared.dead[w].swap(false, Ordering::Acquire) {
+                continue;
+            }
+            if let Some(h) = handles[w].take() {
+                let _ = h.join();
+            }
+            handles[w] = Some(spawn_worker(&self.shared, w));
+            self.respawns_total.fetch_add(1, Ordering::Relaxed);
+            self.respawns_pending.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
     /// Run one epoch: post each job to its worker's mailbox, then block
-    /// on the barrier until all of them finished. Job `i` of `n` runs on
-    /// worker `i * workers / n` (consecutive jobs → consecutive
-    /// workers). Panics in a job are re-raised here after the epoch
-    /// completes.
-    pub fn scatter<'scope>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 'scope>>) {
+    /// on the barrier until all of them finished or were abandoned. Job
+    /// `i` of `n` runs on worker `i * workers / n` (consecutive jobs →
+    /// consecutive workers). Dead workers from a previous epoch are
+    /// respawned before posting. Returns [`EpochError`] listing the jobs
+    /// that did not complete, if any.
+    pub fn try_scatter<'scope>(
+        &self,
+        jobs: Vec<Box<dyn FnOnce() + Send + 'scope>>,
+    ) -> Result<(), EpochError> {
         if jobs.is_empty() {
-            return;
+            return Ok(());
         }
         let _serial = self.submit.lock().expect("pool submit lock");
+        self.heal();
         let n = jobs.len();
+        let epoch = self.epochs.load(Ordering::Relaxed);
         {
             let mut st = self.shared.barrier.state.lock().expect("pool barrier lock");
             debug_assert_eq!(st.0, 0, "epoch barrier must be idle between scatters");
-            *st = (n, false);
+            st.0 = n;
+            st.1.clear();
         }
+        // Group each worker's jobs so they are posted under a single
+        // mailbox lock: a worker then observes either none or all of its
+        // epoch's jobs, which is what lets a panicking worker drain
+        // exactly its own leftovers before exiting.
+        let mut per_worker: Vec<Vec<(usize, Job)>> =
+            (0..self.workers).map(|_| Vec::new()).collect();
         for (i, job) in jobs.into_iter().enumerate() {
+            // Fault-injection seam: every job is tagged with its (epoch,
+            // index) pair so a pinned schedule replays deterministically.
+            let armed: Box<dyn FnOnce() + Send + 'scope> = Box::new(move || {
+                crate::fault::on_shard_job(epoch, i);
+                job();
+            });
             // SAFETY: the barrier wait below does not return until every
-            // posted job has run to completion, so any borrow captured by
-            // `job` (lifetime 'scope, which outlives this call) is live
-            // for the job's whole execution. The 'static erasure never
-            // lets a job outlive its borrows.
-            let job: Job = unsafe {
-                std::mem::transmute::<Box<dyn FnOnce() + Send + 'scope>, Job>(job)
+            // posted job has run to completion or been dropped unrun, so
+            // any borrow captured by `job` (lifetime 'scope, which
+            // outlives this call) is live for the job's whole execution.
+            // The 'static erasure never lets a job outlive its borrows.
+            let armed: Job = unsafe {
+                std::mem::transmute::<Box<dyn FnOnce() + Send + 'scope>, Job>(armed)
             };
-            let mb = &self.shared.mailboxes[i * self.workers / n];
-            mb.queue.lock().expect("pool mailbox lock").0.push_back(job);
+            per_worker[i * self.workers / n].push((i, armed));
+        }
+        for (w, batch) in per_worker.into_iter().enumerate() {
+            if batch.is_empty() {
+                continue;
+            }
+            let mb = &self.shared.mailboxes[w];
+            mb.queue.lock().expect("pool mailbox lock").0.extend(batch);
             mb.ready.notify_one();
         }
         let mut st = self.shared.barrier.state.lock().expect("pool barrier lock");
@@ -160,30 +257,43 @@ impl WorkerPool {
                 .wait(st)
                 .expect("pool barrier wait");
         }
-        let panicked = st.1;
-        st.1 = false;
+        let mut failed = std::mem::take(&mut st.1);
         drop(st);
         self.epochs.fetch_add(1, Ordering::Relaxed);
-        if panicked {
+        if failed.is_empty() {
+            Ok(())
+        } else {
+            failed.sort_unstable();
+            Err(EpochError { epoch, failed_jobs: failed })
+        }
+    }
+
+    /// Legacy epoch entry point: like [`WorkerPool::try_scatter`] but a
+    /// failed epoch re-raises as a panic on the caller.
+    pub fn scatter<'scope>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 'scope>>) {
+        if self.try_scatter(jobs).is_err() {
             panic!("worker pool job panicked");
         }
     }
 
     /// Run `f(i)` for every `i in 0..n`, work-stealing via an atomic
     /// cursor over the persistent workers. Inline when there is nothing
-    /// to parallelize (the old `ThreadPool` contract).
-    pub fn parallel_for<F>(&self, n: usize, f: F)
+    /// to parallelize (the old `ThreadPool` contract). Returns
+    /// [`EpochError`] if any lane panicked — note the surviving lanes
+    /// keep draining the cursor, so indices other than the panicked ones
+    /// still complete.
+    pub fn try_parallel_for<F>(&self, n: usize, f: F) -> Result<(), EpochError>
     where
         F: Fn(usize) + Sync,
     {
         if n == 0 {
-            return;
+            return Ok(());
         }
         if self.workers == 1 || n == 1 {
             for i in 0..n {
                 f(i);
             }
-            return;
+            return Ok(());
         }
         let cursor = AtomicUsize::new(0);
         let lanes = self.workers.min(n);
@@ -200,11 +310,25 @@ impl WorkerPool {
                 }) as Box<dyn FnOnce() + Send + '_>
             })
             .collect();
-        self.scatter(jobs);
+        self.try_scatter(jobs)
     }
 
-    /// Map `f` over `0..n` collecting results in order.
-    pub fn parallel_map<T, F>(&self, n: usize, f: F) -> Vec<T>
+    /// Legacy form of [`WorkerPool::try_parallel_for`]: re-raises a
+    /// failed epoch as a panic.
+    pub fn parallel_for<F>(&self, n: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        if self.try_parallel_for(n, f).is_err() {
+            panic!("worker pool job panicked");
+        }
+    }
+
+    /// Map `f` over `0..n` collecting results in order. On
+    /// [`EpochError`] the partially-written results are discarded —
+    /// recovery-aware callers re-run inline (bit-exact, the closure is
+    /// pure per index).
+    pub fn try_parallel_map<T, F>(&self, n: usize, f: F) -> Result<Vec<T>, EpochError>
     where
         T: Send + Default + Clone,
         F: Fn(usize) -> T + Sync,
@@ -212,11 +336,24 @@ impl WorkerPool {
         let mut out = vec![T::default(); n];
         {
             let slots: Vec<Mutex<&mut T>> = out.iter_mut().map(Mutex::new).collect();
-            self.parallel_for(n, |i| {
+            self.try_parallel_for(n, |i| {
                 **slots[i].lock().expect("slot lock") = f(i);
-            });
+            })?;
         }
-        out
+        Ok(out)
+    }
+
+    /// Legacy form of [`WorkerPool::try_parallel_map`]: re-raises a
+    /// failed epoch as a panic.
+    pub fn parallel_map<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send + Default + Clone,
+        F: Fn(usize) -> T + Sync,
+    {
+        match self.try_parallel_map(n, f) {
+            Ok(v) => v,
+            Err(_) => panic!("worker pool job panicked"),
+        }
     }
 }
 
@@ -226,8 +363,11 @@ impl Drop for WorkerPool {
             mb.queue.lock().expect("pool mailbox lock").1 = true;
             mb.ready.notify_all();
         }
-        for h in self.handles.drain(..) {
-            let _ = h.join();
+        let mut handles = self.handles.lock().expect("pool handles lock");
+        for h in handles.iter_mut() {
+            if let Some(h) = h.take() {
+                let _ = h.join();
+            }
         }
     }
 }
@@ -236,11 +376,20 @@ impl std::fmt::Debug for WorkerPool {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "WorkerPool({} workers, {} epochs)",
+            "WorkerPool({} workers, {} epochs, {} respawns)",
             self.workers,
-            self.epochs()
+            self.epochs(),
+            self.respawns()
         )
     }
+}
+
+fn spawn_worker(shared: &Arc<Shared>, w: usize) -> std::thread::JoinHandle<()> {
+    let shared = Arc::clone(shared);
+    std::thread::Builder::new()
+        .name(format!("sparamx-shard-{w}"))
+        .spawn(move || worker_loop(&shared, w))
+        .expect("spawn pool worker")
 }
 
 fn worker_loop(shared: &Shared, w: usize) {
@@ -258,13 +407,28 @@ fn worker_loop(shared: &Shared, w: usize) {
                 q = mb.ready.wait(q).expect("pool mailbox wait");
             }
         };
-        let Some(job) = job else { return };
-        let panicked =
-            std::panic::catch_unwind(std::panic::AssertUnwindSafe(job)).is_err();
-        let mut st = shared.barrier.state.lock().expect("pool barrier lock");
+        let Some((idx, job)) = job else { return };
+        let panicked = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job)).is_err();
         if panicked {
-            st.1 = true;
+            // This worker is going down. Drain its remaining queued jobs
+            // (all from the same epoch — scatter posts a worker's batch
+            // atomically) so the barrier still completes, flag the worker
+            // dead for heal(), and exit the thread.
+            let abandoned: Vec<usize> = {
+                let mut q = mb.queue.lock().expect("pool mailbox lock");
+                q.0.drain(..).map(|(i, _)| i).collect()
+            };
+            shared.dead[w].store(true, Ordering::Release);
+            let mut st = shared.barrier.state.lock().expect("pool barrier lock");
+            st.1.push(idx);
+            st.1.extend(&abandoned);
+            st.0 -= 1 + abandoned.len();
+            if st.0 == 0 {
+                shared.barrier.done.notify_all();
+            }
+            return;
         }
+        let mut st = shared.barrier.state.lock().expect("pool barrier lock");
         st.0 -= 1;
         if st.0 == 0 {
             shared.barrier.done.notify_all();
@@ -295,6 +459,7 @@ mod tests {
         assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 4));
         assert_eq!(pool.epochs(), 4, "one epoch per scatter, threads reused");
         assert_eq!(pool.workers(), 3);
+        assert_eq!(pool.respawns(), 0);
     }
 
     #[test]
@@ -354,17 +519,88 @@ mod tests {
     }
 
     #[test]
-    fn pool_survives_a_panicked_epoch() {
+    fn pool_survives_a_panicked_epoch_and_respawns_workers() {
         let pool = WorkerPool::new(2);
         let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             pool.parallel_for(4, |_| panic!("boom"));
         }));
         assert!(r.is_err());
-        // the barrier reset; the next epoch runs normally
+        // the barrier reset; the next epoch heals the pool and runs normally
         let n = TestCounter::new(0);
         pool.parallel_for(8, |_| {
             n.fetch_add(1, Ordering::SeqCst);
         });
         assert_eq!(n.load(Ordering::SeqCst), 8);
+        // both lanes panicked above, so both workers were replaced
+        assert_eq!(pool.respawns(), 2);
+        assert_eq!(pool.take_respawns(), 2);
+        assert_eq!(pool.take_respawns(), 0, "pending counter drains once");
+        assert_eq!(pool.respawns(), 2, "cumulative counter survives the drain");
+    }
+
+    #[test]
+    fn try_scatter_reports_failed_jobs_and_heals() {
+        let pool = WorkerPool::new(2);
+        let ran = TestCounter::new(0);
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..2)
+            .map(|i| {
+                let ran = &ran;
+                Box::new(move || {
+                    if i == 1 {
+                        panic!("injected");
+                    }
+                    ran.fetch_add(1, Ordering::SeqCst);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        let err = pool.try_scatter(jobs).unwrap_err();
+        assert_eq!(err.epoch, 0);
+        assert_eq!(err.failed_jobs, vec![1]);
+        assert_eq!(ran.load(Ordering::SeqCst), 1, "surviving shard completed");
+        assert!(format!("{err}").contains("epoch 0"));
+        // retry on the healed pool: both jobs complete
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..2)
+            .map(|_| {
+                let ran = &ran;
+                Box::new(move || {
+                    ran.fetch_add(1, Ordering::SeqCst);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.try_scatter(jobs).unwrap();
+        assert_eq!(ran.load(Ordering::SeqCst), 3);
+        assert_eq!(pool.respawns(), 1);
+        assert_eq!(pool.epochs(), 2, "failed epochs still count");
+    }
+
+    #[test]
+    fn dying_worker_abandons_its_queued_jobs_without_hanging() {
+        // 4 jobs on 1 worker... a single worker pool runs jobs inline via
+        // parallel_for, so scatter directly: all 4 jobs queue on worker 0,
+        // job 0 panics, jobs 1..3 are abandoned but the barrier completes.
+        let pool = WorkerPool::new(1);
+        let ran = TestCounter::new(0);
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+            .map(|i| {
+                let ran = &ran;
+                Box::new(move || {
+                    if i == 0 {
+                        panic!("injected");
+                    }
+                    ran.fetch_add(1, Ordering::SeqCst);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        let err = pool.try_scatter(jobs).unwrap_err();
+        assert_eq!(err.failed_jobs, vec![0, 1, 2, 3]);
+        assert_eq!(ran.load(Ordering::SeqCst), 0);
+        // healed pool still works (scatter, not parallel_for: a 1-worker
+        // parallel_for runs inline and would never reach heal())
+        let job: Vec<Box<dyn FnOnce() + Send + '_>> = vec![Box::new(|| {
+            ran.fetch_add(1, Ordering::SeqCst);
+        })];
+        pool.try_scatter(job).unwrap();
+        assert_eq!(ran.load(Ordering::SeqCst), 1);
+        assert_eq!(pool.respawns(), 1);
     }
 }

@@ -123,6 +123,21 @@ impl Args {
         }
     }
 
+    /// The `--faults SPEC` deterministic fault-injection directive;
+    /// empty by default (no injection; the `SPARAMX_FAULTS` env var
+    /// fills in when empty). Panics with the grammar error on a bad
+    /// spec — a mistyped schedule should fail at startup, not silently
+    /// run fault-free.
+    pub fn faults(&self) -> String {
+        if let Some(v) = self.options.get("faults") {
+            if let Err(e) = v.parse::<crate::fault::FaultPlan>() {
+                panic!("--faults={v}: {e}");
+            }
+            return v.clone();
+        }
+        String::new()
+    }
+
     /// Comma-separated list option, e.g. `--cores 8,16,32`.
     pub fn get_list<T: std::str::FromStr>(&self, key: &str, default: &[T]) -> Vec<T>
     where
@@ -242,6 +257,19 @@ mod tests {
     #[should_panic(expected = "unknown max-batch-fuse value")]
     fn max_batch_fuse_flag_rejects_unknown() {
         let _ = parse("run --max-batch-fuse lots").max_batch_fuse();
+    }
+
+    #[test]
+    fn faults_flag_parses_with_empty_default() {
+        assert!(parse("serve").faults().is_empty());
+        let spec = "kernel_fail@backend=amx,call=50";
+        assert_eq!(parse(&format!("serve --faults {spec}")).faults(), spec);
+    }
+
+    #[test]
+    #[should_panic(expected = "--faults=")]
+    fn faults_flag_rejects_bad_grammar() {
+        let _ = parse("serve --faults explode_now").faults();
     }
 
     #[test]

@@ -18,6 +18,8 @@ fn req(id: u64) -> Request {
         max_new_tokens: 1,
         arrived: Instant::now(),
         respond: tx,
+        deadline_ms: None,
+        cancel: Arc::new(std::sync::atomic::AtomicBool::new(false)),
     }
 }
 

@@ -1,0 +1,374 @@
+//! Chaos suite for the fault-tolerant serving stack: deterministic
+//! `SPARAMX_FAULTS` schedules replayed against the real recovery seams.
+//!
+//! What must hold (ISSUE 9 acceptance):
+//! * an injected worker panic heals the pool and the retried epoch is
+//!   **bit-exact** vs. the fault-free run;
+//! * an injected kernel failure is retried on the same backend and the
+//!   engine's served tokens are **bit-exact** vs. the fault-free run;
+//! * repeated kernel failures quarantine the backend and the engine
+//!   recompiles its plan mid-serve with **no token loss**;
+//! * deadline-expired and cancelled slots answer partial results and
+//!   free their KV cache;
+//! * a schedule handed in via the `SPARAMX_FAULTS` env var (the CI
+//!   chaos jobs) completes every admitted request.
+//!
+//! Fault state is process-global, so every test here serializes on one
+//! mutex and clears the installed plan on entry and exit.
+
+use sparamx::amx::EventCounters;
+use sparamx::backend::{Backend, PackedOperand};
+use sparamx::cfg::{EngineChoice, RuntimeConfig};
+use sparamx::coordinator::batcher::AdmissionQueue;
+use sparamx::coordinator::engine::Engine;
+use sparamx::coordinator::request::{Request, Response};
+use sparamx::fault;
+use sparamx::models::tinyforward::{LayerW, TinyModel};
+use sparamx::shard::{NumaTopology, ShardPlan, ShardedOperand, WorkerPool};
+use sparamx::sparse::format::SparseTensor;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex, MutexGuard};
+use std::time::Instant;
+
+/// Serializes every test in this binary: the fault plan, its counters,
+/// and the backend-failure records are process-global, and even an
+/// unarmed engine run drains the global failure records.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn m(v: &AtomicU64) -> u64 {
+    v.load(Ordering::Relaxed)
+}
+
+/// Deterministic synthetic tiny model (same family as the build-time
+/// checkpoint: 2 layers, GQA, byte-level vocab).
+fn toy_model(seed: u64) -> TinyModel {
+    let mut g = sparamx::util::XorShift::new(seed);
+    let (h, inter, heads, kvh, hd, vocab) = (16, 24, 4, 2, 4, 256);
+    let mut mk = |n: usize| g.normal_vec(n, 0.3);
+    TinyModel {
+        hidden: h,
+        inter,
+        heads,
+        kv_heads: kvh,
+        head_dim: hd,
+        vocab,
+        emb: mk(vocab * h),
+        layers: (0..2)
+            .map(|_| LayerW {
+                ln1: vec![1.0; h],
+                wq: mk(h * heads * hd),
+                wk: mk(h * kvh * hd),
+                wv: mk(h * kvh * hd),
+                wo: mk(heads * hd * h),
+                ln2: vec![1.0; h],
+                wgate: mk(h * inter),
+                wup: mk(h * inter),
+                wdown: mk(inter * h),
+            })
+            .collect(),
+        ln_f: vec![1.0; h],
+        lm_head: mk(h * vocab),
+    }
+}
+
+fn native_cfg() -> RuntimeConfig {
+    RuntimeConfig {
+        weight_sparsity: 0.0,
+        k_sparsity: 0.0,
+        v_sparsity: 0.0,
+        max_batch: 4,
+        max_new_tokens: 8,
+        max_ctx: 64,
+        engine: EngineChoice::Auto,
+        ..Default::default()
+    }
+}
+
+/// Admit `prompts` (8 new tokens each), serve to drain, and return the
+/// engine plus one response per prompt in admission order.
+fn serve_prompts(
+    model: TinyModel,
+    cfg: RuntimeConfig,
+    prompts: &[&[u8]],
+    deadline_ms: Option<u64>,
+    cancel_now: bool,
+) -> (Engine, Vec<Response>) {
+    let mut engine = Engine::from_tiny_model(model, cfg).expect("engine");
+    let queue = Arc::new(AdmissionQueue::new(16));
+    let mut rxs = Vec::new();
+    for (i, p) in prompts.iter().enumerate() {
+        let (tx, rx) = mpsc::channel();
+        queue
+            .admit(Request {
+                id: i as u64,
+                prompt: p.to_vec(),
+                max_new_tokens: 8,
+                arrived: Instant::now(),
+                respond: tx,
+                deadline_ms,
+                cancel: Arc::new(AtomicBool::new(cancel_now)),
+            })
+            .expect("admit");
+        rxs.push(rx);
+    }
+    queue.close();
+    engine.run(&queue).expect("engine drains");
+    let resps = rxs
+        .into_iter()
+        .map(|rx| rx.recv().expect("every request answered"))
+        .collect();
+    (engine, resps)
+}
+
+/// The kernel backend a fresh engine would dispatch its LM head through
+/// — the name deterministic fault schedules target. Host-agnostic: the
+/// suite derives it instead of assuming which ISA the registry picked.
+fn selected_backend_name(cfg: &RuntimeConfig) -> String {
+    let probe = Engine::from_tiny_model(toy_model(90), cfg.clone()).expect("probe engine");
+    probe.backend().name().to_string()
+}
+
+/// A 4-shard reference-backed [`ShardedBackend`] over a pre-partitioned
+/// operand (the serving path — no partition-counter tick), plus its
+/// pool and a fixed input.
+fn sharded_ref() -> (Backend, Arc<WorkerPool>, ShardedOperand, Vec<f32>) {
+    let topo = NumaTopology::modeled(1, 8);
+    let pool = Arc::new(WorkerPool::with_topology(4, &topo));
+    let b = Backend::sharded(Backend::reference(), 4, topo, Arc::clone(&pool));
+    let w: Vec<f32> = (0..64 * 64).map(|i| ((i * 31 + 7) % 13) as f32 - 6.0).collect();
+    let sp = SparseTensor::pack_f32(&w, 64, 64);
+    let op = ShardedOperand::from_whole(
+        &PackedOperand::Sparse(sp),
+        ShardPlan::build(64, 4, &topo),
+    );
+    let x: Vec<f32> = (0..64).map(|i| (i % 5) as f32 * 0.25 - 0.5).collect();
+    (b, pool, op, x)
+}
+
+// ---------------------------------------------------------------------
+// Worker-panic recovery on the shard pool (direct seam)
+// ---------------------------------------------------------------------
+
+#[test]
+fn injected_worker_panic_heals_the_pool_bit_exact() {
+    let _g = serial();
+    fault::clear();
+    let (b, pool, op, x) = sharded_ref();
+    let mut ctr = EventCounters::default();
+    let clean = b.gemm_bf16_sharded(&x, 1, &op, &mut ctr);
+    let _ = b.shard_stats(); // drain the baseline epoch
+
+    // the next scatter runs at the pool's current epoch index
+    let epoch = pool.epochs();
+    fault::install(format!("worker_panic@epoch={epoch},shard=1").parse().unwrap());
+    let recovered = b.gemm_bf16_sharded(&x, 1, &op, &mut ctr);
+    assert_eq!(
+        recovered, clean,
+        "healed-pool retry must reproduce the fault-free output exactly"
+    );
+    assert_eq!(fault::injected_count(), 1);
+    let snap = b.shard_stats().expect("sharded backend reports stats");
+    assert_eq!(snap.epoch_retries, 1, "exactly one epoch retry");
+    assert_eq!(pool.respawns(), 1, "the panicked worker was replaced");
+    fault::clear();
+}
+
+#[test]
+fn double_worker_panic_falls_back_to_sequential_bit_exact() {
+    let _g = serial();
+    fault::clear();
+    let (b, pool, op, x) = sharded_ref();
+    let mut ctr = EventCounters::default();
+    let clean = b.gemm_bf16_sharded(&x, 1, &op, &mut ctr);
+    let _ = b.shard_stats();
+
+    // kill shard 0 on the first attempt *and* on the healed-pool retry:
+    // the sequential inline fallback must complete the call
+    let e = pool.epochs();
+    fault::install(
+        format!(
+            "worker_panic@epoch={e},shard=0;worker_panic@epoch={},shard=0",
+            e + 1
+        )
+        .parse()
+        .unwrap(),
+    );
+    let recovered = b.gemm_bf16_sharded(&x, 1, &op, &mut ctr);
+    assert_eq!(
+        recovered, clean,
+        "sequential fallback must reproduce the fault-free output exactly"
+    );
+    assert_eq!(fault::injected_count(), 2);
+    let snap = b.shard_stats().expect("stats");
+    assert_eq!(snap.epoch_retries, 1, "one retry, then the inline rung");
+    fault::clear();
+
+    // the next (unarmed) epoch heals the second dead worker and serves
+    let again = b.gemm_bf16_sharded(&x, 1, &op, &mut ctr);
+    assert_eq!(again, clean);
+    assert_eq!(pool.respawns(), 2, "both panicked workers were replaced");
+}
+
+#[test]
+fn slow_shard_delays_an_epoch_without_changing_output() {
+    let _g = serial();
+    fault::clear();
+    let (b, _pool, op, x) = sharded_ref();
+    let mut ctr = EventCounters::default();
+    let clean = b.gemm_bf16_sharded(&x, 1, &op, &mut ctr);
+
+    fault::install("slow_shard@shard=0,delay_us=200".parse().unwrap());
+    let delayed = b.gemm_bf16_sharded(&x, 1, &op, &mut ctr);
+    assert_eq!(delayed, clean, "a straggling shard must not change the merge");
+    assert!(fault::injected_count() >= 1, "the delay was injected");
+    fault::clear();
+}
+
+// ---------------------------------------------------------------------
+// Kernel-failure recovery through the serving engine
+// ---------------------------------------------------------------------
+
+#[test]
+fn injected_kernel_failure_serves_bit_exact_tokens() {
+    let _g = serial();
+    fault::clear();
+    let cfg = native_cfg();
+    let prompts: &[&[u8]] = &[b"the cat sees "];
+    let (_e0, clean) = serve_prompts(toy_model(91), cfg.clone(), prompts, None, false);
+    assert_eq!(clean[0].tokens.len(), 8);
+
+    // single-shot failure on the engine's own LM-head backend: the
+    // same-backend retry finds the fault spent and recovery is bit-exact
+    let name = selected_backend_name(&cfg);
+    fault::install(
+        format!("kernel_fail@backend={name},call=3").parse().unwrap(),
+    );
+    let (engine, faulty) = serve_prompts(toy_model(91), cfg, prompts, None, false);
+    assert_eq!(
+        faulty[0].tokens, clean[0].tokens,
+        "same-backend retry must reproduce the fault-free tokens exactly"
+    );
+    assert!(faulty[0].partial_reason.is_none());
+    assert_eq!(fault::injected_count(), 1, "the window fired exactly once");
+    assert_eq!(m(&engine.metrics.faults_injected), 1);
+    assert_eq!(m(&engine.metrics.backend_quarantines), 0);
+    assert_eq!(m(&engine.metrics.plan_recompiles), 0);
+    fault::clear();
+}
+
+#[test]
+fn repeated_kernel_failures_quarantine_and_replan_without_token_loss() {
+    let _g = serial();
+    fault::clear();
+    let cfg = native_cfg();
+    let name = selected_backend_name(&cfg);
+    if name == "ref" {
+        eprintln!("skipping: reference backend is never quarantined");
+        return;
+    }
+    // two 2-call windows: each defeats the same-backend retry, records a
+    // failure, and the second record crosses the quarantine threshold
+    fault::install(
+        format!(
+            "kernel_fail@backend={name},call=2,count=2;\
+             kernel_fail@backend={name},call=6,count=2"
+        )
+        .parse()
+        .unwrap(),
+    );
+    let prompts: &[&[u8]] = &[b"the cat ", b"a dog ", b"the queen "];
+    let (engine, resps) = serve_prompts(toy_model(92), cfg, prompts, None, false);
+    for r in &resps {
+        assert_eq!(r.tokens.len(), 8, "request {} lost tokens", r.id);
+        assert!(r.partial_reason.is_none(), "request {} cut short", r.id);
+    }
+    assert_eq!(m(&engine.metrics.tokens_generated), 24, "no step loss");
+    assert_eq!(m(&engine.metrics.backend_quarantines), 1);
+    assert_eq!(m(&engine.metrics.plan_recompiles), 1, "degraded-mode re-plan ran");
+    let registry = engine.registry().expect("native engine exposes its registry");
+    assert!(
+        registry.is_quarantined(&name),
+        "{name} should be quarantined after repeated failures"
+    );
+    assert_eq!(fault::injected_count(), 4, "both windows fired fully");
+    fault::clear();
+}
+
+// ---------------------------------------------------------------------
+// Deadlines and cancellation
+// ---------------------------------------------------------------------
+
+#[test]
+fn deadline_expired_slot_returns_partial_and_frees_kv_cache() {
+    let _g = serial();
+    fault::clear();
+    let prompts: &[&[u8]] = &[b"the cat sees "];
+    let (engine, resps) = serve_prompts(toy_model(93), native_cfg(), prompts, Some(0), false);
+    let r = &resps[0];
+    assert_eq!(r.partial_reason.as_deref(), Some("deadline"));
+    assert!(
+        r.tokens.len() < 8,
+        "an already-expired deadline must cut generation short"
+    );
+    assert_eq!(m(&engine.metrics.deadline_expirations), 1);
+    assert_eq!(engine.active_slots(), 0);
+    assert_eq!(
+        engine.kv_resident_bytes(),
+        0,
+        "a deadline-expired slot must free its KV cache"
+    );
+}
+
+#[test]
+fn cancelled_request_drains_its_slot_with_partial_reason() {
+    let _g = serial();
+    fault::clear();
+    let prompts: &[&[u8]] = &[b"the cat sees "];
+    let (engine, resps) = serve_prompts(toy_model(94), native_cfg(), prompts, None, true);
+    assert_eq!(resps[0].partial_reason.as_deref(), Some("cancelled"));
+    assert!(resps[0].tokens.len() < 8);
+    assert_eq!(engine.active_slots(), 0);
+    assert_eq!(engine.kv_resident_bytes(), 0);
+    assert_eq!(
+        m(&engine.metrics.deadline_expirations),
+        0,
+        "cancellation is not a deadline expiry"
+    );
+}
+
+// ---------------------------------------------------------------------
+// CI env-var replay
+// ---------------------------------------------------------------------
+
+/// Replays whatever schedule the CI chaos job pinned in
+/// `SPARAMX_FAULTS` (no-op when the var is unset): every admitted
+/// request must complete its full token budget — the recovery ladder
+/// (same-backend retry, pool healing, reference fallback, quarantine +
+/// re-plan) guarantees completion for any single valid schedule.
+#[test]
+fn env_pinned_schedule_completes_every_admitted_request() {
+    let _g = serial();
+    fault::clear();
+    let armed = fault::install_str_or_env("").expect("SPARAMX_FAULTS must parse");
+    if !armed {
+        return; // not a chaos job
+    }
+    let prompts: &[&[u8]] =
+        &[b"the cat ", b"a dog ", b"the queen ", b"my robot ", b"one bird "];
+    let (engine, resps) = serve_prompts(toy_model(95), native_cfg(), prompts, None, false);
+    for r in &resps {
+        assert_eq!(r.tokens.len(), 8, "request {} lost tokens under chaos", r.id);
+        assert!(r.partial_reason.is_none(), "request {} cut short", r.id);
+    }
+    assert_eq!(m(&engine.metrics.tokens_generated), 40);
+    assert_eq!(
+        m(&engine.metrics.faults_injected),
+        fault::injected_count(),
+        "stats must report the injected-fault count"
+    );
+    fault::clear();
+}

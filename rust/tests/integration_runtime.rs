@@ -216,6 +216,8 @@ fn engine_serves_batch_of_requests() {
                 max_new_tokens: 8,
                 arrived: Instant::now(),
                 respond: tx,
+                deadline_ms: None,
+                cancel: Arc::new(std::sync::atomic::AtomicBool::new(false)),
             })
             .unwrap();
         rxs.push(rx);
@@ -259,6 +261,8 @@ fn engine_weight_pruning_changes_output_not_stability() {
                 max_new_tokens: 6,
                 arrived: Instant::now(),
                 respond: tx,
+                deadline_ms: None,
+                cancel: Arc::new(std::sync::atomic::AtomicBool::new(false)),
             })
             .unwrap();
         queue.close();

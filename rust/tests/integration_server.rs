@@ -49,6 +49,7 @@ fn tcp_round_trip_with_failure_injection() {
         default_max_tokens: 6,
         metrics: Arc::clone(&engine.metrics),
         engine: engine.describe(),
+        predicted_step_s: engine.predicted_step_s(),
     };
     std::thread::spawn(move || server::serve(listener, ctx));
 

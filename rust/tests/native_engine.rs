@@ -294,6 +294,8 @@ fn engine_serves_batches_through_the_native_path() {
                 max_new_tokens: 8,
                 arrived: Instant::now(),
                 respond: tx,
+                deadline_ms: None,
+                cancel: Arc::new(std::sync::atomic::AtomicBool::new(false)),
             })
             .unwrap();
         rxs.push(rx);
@@ -355,6 +357,8 @@ fn engine_generation_equals_direct_plan_decode() {
             max_new_tokens: 8,
             arrived: Instant::now(),
             respond: tx,
+            deadline_ms: None,
+            cancel: Arc::new(std::sync::atomic::AtomicBool::new(false)),
         })
         .unwrap();
     queue.close();
@@ -377,6 +381,7 @@ fn tcp_server_round_trip_on_the_native_engine_with_stats() {
         default_max_tokens: 6,
         metrics: Arc::clone(&engine.metrics),
         engine: engine.describe(),
+        predicted_step_s: engine.predicted_step_s(),
     };
     std::thread::spawn(move || server::serve(listener, ctx));
 

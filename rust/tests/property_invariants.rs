@@ -162,6 +162,10 @@ fn p6_batcher_no_loss_no_dup_under_concurrency() {
                         max_new_tokens: 1,
                         arrived: std::time::Instant::now(),
                         respond: tx,
+                        deadline_ms: None,
+                        cancel: std::sync::Arc::new(
+                            std::sync::atomic::AtomicBool::new(false),
+                        ),
                     })
                     .expect("capacity is ample");
                 }
