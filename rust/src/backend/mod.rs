@@ -43,7 +43,7 @@ pub use avx::AvxBackend;
 pub use baseline::BaselineBackend;
 pub use caps::CpuCaps;
 pub use reference::RefBackend;
-pub use registry::{BackendRegistry, Selection};
+pub use registry::{BackendRegistry, Selection, PROBATION_PROBES, QUARANTINE_THRESHOLD};
 
 use crate::amx::kernels::DenseWeights;
 use crate::amx::EventCounters;
@@ -589,6 +589,28 @@ impl Backend {
 
     pub fn worker_pool(&self) -> Option<Arc<crate::shard::WorkerPool>> {
         self.0.worker_pool()
+    }
+
+    /// Shadow-probe entry point for quarantine probation: run the dense
+    /// BF16 kernel raw — no fault seam, no retry, no reference fallback
+    /// — and report `None` if it panicked. Probes deliberately bypass
+    /// [`crate::fault::on_kernel_call`] so pinned `kernel_fail` windows
+    /// are never consumed by probation traffic, and their event counters
+    /// are discarded so analytic counter assertions on the serving path
+    /// stay exact. The output is never served: the caller compares it
+    /// against the serving backend's mirror of the same GEMM and feeds
+    /// the verdict to `BackendRegistry::record_probe`.
+    pub fn probe_gemm_bf16(
+        &self,
+        input: &[f32],
+        batch: usize,
+        w: &DenseWeights<Bf16>,
+    ) -> Option<Vec<f32>> {
+        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut tmp = EventCounters::default();
+            self.0.gemm_bf16(input, batch, w, &mut tmp)
+        }))
+        .ok()
     }
 }
 

@@ -21,6 +21,11 @@ use std::sync::Mutex;
 /// [`BackendRegistry::record_failure`]) before a backend is quarantined.
 pub const QUARANTINE_THRESHOLD: u32 = 2;
 
+/// Consecutive clean shadow probes (recorded via
+/// [`BackendRegistry::record_probe`]) before a quarantined backend is
+/// re-admitted to selection. One unclean probe resets the streak.
+pub const PROBATION_PROBES: u32 = 3;
+
 /// Whether `name` — or, for a sharded wrapper, the kernel class it wraps
 /// — is in the quarantined set. Quarantining "amx" also sidelines
 /// "sharded-amx" (same failing kernel class); quarantining
@@ -84,6 +89,14 @@ pub struct BackendRegistry {
     /// reference oracle — the input to degraded-mode re-planning.
     failure_counts: Mutex<BTreeMap<String, u32>>,
     quarantined: Mutex<BTreeSet<String>>,
+    /// Probation state (PR 10): consecutive clean shadow probes per
+    /// quarantined backend. At [`PROBATION_PROBES`] the backend is
+    /// released back into selection and its failure count cleared.
+    probe_streaks: Mutex<BTreeMap<String, u32>>,
+    /// Mirror of `quarantined.len()`, maintained under that lock, so the
+    /// engine's per-step "anything on probation?" check is one relaxed
+    /// atomic load instead of a mutex acquisition on the healthy path.
+    quarantine_count: AtomicU64,
 }
 
 impl BackendRegistry {
@@ -102,6 +115,8 @@ impl BackendRegistry {
             resolutions: AtomicU64::new(0),
             failure_counts: Mutex::new(BTreeMap::new()),
             quarantined: Mutex::new(BTreeSet::new()),
+            probe_streaks: Mutex::new(BTreeMap::new()),
+            quarantine_count: AtomicU64::new(0),
         }
     }
 
@@ -122,7 +137,61 @@ impl BackendRegistry {
             *c += 1;
             *c >= QUARANTINE_THRESHOLD
         };
-        crossed && lock_clean(&self.quarantined).insert(name.to_string())
+        if !crossed {
+            return false;
+        }
+        let mut q = lock_clean(&self.quarantined);
+        let newly = q.insert(name.to_string());
+        if newly {
+            self.quarantine_count.store(q.len() as u64, Ordering::Relaxed);
+            // a fresh quarantine starts probation from zero
+            lock_clean(&self.probe_streaks).remove(name);
+        }
+        newly
+    }
+
+    /// Record the outcome of one shadow probe against a quarantined
+    /// backend. A clean probe (output matched the serving backend)
+    /// extends the streak; an unclean one resets it. Returns `true`
+    /// when this probe completed a [`PROBATION_PROBES`]-long clean
+    /// streak and released the backend — the caller's cue to recompile
+    /// the decode plan exactly once. Release also clears the backend's
+    /// failure count so a later relapse restarts from a clean slate.
+    /// Probes against names that are not quarantined are no-ops.
+    pub fn record_probe(&self, name: &str, clean: bool) -> bool {
+        let mut q = lock_clean(&self.quarantined);
+        if !q.contains(name) {
+            return false;
+        }
+        let mut streaks = lock_clean(&self.probe_streaks);
+        if !clean {
+            streaks.insert(name.to_string(), 0);
+            return false;
+        }
+        let s = streaks.entry(name.to_string()).or_insert(0);
+        *s += 1;
+        if *s < PROBATION_PROBES {
+            return false;
+        }
+        streaks.remove(name);
+        q.remove(name);
+        self.quarantine_count.store(q.len() as u64, Ordering::Relaxed);
+        lock_clean(&self.failure_counts).remove(name);
+        true
+    }
+
+    /// Whether any backend is currently quarantined: one relaxed atomic
+    /// load, so the engine can check every step without touching the
+    /// health-state mutexes on the healthy path.
+    pub fn has_quarantined(&self) -> bool {
+        self.quarantine_count.load(Ordering::Relaxed) > 0
+    }
+
+    /// Fetch a backend by exact name from the inventory (probe path:
+    /// quarantined backends are addressed by the recorded failure name,
+    /// not by kind, so sharded wrappers resolve distinctly).
+    pub fn backend_by_name(&self, name: &str) -> Option<Backend> {
+        self.backends.iter().find(|b| b.name() == name).cloned()
     }
 
     /// Names currently quarantined, in sorted order.
@@ -456,6 +525,56 @@ mod tests {
         assert!(reg.quarantined().is_empty());
         let sel = reg.select(GemmShape::new(1, 512, 512), 0.5, Dtype::Bf16);
         assert_eq!(sel.backend.kind(), BackendKind::Reference);
+    }
+
+    #[test]
+    fn probation_releases_after_n_consecutive_clean_probes() {
+        let reg = BackendRegistry::with_caps(CpuCaps::all());
+        assert!(!reg.has_quarantined());
+        assert!(
+            !reg.record_probe("amx", true),
+            "probing a healthy backend is a no-op"
+        );
+        reg.record_failure("amx");
+        reg.record_failure("amx");
+        assert!(reg.has_quarantined());
+        for i in 0..PROBATION_PROBES - 1 {
+            assert!(!reg.record_probe("amx", true), "probe {i} is below the streak");
+        }
+        assert!(
+            !reg.record_probe("amx", false),
+            "an unclean probe resets the streak"
+        );
+        for _ in 0..PROBATION_PROBES - 1 {
+            assert!(!reg.record_probe("amx", true));
+        }
+        assert!(
+            reg.record_probe("amx", true),
+            "{PROBATION_PROBES} consecutive clean probes release"
+        );
+        assert!(!reg.has_quarantined());
+        assert!(!reg.is_quarantined("amx"));
+        assert!(
+            !reg.record_probe("amx", true),
+            "released — further probes are no-ops"
+        );
+        // release cleared the failure count: a relapse needs the full
+        // threshold again
+        assert!(!reg.record_failure("amx"));
+        assert!(reg.record_failure("amx"));
+        assert!(reg.has_quarantined());
+    }
+
+    #[test]
+    fn backend_by_name_resolves_sharded_wrappers_distinctly() {
+        let topo = crate::shard::NumaTopology::modeled(2, 8);
+        let reg = BackendRegistry::with_caps(CpuCaps::all()).with_shards(4, topo);
+        assert_eq!(reg.backend_by_name("amx").unwrap().name(), "amx");
+        assert_eq!(
+            reg.backend_by_name("sharded-amx").unwrap().name(),
+            "sharded-amx"
+        );
+        assert!(reg.backend_by_name("no-such-backend").is_none());
     }
 
     #[test]

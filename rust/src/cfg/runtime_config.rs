@@ -117,6 +117,15 @@ pub struct RuntimeConfig {
     /// [`crate::fault::FaultPlan`] for the grammar. Empty disables
     /// injection; the `SPARAMX_FAULTS` env var fills in when empty.
     pub faults: String,
+    /// Crash-consistency snapshot path (`--checkpoint` / config
+    /// `"checkpoint"`). Non-empty enables periodic slot checkpointing
+    /// (see [`crate::fault::checkpoint`]) and restore-on-startup from
+    /// the same path. Empty disables both.
+    pub checkpoint: String,
+    /// Decode steps between snapshots (`--checkpoint-every-steps` /
+    /// config `"checkpoint_every_steps"`). Only steps that actually
+    /// advanced a slot count toward the cadence; must be >= 1.
+    pub checkpoint_every_steps: u64,
 }
 
 impl Default for RuntimeConfig {
@@ -139,6 +148,8 @@ impl Default for RuntimeConfig {
             latency_budget_ms: 0.0,
             max_batch_fuse: crate::models::BatchFuseChoice::Auto,
             faults: String::new(),
+            checkpoint: String::new(),
+            checkpoint_every_steps: 16,
         }
     }
 }
@@ -216,6 +227,13 @@ impl RuntimeConfig {
                     }
                 }
                 "faults" => cfg.faults = val.as_str().ok_or("faults: string")?.to_string(),
+                "checkpoint" => {
+                    cfg.checkpoint = val.as_str().ok_or("checkpoint: string")?.to_string()
+                }
+                "checkpoint_every_steps" => {
+                    cfg.checkpoint_every_steps =
+                        val.as_usize().ok_or("checkpoint_every_steps: uint")? as u64
+                }
                 other => return Err(format!("unknown config field '{other}'")),
             }
         }
@@ -264,6 +282,9 @@ impl RuntimeConfig {
             self.faults
                 .parse::<crate::fault::FaultPlan>()
                 .map_err(|e| format!("faults: {e}"))?;
+        }
+        if self.checkpoint_every_steps == 0 {
+            return Err("checkpoint_every_steps must be >= 1".into());
         }
         Ok(())
     }
@@ -373,6 +394,21 @@ mod tests {
         assert!(RuntimeConfig::from_json(r#"{"faults": 3}"#).is_err());
         // empty spec is fine (injection disabled)
         RuntimeConfig::from_json(r#"{"faults": ""}"#).unwrap();
+    }
+
+    #[test]
+    fn parses_checkpoint_settings() {
+        let d = RuntimeConfig::default();
+        assert!(d.checkpoint.is_empty(), "checkpointing is off by default");
+        assert_eq!(d.checkpoint_every_steps, 16);
+        let cfg = RuntimeConfig::from_json(
+            r#"{"checkpoint": "/tmp/snap.spxc", "checkpoint_every_steps": 4}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.checkpoint, "/tmp/snap.spxc");
+        assert_eq!(cfg.checkpoint_every_steps, 4);
+        assert!(RuntimeConfig::from_json(r#"{"checkpoint_every_steps": 0}"#).is_err());
+        assert!(RuntimeConfig::from_json(r#"{"checkpoint": 7}"#).is_err());
     }
 
     #[test]

@@ -92,6 +92,11 @@ impl AdmissionQueue {
     /// Non-blocking admit; rejects when full (backpressure) or when the
     /// request's predicted decode time blows the latency budget.
     pub fn admit(&self, req: Request) -> Result<(), AdmitError> {
+        // Chaos seam (PR 10): an `admit_stall` fault delays *this*
+        // admission before the queue lock is taken, so a stalled
+        // admission can never block co-admitted requests arriving on
+        // other connection threads. Unarmed: one relaxed atomic load.
+        crate::fault::on_admit();
         let mut inner = self.inner.lock().expect("queue lock");
         if inner.closed {
             return Err(AdmitError::Closed);

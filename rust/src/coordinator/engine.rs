@@ -97,6 +97,13 @@ impl Geometry {
 /// refilling every step) would otherwise bounce looped↔fused each step.
 const REGIME_DWELL_STEPS: u32 = 4;
 
+/// Decode steps between shadow-probe rounds while any backend sits in
+/// quarantine (probation, PR 10). Probes are mirrored GEMMs that are
+/// never served, so the cadence only trades release latency against
+/// probe overhead; healthy engines skip the whole path on one relaxed
+/// atomic load.
+const PROBE_EVERY_STEPS: u64 = 4;
+
 /// Hysteresis on the looped↔fused decode-regime pick. The instantaneous
 /// pick (`active > 1 && fused_batch > 1`) is fed in every step; the
 /// regime actually served only flips after [`REGIME_DWELL_STEPS`]
@@ -243,6 +250,12 @@ pub struct Engine {
     /// Dwell-counted looped↔fused regime state (native path; PJRT's
     /// artifact always runs the full batch).
     hysteresis: RegimeHysteresis,
+    /// Productive steps since the last checkpoint write (counts toward
+    /// `cfg.checkpoint_every_steps`; unused when checkpointing is off).
+    ckpt_tick: u64,
+    /// Steps observed while some backend was quarantined (drives the
+    /// [`PROBE_EVERY_STEPS`] probation cadence).
+    probe_tick: u64,
     cfg: RuntimeConfig,
     path: EnginePath,
 }
@@ -336,6 +349,8 @@ impl Engine {
             pools,
             attn_pool,
             hysteresis: RegimeHysteresis::default(),
+            ckpt_tick: 0,
+            probe_tick: 0,
             cfg,
             path: EnginePath::Native(NativePath {
                 model: native,
@@ -399,6 +414,8 @@ impl Engine {
             pools: Vec::new(),
             attn_pool: None,
             hysteresis: RegimeHysteresis::default(),
+            ckpt_tick: 0,
+            probe_tick: 0,
             cfg,
         })
     }
@@ -620,6 +637,7 @@ impl Engine {
             .collect();
         if active.is_empty() {
             self.drain_recovery();
+            self.drive_probation();
             return Ok(0);
         }
         // produce the next token per active slot
@@ -687,6 +705,7 @@ impl Engine {
                 self.finish_slot_with(i, Some("engine_fault".to_string()));
             }
             self.drain_recovery();
+            self.drive_probation();
             return Ok(active.len());
         };
         self.metrics.record_step(dt, &self.step_label);
@@ -727,31 +746,61 @@ impl Engine {
             self.finish_slot(i);
         }
         self.drain_recovery();
+        self.drive_probation();
         Ok(active.len())
     }
 
-    /// Sweep the slots for expired deadlines and disconnected clients:
-    /// each cancelled slot frees its KV cache immediately and answers
-    /// with the partial result decoded so far.
+    /// Sweep the slots for disconnected clients and deadlines *before*
+    /// the step. Deadline-aware pricing (PR 10): the upcoming step is
+    /// priced from the compiled plan ([`Engine::next_step_price_s`]),
+    /// and a slot whose remaining budget cannot cover it is retired now
+    /// instead of one step late — the pricing model is a lower bound,
+    /// so a slot that could still make its deadline is never swept
+    /// early. Each swept slot frees its KV cache immediately and
+    /// answers with the partial result decoded so far.
     fn cancel_expired_slots(&mut self) {
-        let mut expired: Vec<(usize, &'static str)> = Vec::new();
+        let predicted_step_ms = self.next_step_price_s() * 1e3;
+        let mut expired: Vec<(usize, &'static str, bool)> = Vec::new();
         for (i, slot) in self.slots.iter().enumerate() {
             let Some(req) = &slot.req else { continue };
             if req.cancel.load(std::sync::atomic::Ordering::Relaxed) {
-                expired.push((i, "cancelled"));
+                expired.push((i, "cancelled", false));
             } else if let Some(d) = req.deadline_ms {
-                if req.arrived.elapsed().as_millis() as u64 >= d {
-                    expired.push((i, "deadline"));
+                let elapsed = req.arrived.elapsed().as_millis() as u64;
+                if deadline_sweep_due(elapsed, d, predicted_step_ms) {
+                    // preemptive ⇔ swept strictly before the deadline
+                    expired.push((i, "deadline", elapsed < d));
                 }
             }
         }
-        for (i, reason) in expired {
+        for (i, reason, preemptive) in expired {
             if reason == "deadline" {
                 self.metrics
                     .deadline_expirations
                     .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if preemptive {
+                    self.metrics
+                        .preemptive_deadline_sweeps
+                        .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                }
             }
             self.finish_slot_with(i, Some(reason.to_string()));
+        }
+    }
+
+    /// Plan-predicted seconds of the *upcoming* decode step: the
+    /// fused-regime price while the dwell-held regime is fused, the
+    /// batch-1 price otherwise (PJRT: the representative selection).
+    fn next_step_price_s(&self) -> f64 {
+        match &self.path {
+            EnginePath::Native(np) => {
+                if self.hysteresis.current == Some(true) {
+                    np.model.plan.predicted_fused_step_s()
+                } else {
+                    np.model.plan.predicted_step_s()
+                }
+            }
+            EnginePath::Pjrt(_) => self.selection.predicted_s,
         }
     }
 
@@ -862,16 +911,233 @@ impl Engine {
         let _ = req.respond.send(resp); // receiver may have gone away
     }
 
+    /// Quarantine probation (PR 10): while any backend sits in
+    /// quarantine, every [`PROBE_EVERY_STEPS`] steps one small
+    /// deterministic GEMM is mirrored to each quarantined backend and
+    /// compared against the serving backend's output. The probe result
+    /// is never served; [`BackendRegistry::record_probe`] re-admits the
+    /// backend after `PROBATION_PROBES` consecutive clean probes, and a
+    /// release triggers exactly one plan recompile (shared across
+    /// same-round releases). Healthy engines pay one relaxed atomic
+    /// load per step; probes bypass the fault seam so pinned
+    /// `kernel_fail` schedules are never consumed by probation traffic.
+    fn drive_probation(&mut self) {
+        let names = match &self.path {
+            EnginePath::Native(np) if np.registry.has_quarantined() => np.registry.quarantined(),
+            _ => return,
+        };
+        self.probe_tick += 1;
+        if self.probe_tick % PROBE_EVERY_STEPS != 0 {
+            return;
+        }
+        // Fixed synthetic probe operand: deterministic (probe traffic can
+        // never perturb served tokens) and dense (every kernel class
+        // runs it).
+        let mut g = crate::util::XorShift::new(0x5052_4f42);
+        let (rows, cols) = (32, 32);
+        let w = g.normal_vec(rows * cols, 0.5);
+        let dw = crate::amx::kernels::DenseWeights::pack_f32(&w, rows, cols);
+        let x = g.normal_vec(rows, 1.0);
+        let want = self.selection.backend.probe_gemm_bf16(&x, 1, &dw);
+        let EnginePath::Native(np) = &self.path else { return };
+        let mut released = false;
+        for name in names {
+            let Some(b) = np.registry.backend_by_name(&name) else {
+                continue;
+            };
+            self.metrics
+                .probe_calls
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            let got = b.probe_gemm_bf16(&x, 1, &dw);
+            let clean = match (&want, &got) {
+                (Some(w), Some(g)) => probe_outputs_agree(w, g),
+                _ => false, // either side panicked → not a clean probe
+            };
+            if np.registry.record_probe(&name, clean) {
+                released = true;
+                self.metrics
+                    .quarantine_releases
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                log_info!("backend {name} re-admitted after clean probation");
+            }
+        }
+        if released {
+            self.recompile_plan();
+        }
+    }
+
+    /// Capture every active slot into a checkpoint
+    /// [`crate::fault::checkpoint::Snapshot`] (native path; the PJRT
+    /// artifact's monolithic cache is not snapshotted). Only
+    /// backend-agnostic state goes in — token bytes, positions, f32/bf16
+    /// KV segments. Backend selections are never serialized: the
+    /// restoring process compiles its own plan.
+    pub fn snapshot(&self) -> crate::fault::checkpoint::Snapshot {
+        let EnginePath::Native(np) = &self.path else {
+            return crate::fault::checkpoint::Snapshot::default();
+        };
+        let mut slots = Vec::new();
+        for (i, slot) in self.slots.iter().enumerate() {
+            let (Some(req), Some(cache)) = (&slot.req, &np.caches[i]) else {
+                continue;
+            };
+            slots.push(crate::fault::checkpoint::SlotSnapshot {
+                id: req.id,
+                prompt: req.prompt.clone(),
+                max_new_tokens: req.max_new_tokens,
+                generated: slot.generated.clone(),
+                cache_len: slot.cache_len,
+                pos: slot.pos,
+                token: slot.token,
+                decode_time: slot.decode_time,
+                deadline_remaining_ms: req
+                    .deadline_ms
+                    .map(|d| d.saturating_sub(req.arrived.elapsed().as_millis() as u64)),
+                cancelled: req.cancel.load(std::sync::atomic::Ordering::Relaxed),
+                cache: cache.clone(),
+            });
+        }
+        crate::fault::checkpoint::Snapshot { slots }
+    }
+
+    /// Write a slot snapshot when the checkpoint cadence comes due.
+    /// With `--checkpoint` unset this is one string-emptiness check per
+    /// step; armed, serialization still only happens every
+    /// `checkpoint_every_steps` productive steps — never inside the
+    /// token loop itself.
+    fn maybe_checkpoint(&mut self) {
+        if self.cfg.checkpoint.is_empty() {
+            return;
+        }
+        self.ckpt_tick += 1;
+        if self.ckpt_tick < self.cfg.checkpoint_every_steps {
+            return;
+        }
+        self.ckpt_tick = 0;
+        let snap = self.snapshot();
+        match crate::fault::checkpoint::save(&self.cfg.checkpoint, &snap) {
+            Ok(()) => {
+                self.metrics
+                    .checkpoints_written
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            }
+            Err(e) => log_info!("checkpoint write failed: {e}"),
+        }
+    }
+
+    /// Restore in-flight slots from a snapshot file written by a
+    /// previous process. A missing file is a clean cold start; a
+    /// torn/corrupt/incompatible snapshot (or one slot whose geometry
+    /// does not fit this engine) is skipped and counted as
+    /// `restore_rejected` rather than trusted. Restored slots decode on
+    /// *this* process's compiled plan — selections are never restored
+    /// from disk — so continuation is bit-exact whenever the serving
+    /// kernel class matches, even across differing `SPARAMX_CAPS`.
+    ///
+    /// Returns one `(request id, receiver)` pair per restored slot; the
+    /// caller must drain each receiver. The restored slot re-enters the
+    /// normal lifecycle and still leaves the engine in exactly one of
+    /// the four ways (completion / deadline / cancel / engine-fault),
+    /// answering its channel exactly once. Deadlines are re-anchored to
+    /// the restore instant: downtime does not count against a request.
+    pub fn restore_from_file(
+        &mut self,
+        path: &str,
+    ) -> Vec<(u64, std::sync::mpsc::Receiver<Response>)> {
+        use std::sync::atomic::Ordering::Relaxed;
+        if path.is_empty() || !std::path::Path::new(path).exists() {
+            return Vec::new();
+        }
+        let snap = match crate::fault::checkpoint::load(path) {
+            Ok(s) => s,
+            Err(e) => {
+                self.metrics.restore_rejected.fetch_add(1, Relaxed);
+                log_info!("checkpoint restore rejected: {e}");
+                return Vec::new();
+            }
+        };
+        let geo = self.geo;
+        let EnginePath::Native(np) = &mut self.path else {
+            self.metrics.restore_rejected.fetch_add(1, Relaxed);
+            log_info!("checkpoint restore rejected: pjrt path does not restore slots");
+            return Vec::new();
+        };
+        let mut out = Vec::new();
+        for s in snap.slots {
+            let Some(i) = self.slots.iter().position(|sl| !sl.active()) else {
+                self.metrics.restore_rejected.fetch_add(1, Relaxed);
+                log_info!("restore rejected: no free slot for request {}", s.id);
+                continue;
+            };
+            let fits = s.cache.heads.len() == geo.layers
+                && s.cache.kv_heads == geo.kv_heads
+                && s.cache_len < geo.max_ctx
+                && s.cache.heads.iter().flatten().all(|h| h.head_dim == geo.head_dim);
+            if !fits {
+                self.metrics.restore_rejected.fetch_add(1, Relaxed);
+                log_info!("restore rejected: geometry mismatch for request {}", s.id);
+                continue;
+            }
+            let (req, rx) = Request::restored(
+                s.id,
+                s.prompt,
+                s.max_new_tokens,
+                s.deadline_remaining_ms,
+                s.cancelled,
+            );
+            np.caches[i] = Some(s.cache);
+            self.slots[i] = Slot {
+                req: Some(req),
+                generated: s.generated,
+                cache_len: s.cache_len,
+                pos: s.pos,
+                token: s.token,
+                started: Some(Instant::now()),
+                decode_time: s.decode_time,
+            };
+            self.metrics.slots_restored.fetch_add(1, Relaxed);
+            out.push((s.id, rx));
+        }
+        if !out.is_empty() {
+            log_info!("restored {} in-flight slot(s) from {path}", out.len());
+        }
+        out
+    }
+
     /// Serve until the queue closes and all slots drain.
     pub fn run(&mut self, queue: &AdmissionQueue) -> Result<()> {
         loop {
             let keep_going = self.fill_slots(queue)?;
             let processed = self.step()?;
+            if processed > 0 {
+                self.maybe_checkpoint();
+            }
             if !keep_going && processed == 0 {
                 return Ok(());
             }
         }
     }
+}
+
+/// Whether a slot with `elapsed_ms` spent of its `deadline_ms` budget
+/// must be swept before a step predicted to take `predicted_step_ms`:
+/// already expired, or certain to expire mid-step. The prediction is a
+/// lower bound on the true step cost, so a `false` here never strands a
+/// slot that could not have finished in time — it only moves the sweep
+/// one step earlier when expiry is provable.
+fn deadline_sweep_due(elapsed_ms: u64, deadline_ms: u64, predicted_step_ms: f64) -> bool {
+    elapsed_ms >= deadline_ms || elapsed_ms as f64 + predicted_step_ms >= deadline_ms as f64
+}
+
+/// Probe-output agreement: generous elementwise tolerance absorbing
+/// bf16 rounding and accumulation-order differences across kernel
+/// classes. A panicking or garbage-producing backend lands far outside
+/// it; a healthy backend of any class lands far inside.
+fn probe_outputs_agree(a: &[f32], b: &[f32]) -> bool {
+    if a.len() != b.len() {
+        return false;
+    }
+    a.iter().zip(b).all(|(x, y)| (x - y).abs() <= 0.05 * (1.0 + x.abs()))
 }
 
 /// Produce one decode step's tokens on the native path. Free-standing
@@ -1038,5 +1304,31 @@ mod tests {
             }
         }
         assert_eq!(flips, 1, "sustained change flips exactly once");
+    }
+
+    #[test]
+    fn deadline_sweep_prices_the_upcoming_step() {
+        // already expired → due regardless of the step price
+        assert!(deadline_sweep_due(10, 10, 0.0));
+        assert!(deadline_sweep_due(11, 10, 0.0));
+        // in budget and the step fits → not due
+        assert!(!deadline_sweep_due(5, 10, 4.9));
+        // in budget but the step provably cannot finish in time →
+        // preemptive sweep, one step earlier than expiry
+        assert!(deadline_sweep_due(5, 10, 5.0));
+        assert!(deadline_sweep_due(0, 10, 25.0));
+        // zero-deadline requests still expire immediately
+        assert!(deadline_sweep_due(0, 0, 0.0));
+    }
+
+    #[test]
+    fn probe_agreement_tolerates_rounding_not_garbage() {
+        let a = vec![1.0f32, -2.0, 0.5];
+        let mut b = a.clone();
+        b[0] += 0.01; // bf16-scale rounding noise
+        assert!(probe_outputs_agree(&a, &b));
+        b[0] = 7.0;
+        assert!(!probe_outputs_agree(&a, &b), "garbage output disagrees");
+        assert!(!probe_outputs_agree(&a, &a[..2]), "length mismatch disagrees");
     }
 }

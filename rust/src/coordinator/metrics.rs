@@ -112,6 +112,18 @@ pub struct Metrics {
     pub backend_quarantines: AtomicU64,
     pub plan_recompiles: AtomicU64,
     pub deadline_expirations: AtomicU64,
+    /// Crash-consistency and probation counters (PR 10): snapshot files
+    /// written at the checkpoint cadence, in-flight slots restored at
+    /// startup, snapshots rejected (torn/corrupt/incompatible), shadow
+    /// probes routed to quarantined backends, probation releases, and
+    /// deadline sweeps that retired a slot *before* a step the pricing
+    /// model said it could not survive.
+    pub checkpoints_written: AtomicU64,
+    pub slots_restored: AtomicU64,
+    pub restore_rejected: AtomicU64,
+    pub probe_calls: AtomicU64,
+    pub quarantine_releases: AtomicU64,
+    pub preemptive_deadline_sweeps: AtomicU64,
 }
 
 impl Metrics {
@@ -246,6 +258,19 @@ impl Metrics {
                  quarantines={quar} recompiles={recompiles} deadlines={deadlines}"
             ));
         }
+        let ckpts = self.checkpoints_written.load(Ordering::Relaxed);
+        let restored = self.slots_restored.load(Ordering::Relaxed);
+        let rejected = self.restore_rejected.load(Ordering::Relaxed);
+        let probes = self.probe_calls.load(Ordering::Relaxed);
+        let releases = self.quarantine_releases.load(Ordering::Relaxed);
+        let sweeps = self.preemptive_deadline_sweeps.load(Ordering::Relaxed);
+        if ckpts + restored + rejected + probes + releases + sweeps > 0 {
+            line.push_str(&format!(
+                " crash_consistency checkpoints={ckpts} restored={restored} \
+                 restore_rejected={rejected} probes={probes} releases={releases} \
+                 preemptive_sweeps={sweeps}"
+            ));
+        }
         line
     }
 
@@ -374,6 +399,30 @@ impl Metrics {
             (
                 "deadline_expirations",
                 Json::Num(self.deadline_expirations.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "checkpoints_written",
+                Json::Num(self.checkpoints_written.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "slots_restored",
+                Json::Num(self.slots_restored.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "restore_rejected",
+                Json::Num(self.restore_rejected.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "probe_calls",
+                Json::Num(self.probe_calls.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "quarantine_releases",
+                Json::Num(self.quarantine_releases.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "preemptive_deadline_sweeps",
+                Json::Num(self.preemptive_deadline_sweeps.load(Ordering::Relaxed) as f64),
             ),
         ])
     }
@@ -529,5 +578,43 @@ mod tests {
         let r = m.report();
         assert!(r.contains("respawns=2"), "{r}");
         assert!(r.contains("deadlines=4"), "{r}");
+    }
+
+    #[test]
+    fn crash_consistency_counters_surface_in_stats_and_report() {
+        let m = Metrics::new();
+        // engines that never checkpoint/probe keep the line quiet
+        assert!(!m.report().contains("crash_consistency"));
+        let v = Json::parse(&m.stats_json("native").to_string()).unwrap();
+        for key in [
+            "checkpoints_written",
+            "slots_restored",
+            "restore_rejected",
+            "probe_calls",
+            "quarantine_releases",
+            "preemptive_deadline_sweeps",
+        ] {
+            assert_eq!(v.get(key).unwrap().as_usize(), Some(0), "{key}");
+        }
+        m.checkpoints_written.fetch_add(5, Ordering::Relaxed);
+        m.slots_restored.fetch_add(2, Ordering::Relaxed);
+        m.restore_rejected.fetch_add(1, Ordering::Relaxed);
+        m.probe_calls.fetch_add(6, Ordering::Relaxed);
+        m.quarantine_releases.fetch_add(1, Ordering::Relaxed);
+        m.preemptive_deadline_sweeps.fetch_add(3, Ordering::Relaxed);
+        let v = Json::parse(&m.stats_json("native").to_string()).unwrap();
+        assert_eq!(v.get("checkpoints_written").unwrap().as_usize(), Some(5));
+        assert_eq!(v.get("slots_restored").unwrap().as_usize(), Some(2));
+        assert_eq!(v.get("restore_rejected").unwrap().as_usize(), Some(1));
+        assert_eq!(v.get("probe_calls").unwrap().as_usize(), Some(6));
+        assert_eq!(v.get("quarantine_releases").unwrap().as_usize(), Some(1));
+        assert_eq!(
+            v.get("preemptive_deadline_sweeps").unwrap().as_usize(),
+            Some(3)
+        );
+        let r = m.report();
+        assert!(r.contains("checkpoints=5"), "{r}");
+        assert!(r.contains("restore_rejected=1"), "{r}");
+        assert!(r.contains("preemptive_sweeps=3"), "{r}");
     }
 }

@@ -35,6 +35,35 @@ impl Request {
     pub fn cancelled(cancel: &Arc<AtomicBool>) -> bool {
         cancel.load(Ordering::Relaxed)
     }
+
+    /// Rebuild a request from a checkpoint snapshot. The answer channel
+    /// is freshly created — the pre-crash client connection is gone —
+    /// and its receiver is returned for the caller to drain, so the
+    /// restored slot keeps the PR 9 invariant: it leaves the engine in
+    /// exactly one of the four ways (completion / deadline / cancel /
+    /// engine-fault) and answers its channel exactly once. The deadline
+    /// budget is re-anchored to the restore instant (downtime does not
+    /// count against the request), and a pre-crash cancellation is
+    /// honored on the first post-restore sweep.
+    pub fn restored(
+        id: RequestId,
+        prompt: Vec<u8>,
+        max_new_tokens: usize,
+        deadline_remaining_ms: Option<u64>,
+        cancelled: bool,
+    ) -> (Request, mpsc::Receiver<Response>) {
+        let (tx, rx) = mpsc::channel();
+        let req = Request {
+            id,
+            prompt,
+            max_new_tokens,
+            arrived: Instant::now(),
+            respond: tx,
+            deadline_ms: deadline_remaining_ms,
+            cancel: Arc::new(AtomicBool::new(cancelled)),
+        };
+        (req, rx)
+    }
 }
 
 /// The engine's reply.
@@ -89,6 +118,30 @@ mod tests {
             partial_reason: None,
         };
         assert!(r.text().starts_with("hi"));
+    }
+
+    #[test]
+    fn restored_request_reanchors_deadline_and_keeps_identity() {
+        let (req, rx) = Request::restored(9, b"hi".to_vec(), 6, Some(250), false);
+        assert_eq!(req.id, 9);
+        assert_eq!(req.max_new_tokens, 6);
+        assert_eq!(req.deadline_ms, Some(250));
+        assert!(!Request::cancelled(&req.cancel));
+        // the fresh channel answers exactly once
+        req.respond
+            .send(Response {
+                id: 9,
+                tokens: vec![1],
+                total_latency_s: 0.0,
+                queue_latency_s: 0.0,
+                per_token_s: 0.0,
+                partial_reason: None,
+            })
+            .unwrap();
+        assert_eq!(rx.recv().unwrap().id, 9);
+        // a pre-crash cancellation survives the round trip
+        let (req, _rx) = Request::restored(10, Vec::new(), 1, None, true);
+        assert!(Request::cancelled(&req.cancel));
     }
 
     #[test]

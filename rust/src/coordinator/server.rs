@@ -19,6 +19,18 @@
 //! may carry a `deadline_ms`, and a client that disconnects mid-decode
 //! has its slot cancelled (detected by a non-blocking `peek` while the
 //! handler waits on the engine).
+//!
+//! Edge chaos (PR 10): the accept/read/write path is a deterministic
+//! fault seam. Connections are numbered by [`crate::fault::on_client_connect`];
+//! a pinned `slow_client` fault delays that connection's line handling,
+//! a pinned `disconnect` fault truncates the reply crossing a byte
+//! threshold and severs the socket, and the read loop runs a
+//! byte-progress watchdog ([`LINE_DEADLINE`]) so a slow-loris peer
+//! trickling bytes inside the idle timeout still cannot pin its handler
+//! thread. Damage is bounded per connection: co-admitted requests on
+//! other connections are never stalled. Backpressure `retry_after_ms`
+//! hints scale with the live queue depth, so backed-off clients retry
+//! proportionally to actual load.
 
 use super::batcher::{AdmissionQueue, AdmitError};
 use super::metrics::Metrics;
@@ -41,6 +53,21 @@ pub const WRITE_TIMEOUT: Duration = Duration::from_secs(10);
 /// How often the handler probes for client disconnect while waiting on
 /// the engine.
 const DISCONNECT_PROBE: Duration = Duration::from_millis(100);
+
+/// Byte-progress watchdog: ceiling on how long one request line may
+/// take to arrive in full. A slow-loris peer trickling one byte per
+/// [`READ_TIMEOUT`] window would otherwise hold its handler thread
+/// forever while looking alive.
+pub const LINE_DEADLINE: Duration = Duration::from_secs(60);
+
+/// Socket poll granularity while a partial line is pending: short
+/// enough to enforce [`LINE_DEADLINE`] promptly, long enough to cost
+/// nothing against well-behaved clients (which send whole lines).
+const LINE_POLL: Duration = Duration::from_millis(200);
+
+/// Ceiling on one request line's size: a peer streaming an
+/// unterminated line cannot grow the handler's buffer without bound.
+const MAX_LINE_BYTES: usize = 1 << 20;
 
 /// Everything a client handler needs besides its socket.
 pub struct ServerCtx {
@@ -150,7 +177,96 @@ fn is_stats_request(v: &Json) -> bool {
     v.get("stats").and_then(|s| s.as_bool()).unwrap_or(false)
 }
 
+/// Read one `\n`-terminated line under the byte-progress watchdog:
+/// the handler blocks up to [`READ_TIMEOUT`] for a line to *start*,
+/// but once its first byte arrives the whole line must land within
+/// [`LINE_DEADLINE`] — a slow-loris peer trickling one byte per idle
+/// window cannot pin the thread. Returns `None` on EOF, timeout,
+/// oversized line, or I/O error; the caller drops the connection.
+fn read_line_bounded(reader: &mut BufReader<TcpStream>) -> Option<String> {
+    let mut line: Vec<u8> = Vec::new();
+    let mut started: Option<Instant> = None;
+    loop {
+        // idle wait between requests vs. fast poll mid-line
+        let timeout = if started.is_none() {
+            READ_TIMEOUT
+        } else {
+            LINE_POLL
+        };
+        if reader.get_ref().set_read_timeout(Some(timeout)).is_err() {
+            return None;
+        }
+        let buf = match reader.fill_buf() {
+            Ok(b) => b,
+            Err(e) => {
+                let timed_out = matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                );
+                if !timed_out {
+                    return None;
+                }
+                match started {
+                    // peer idle between requests: normal read timeout
+                    None => return None,
+                    Some(t0) if t0.elapsed() >= LINE_DEADLINE => return None,
+                    Some(_) => continue,
+                }
+            }
+        };
+        if buf.is_empty() {
+            return None; // EOF
+        }
+        if started.is_none() {
+            started = Some(Instant::now());
+        }
+        let (consume, done) = match buf.iter().position(|&b| b == b'\n') {
+            Some(nl) => (nl + 1, true),
+            None => (buf.len(), false),
+        };
+        line.extend_from_slice(&buf[..consume]);
+        reader.consume(consume);
+        if done {
+            return Some(String::from_utf8_lossy(&line).into_owned());
+        }
+        if line.len() > MAX_LINE_BYTES {
+            return None;
+        }
+        if started.map(|t0| t0.elapsed() >= LINE_DEADLINE).unwrap_or(false) {
+            return None; // line started but never finished in time
+        }
+    }
+}
+
+/// Write one reply line through the disconnect fault seam. A pinned
+/// `disconnect` fault whose byte threshold this write crosses truncates
+/// the reply mid-line and severs the socket — modeling a peer (or the
+/// path to it) vanishing between two TCP segments. `written` is this
+/// connection's cumulative reply byte counter. Returns `false` when the
+/// connection is done (severed or write error).
+fn write_reply(writer: &mut TcpStream, conn: u64, written: &mut u64, reply: &str) -> bool {
+    let mut payload = Vec::with_capacity(reply.len() + 1);
+    payload.extend_from_slice(reply.as_bytes());
+    payload.push(b'\n');
+    if let Some(cut) = crate::fault::on_client_write(conn, *written, payload.len()) {
+        let cut = cut.min(payload.len());
+        let _ = writer.write_all(&payload[..cut]);
+        let _ = writer.flush();
+        let _ = writer.shutdown(std::net::Shutdown::Both);
+        *written += cut as u64;
+        return false;
+    }
+    if writer.write_all(&payload).is_err() {
+        return false;
+    }
+    *written += payload.len() as u64;
+    true
+}
+
 fn handle_client(stream: TcpStream, ctx: Arc<ServerCtx>) {
+    // number the connection for the deterministic chaos seams; 0 (and
+    // one relaxed load) when no fault plan is armed
+    let conn = crate::fault::on_client_connect();
     let peer = stream
         .peer_addr()
         .map(|a| a.to_string())
@@ -159,12 +275,16 @@ fn handle_client(stream: TcpStream, ctx: Arc<ServerCtx>) {
         Ok(w) => w,
         Err(_) => return,
     };
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let Ok(line) = line else { break };
+    let mut written = 0u64;
+    let mut reader = BufReader::new(stream);
+    while let Some(line) = read_line_bounded(&mut reader) {
         if line.trim().is_empty() {
             continue;
         }
+        // a pinned `slow_client` fault stalls *this* connection's line
+        // here — before any parse or admission — so the damage stays on
+        // this handler thread
+        crate::fault::on_client_line(conn);
         // each line is parsed exactly once, then routed
         let reply = match Json::parse(line.trim()) {
             Err(e) => error_json(&e, None),
@@ -177,9 +297,13 @@ fn handle_client(stream: TcpStream, ctx: Arc<ServerCtx>) {
                         Err(AdmitError::Full) => {
                             ctx.metrics.requests_rejected.fetch_add(1, Ordering::Relaxed);
                             // back off for roughly one request's worth of
-                            // predicted decode time
-                            let hint =
-                                ctx.predicted_step_s * ctx.default_max_tokens as f64 * 1e3;
+                            // predicted decode time, scaled by the queue
+                            // depth already ahead of the retry
+                            let depth = (ctx.queue.depth() + 1) as f64;
+                            let hint = ctx.predicted_step_s
+                                * ctx.default_max_tokens as f64
+                                * depth
+                                * 1e3;
                             error_json("queue full, retry later", Some(hint))
                         }
                         Err(AdmitError::OverBudget) => {
@@ -212,9 +336,7 @@ fn handle_client(stream: TcpStream, ctx: Arc<ServerCtx>) {
                 }
             },
         };
-        if writer.write_all(reply.as_bytes()).is_err()
-            || writer.write_all(b"\n").is_err()
-        {
+        if !write_reply(&mut writer, conn, &mut written, &reply) {
             break;
         }
     }

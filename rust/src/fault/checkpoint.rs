@@ -1,0 +1,489 @@
+//! Crash-consistent slot snapshots: serialize every in-flight decode
+//! slot — request identity, emitted tokens, deadline/cancel state, and
+//! the backend-agnostic KV cache — to a versioned, checksummed file the
+//! engine can restore after a process restart.
+//!
+//! Format (all integers little-endian):
+//!
+//! ```text
+//! magic   4 bytes  "SPXC"
+//! version u32      bumped on any layout change; mismatches are rejected
+//! len     u64      payload byte count
+//! payload len bytes
+//! check   u64      FNV-1a 64 over the payload
+//! ```
+//!
+//! The checksum is what makes restore *crash-consistent*: a snapshot torn
+//! mid-write (or bit-rotted) fails verification and is skipped — the
+//! engine records a `restore_rejected` and starts empty rather than
+//! resuming from corrupt state. [`save`] additionally writes to a
+//! temporary sibling and renames, so a crash during checkpointing never
+//! clobbers the previous good snapshot.
+//!
+//! Only *machine-independent* state is serialized: token bytes, f32/bf16
+//! bit patterns, and the packed sparse segments (whose tile geometry is a
+//! pure function of the element type). Backend selections are
+//! deliberately **not** stored — the restoring process recompiles its
+//! decode plan against its own registry, so a snapshot written on an
+//! AMX machine restores cleanly on an AVX-512-only (or no-ISA) one.
+
+use crate::kvcache::cache::{HeadCache, KvCache};
+use crate::sparse::format::{SparseTensor, TileOrder};
+use crate::util::bf16::Bf16;
+
+/// File magic: SParamX Checkpoint.
+pub const MAGIC: [u8; 4] = *b"SPXC";
+/// Snapshot layout version; bump on any change to the payload encoding.
+pub const VERSION: u32 = 1;
+
+/// One in-flight decode slot, as captured at a step boundary.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SlotSnapshot {
+    /// Original request id (kept across restore for log continuity).
+    pub id: u64,
+    pub prompt: Vec<u8>,
+    pub max_new_tokens: usize,
+    /// Tokens emitted before the snapshot.
+    pub generated: Vec<u8>,
+    /// Cache length the engine tracked for the slot.
+    pub cache_len: usize,
+    /// Next decode position.
+    pub pos: usize,
+    /// Token to feed into the next step.
+    pub token: u8,
+    /// Decode seconds accumulated before the snapshot.
+    pub decode_time: f64,
+    /// Deadline budget left at snapshot time; re-anchored to the restore
+    /// instant (downtime does not count against the request).
+    pub deadline_remaining_ms: Option<u64>,
+    /// Whether cancellation had been requested.
+    pub cancelled: bool,
+    /// The slot's backend-agnostic KV cache.
+    pub cache: KvCache,
+}
+
+/// A whole-engine snapshot: every active slot at one step boundary.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Snapshot {
+    pub slots: Vec<SlotSnapshot>,
+}
+
+/// FNV-1a 64-bit over `bytes` — tiny, dependency-free, and plenty for
+/// torn-write detection (this is integrity, not authentication).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+// ---------------------------------------------------------------------
+// encode
+// ---------------------------------------------------------------------
+
+struct Writer(Vec<u8>);
+
+impl Writer {
+    fn u8(&mut self, v: u8) {
+        self.0.push(v);
+    }
+    fn u32(&mut self, v: u32) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+    fn bytes(&mut self, v: &[u8]) {
+        self.u64(v.len() as u64);
+        self.0.extend_from_slice(v);
+    }
+}
+
+fn encode_sparse(w: &mut Writer, sp: &SparseTensor<Bf16>) {
+    w.u64(sp.rows as u64);
+    w.u64(sp.cols as u64);
+    w.u64(sp.rows_padded as u64);
+    w.u64(sp.cols_padded as u64);
+    w.u64(sp.metadata.len() as u64);
+    for &m in &sp.metadata {
+        w.u64(m);
+    }
+    w.u64(sp.values.len() as u64);
+    for &v in &sp.values {
+        w.0.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    w.u64(sp.tile_nnz_prefix.len() as u64);
+    for &p in &sp.tile_nnz_prefix {
+        w.u32(p);
+    }
+}
+
+fn encode_f32s(w: &mut Writer, xs: &[f32]) {
+    w.u64(xs.len() as u64);
+    for &x in xs {
+        w.u32(x.to_bits());
+    }
+}
+
+fn encode_head(w: &mut Writer, hc: &HeadCache) {
+    w.u64(hc.head_dim as u64);
+    w.u64(hc.n_static as u64);
+    encode_sparse(w, &hc.k_static);
+    encode_sparse(w, &hc.v_static);
+    encode_f32s(w, &hc.k_dyn);
+    encode_f32s(w, &hc.v_dyn);
+}
+
+fn encode_cache(w: &mut Writer, cache: &KvCache) {
+    w.u64(cache.heads.len() as u64);
+    w.u64(cache.kv_heads as u64);
+    for layer in &cache.heads {
+        w.u64(layer.len() as u64);
+        for hc in layer {
+            encode_head(w, hc);
+        }
+    }
+}
+
+fn encode_slot(w: &mut Writer, s: &SlotSnapshot) {
+    w.u64(s.id);
+    w.bytes(&s.prompt);
+    w.u64(s.max_new_tokens as u64);
+    w.bytes(&s.generated);
+    w.u64(s.cache_len as u64);
+    w.u64(s.pos as u64);
+    w.u8(s.token);
+    w.f64(s.decode_time);
+    match s.deadline_remaining_ms {
+        Some(ms) => {
+            w.u8(1);
+            w.u64(ms);
+        }
+        None => w.u8(0),
+    }
+    w.u8(s.cancelled as u8);
+    encode_cache(w, &s.cache);
+}
+
+/// Encode a snapshot into the full file image (header + payload +
+/// checksum).
+pub fn encode(snap: &Snapshot) -> Vec<u8> {
+    let mut payload = Writer(Vec::new());
+    payload.u32(snap.slots.len() as u32);
+    for s in &snap.slots {
+        encode_slot(&mut payload, s);
+    }
+    let payload = payload.0;
+    let mut out = Writer(Vec::with_capacity(payload.len() + 24));
+    out.0.extend_from_slice(&MAGIC);
+    out.u32(VERSION);
+    out.u64(payload.len() as u64);
+    out.0.extend_from_slice(&payload);
+    out.u64(fnv1a64(&payload));
+    out.0
+}
+
+// ---------------------------------------------------------------------
+// decode
+// ---------------------------------------------------------------------
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.pos + n > self.buf.len() {
+            return Err("truncated snapshot payload".to_string());
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+    fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+    fn u16(&mut self) -> Result<u16, String> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f64(&mut self) -> Result<f64, String> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+    fn len(&mut self) -> Result<usize, String> {
+        let n = self.u64()?;
+        // A length can never exceed the bytes left; reject early so a
+        // corrupt length cannot trigger a huge allocation.
+        if n > self.buf.len() as u64 {
+            return Err("snapshot length field exceeds payload".to_string());
+        }
+        Ok(n as usize)
+    }
+    fn bytes(&mut self) -> Result<Vec<u8>, String> {
+        let n = self.len()?;
+        Ok(self.take(n)?.to_vec())
+    }
+}
+
+fn decode_sparse(r: &mut Reader) -> Result<SparseTensor<Bf16>, String> {
+    let rows = r.u64()? as usize;
+    let cols = r.u64()? as usize;
+    let rows_padded = r.u64()? as usize;
+    let cols_padded = r.u64()? as usize;
+    let n_meta = r.len()?;
+    let mut metadata = Vec::with_capacity(n_meta);
+    for _ in 0..n_meta {
+        metadata.push(r.u64()?);
+    }
+    let n_vals = r.len()?;
+    let mut values = Vec::with_capacity(n_vals);
+    for _ in 0..n_vals {
+        values.push(Bf16::from_bits(r.u16()?));
+    }
+    let n_prefix = r.len()?;
+    let mut tile_nnz_prefix = Vec::with_capacity(n_prefix);
+    for _ in 0..n_prefix {
+        tile_nnz_prefix.push(r.u32()?);
+    }
+    Ok(SparseTensor {
+        rows,
+        cols,
+        rows_padded,
+        cols_padded,
+        // Tile geometry is a pure function of the element type — never
+        // machine state — so it is rebuilt, not stored.
+        order: TileOrder::for_elem::<Bf16>(),
+        metadata,
+        values,
+        tile_nnz_prefix,
+    })
+}
+
+fn decode_f32s(r: &mut Reader) -> Result<Vec<f32>, String> {
+    let n = r.len()?;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(f32::from_bits(r.u32()?));
+    }
+    Ok(out)
+}
+
+fn decode_head(r: &mut Reader) -> Result<HeadCache, String> {
+    let head_dim = r.u64()? as usize;
+    let n_static = r.u64()? as usize;
+    let k_static = decode_sparse(r)?;
+    let v_static = decode_sparse(r)?;
+    let k_dyn = decode_f32s(r)?;
+    let v_dyn = decode_f32s(r)?;
+    Ok(HeadCache {
+        k_static,
+        v_static,
+        k_dyn,
+        v_dyn,
+        head_dim,
+        n_static,
+    })
+}
+
+fn decode_cache(r: &mut Reader) -> Result<KvCache, String> {
+    let layers = r.len()?;
+    let kv_heads = r.u64()? as usize;
+    let mut heads = Vec::with_capacity(layers);
+    for _ in 0..layers {
+        let n = r.len()?;
+        let mut layer = Vec::with_capacity(n);
+        for _ in 0..n {
+            layer.push(decode_head(r)?);
+        }
+        heads.push(layer);
+    }
+    Ok(KvCache { heads, kv_heads })
+}
+
+fn decode_slot(r: &mut Reader) -> Result<SlotSnapshot, String> {
+    let id = r.u64()?;
+    let prompt = r.bytes()?;
+    let max_new_tokens = r.u64()? as usize;
+    let generated = r.bytes()?;
+    let cache_len = r.u64()? as usize;
+    let pos = r.u64()? as usize;
+    let token = r.u8()?;
+    let decode_time = r.f64()?;
+    let deadline_remaining_ms = match r.u8()? {
+        0 => None,
+        1 => Some(r.u64()?),
+        b => return Err(format!("snapshot deadline flag must be 0/1, got {b}")),
+    };
+    let cancelled = match r.u8()? {
+        0 => false,
+        1 => true,
+        b => return Err(format!("snapshot cancel flag must be 0/1, got {b}")),
+    };
+    let cache = decode_cache(r)?;
+    Ok(SlotSnapshot {
+        id,
+        prompt,
+        max_new_tokens,
+        generated,
+        cache_len,
+        pos,
+        token,
+        decode_time,
+        deadline_remaining_ms,
+        cancelled,
+        cache,
+    })
+}
+
+/// Decode a full file image, verifying magic, version, and checksum
+/// before touching the payload.
+pub fn decode(bytes: &[u8]) -> Result<Snapshot, String> {
+    if bytes.len() < 16 {
+        return Err("snapshot file shorter than its header".to_string());
+    }
+    if bytes[..4] != MAGIC {
+        return Err("snapshot magic mismatch (not a SparAMX checkpoint)".to_string());
+    }
+    let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+    if version != VERSION {
+        return Err(format!("snapshot version {version} != supported {VERSION}"));
+    }
+    let len = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+    if bytes.len() != 16 + len + 8 {
+        return Err(format!(
+            "snapshot length mismatch: header says {len} payload bytes, file holds {}",
+            bytes.len().saturating_sub(24)
+        ));
+    }
+    let payload = &bytes[16..16 + len];
+    let want = u64::from_le_bytes(bytes[16 + len..].try_into().unwrap());
+    let got = fnv1a64(payload);
+    if got != want {
+        return Err(format!("snapshot checksum mismatch ({got:#x} != {want:#x}) — torn write?"));
+    }
+    let mut r = Reader { buf: payload, pos: 0 };
+    let count = r.u32()? as usize;
+    let mut slots = Vec::with_capacity(count.min(1024));
+    for _ in 0..count {
+        slots.push(decode_slot(&mut r)?);
+    }
+    if r.pos != payload.len() {
+        return Err("snapshot has trailing bytes after the last slot".to_string());
+    }
+    Ok(Snapshot { slots })
+}
+
+/// Write `snap` to `path` atomically: encode, write a temporary sibling,
+/// fsync-free rename. A crash mid-write leaves the previous snapshot (or
+/// a rejectable torn temporary) — never a silently corrupt current file.
+pub fn save(path: &str, snap: &Snapshot) -> Result<(), String> {
+    let bytes = encode(snap);
+    let tmp = format!("{path}.tmp");
+    std::fs::write(&tmp, &bytes).map_err(|e| format!("write {tmp}: {e}"))?;
+    std::fs::rename(&tmp, path).map_err(|e| format!("rename {tmp} -> {path}: {e}"))
+}
+
+/// Load and verify a snapshot from `path`.
+pub fn load(path: &str) -> Result<Snapshot, String> {
+    let bytes = std::fs::read(path).map_err(|e| format!("read {path}: {e}"))?;
+    decode(&bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShift;
+
+    fn sample_snapshot(seed: u64) -> Snapshot {
+        let mut g = XorShift::new(seed);
+        let mut cache = KvCache::from_prefill(2, 2, 8, 4, 0.3, 0.5, |l, h| {
+            let mut gg = XorShift::new(seed * 100 + (l * 10 + h) as u64);
+            (gg.normal_vec(32, 1.0), gg.normal_vec(32, 1.0))
+        });
+        // grow a dynamic tail so both segments round-trip
+        for layer in &mut cache.heads {
+            for hc in layer {
+                hc.append(&g.normal_vec(4, 1.0), &g.normal_vec(4, 1.0));
+            }
+        }
+        Snapshot {
+            slots: vec![SlotSnapshot {
+                id: 42,
+                prompt: b"the cat".to_vec(),
+                max_new_tokens: 8,
+                generated: vec![10, 20, 30],
+                cache_len: 9,
+                pos: 9,
+                token: 30,
+                decode_time: 0.125,
+                deadline_remaining_ms: Some(750),
+                cancelled: false,
+                cache,
+            }],
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_bit_exact() {
+        let snap = sample_snapshot(7);
+        let decoded = decode(&encode(&snap)).expect("decode");
+        assert_eq!(decoded, snap);
+    }
+
+    #[test]
+    fn empty_snapshot_roundtrips() {
+        let snap = Snapshot::default();
+        assert_eq!(decode(&encode(&snap)).unwrap(), snap);
+    }
+
+    #[test]
+    fn save_load_via_file() {
+        let snap = sample_snapshot(8);
+        let path = std::env::temp_dir()
+            .join(format!("sparamx-ckpt-test-{}.bin", std::process::id()))
+            .to_string_lossy()
+            .into_owned();
+        save(&path, &snap).expect("save");
+        let loaded = load(&path).expect("load");
+        std::fs::remove_file(&path).ok();
+        assert_eq!(loaded, snap);
+    }
+
+    #[test]
+    fn corruption_is_detected_by_checksum() {
+        let mut bytes = encode(&sample_snapshot(9));
+        let mid = 16 + (bytes.len() - 24) / 2; // somewhere in the payload
+        bytes[mid] ^= 0x40;
+        let err = decode(&bytes).unwrap_err();
+        assert!(err.contains("checksum"), "{err}");
+    }
+
+    #[test]
+    fn truncation_and_header_damage_are_rejected() {
+        let bytes = encode(&sample_snapshot(10));
+        // torn write: file cut short
+        let err = decode(&bytes[..bytes.len() - 5]).unwrap_err();
+        assert!(err.contains("length mismatch"), "{err}");
+        // wrong magic
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert!(decode(&bad).unwrap_err().contains("magic"));
+        // unsupported version
+        let mut bad = bytes.clone();
+        bad[4] = 99;
+        assert!(decode(&bad).unwrap_err().contains("version"));
+        // sub-header fragment
+        assert!(decode(&bytes[..10]).unwrap_err().contains("header"));
+    }
+}

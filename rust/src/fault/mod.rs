@@ -14,6 +14,9 @@
 //! kernel_fail@backend=amx,call=50        panic the 50th GEMM call on backend "amx" (1-based)
 //! kernel_fail@backend=amx,call=5,count=2 panic calls 5 and 6 (defeats the same-backend retry)
 //! slow_shard@shard=0,delay_us=500        delay shard 0's job by 500us in every pool epoch
+//! slow_client@conn=1,delay_us=200        slow-loris connection 1 (1-based): 200us per line
+//! disconnect@conn=2,after_bytes=10       sever connection 2 after 10 response bytes, once
+//! admit_stall@request=3,delay_us=500     stall the 3rd admission (1-based) by 500us, once
 //! ```
 //!
 //! Every trigger is counter-based — no clocks, no randomness — so a given
@@ -22,6 +25,8 @@
 //! times (once, resp. `count` times), which is what lets the recovery
 //! ladder (same-backend retry, healed-pool epoch retry) restore bit-exact
 //! output: the retry re-runs the identical computation with the fault spent.
+
+pub mod checkpoint;
 
 use std::collections::BTreeMap;
 use std::str::FromStr;
@@ -42,6 +47,16 @@ pub enum FaultSpec {
     KernelFail { backend: String, call: u64, count: u64 },
     /// Sleep `delay_us` before running `shard`'s job, every pool epoch.
     SlowShard { shard: usize, delay_us: u64 },
+    /// Slow-loris the named server connection (1-based accept order):
+    /// sleep `delay_us` before handling every request line it sends.
+    SlowClient { conn: u64, delay_us: u64 },
+    /// Sever the named server connection (1-based accept order) after it
+    /// has been sent `after_bytes` response bytes — mid-line when the
+    /// boundary falls inside a response. Fires at most once.
+    Disconnect { conn: u64, after_bytes: u64 },
+    /// Stall the `request`-th admission (1-based, counted per installed
+    /// plan) by `delay_us` before it reaches the queue, at most once.
+    AdmitStall { request: u64, delay_us: u64 },
 }
 
 /// A parsed fault schedule.
@@ -129,8 +144,33 @@ fn parse_spec(text: &str) -> Result<FaultSpec, String> {
             allow(&["shard", "delay_us"])?;
             Ok(FaultSpec::SlowShard { shard: num("shard")? as usize, delay_us: num("delay_us")? })
         }
+        "slow_client" => {
+            allow(&["conn", "delay_us"])?;
+            let conn = num("conn")?;
+            if conn == 0 {
+                return Err(format!("fault spec `{text}`: `conn` is 1-based, must be >= 1"));
+            }
+            Ok(FaultSpec::SlowClient { conn, delay_us: num("delay_us")? })
+        }
+        "disconnect" => {
+            allow(&["conn", "after_bytes"])?;
+            let conn = num("conn")?;
+            if conn == 0 {
+                return Err(format!("fault spec `{text}`: `conn` is 1-based, must be >= 1"));
+            }
+            Ok(FaultSpec::Disconnect { conn, after_bytes: num("after_bytes")? })
+        }
+        "admit_stall" => {
+            allow(&["request", "delay_us"])?;
+            let request = num("request")?;
+            if request == 0 {
+                return Err(format!("fault spec `{text}`: `request` is 1-based, must be >= 1"));
+            }
+            Ok(FaultSpec::AdmitStall { request, delay_us: num("delay_us")? })
+        }
         other => Err(format!(
-            "unknown fault kind `{other}` (expected worker_panic, kernel_fail, or slow_shard)"
+            "unknown fault kind `{other}` (expected worker_panic, kernel_fail, slow_shard, \
+             slow_client, disconnect, or admit_stall)"
         )),
     }
 }
@@ -144,6 +184,10 @@ struct ArmedPlan {
     fired: Vec<AtomicU64>,
     /// Per-backend GEMM call counters (1-based, per installed plan).
     calls: Mutex<BTreeMap<String, u64>>,
+    /// Server connection counter (1-based accept order, per installed plan).
+    conns: AtomicU64,
+    /// Admission counter (1-based, per installed plan).
+    admits: AtomicU64,
 }
 
 static ARMED: AtomicBool = AtomicBool::new(false);
@@ -164,6 +208,8 @@ pub fn install(plan: FaultPlan) {
     let state = ArmedPlan {
         fired: plan.specs.iter().map(|_| AtomicU64::new(0)).collect(),
         calls: Mutex::new(BTreeMap::new()),
+        conns: AtomicU64::new(0),
+        admits: AtomicU64::new(0),
         plan,
     };
     *lock(&STATE) = Some(Arc::new(state));
@@ -265,6 +311,69 @@ pub fn on_kernel_call(backend: &str) {
     }
 }
 
+/// Server accept seam: called once per accepted connection. Returns the
+/// connection's 1-based id under the installed plan, or 0 when unarmed
+/// (ids are only consulted by the injection hooks below, so an unarmed
+/// server never pays for the counter).
+pub fn on_client_connect() -> u64 {
+    let Some(st) = state() else { return 0 };
+    st.conns.fetch_add(1, Ordering::Relaxed) + 1
+}
+
+/// Server read seam: called once per request line on connection `conn`
+/// (1-based, 0 = unarmed). Sleeps for a matching `slow_client` spec —
+/// the deterministic stand-in for a slow-loris client trickling bytes.
+pub fn on_client_line(conn: u64) {
+    let Some(st) = state() else { return };
+    for spec in &st.plan.specs {
+        if let FaultSpec::SlowClient { conn: c, delay_us } = spec {
+            if *c == conn {
+                INJECTED.fetch_add(1, Ordering::Relaxed);
+                std::thread::sleep(Duration::from_micros(*delay_us));
+            }
+        }
+    }
+}
+
+/// Server write seam: called before writing `len` response bytes to
+/// connection `conn` which has already been sent `written` bytes. When a
+/// matching `disconnect` spec's byte budget is exhausted by this write,
+/// returns `Some(allowed_prefix_len)` — the server writes only that
+/// prefix and severs the connection (mid-line when the boundary falls
+/// inside the response). Fires at most once per spec.
+pub fn on_client_write(conn: u64, written: u64, len: usize) -> Option<usize> {
+    let st = state()?;
+    for (i, spec) in st.plan.specs.iter().enumerate() {
+        if let FaultSpec::Disconnect { conn: c, after_bytes } = spec {
+            if *c == conn
+                && written + len as u64 > *after_bytes
+                && st.fired[i].swap(1, Ordering::Relaxed) == 0
+            {
+                INJECTED.fetch_add(1, Ordering::Relaxed);
+                return Some(after_bytes.saturating_sub(written) as usize);
+            }
+        }
+    }
+    None
+}
+
+/// Admission seam: called once per admission attempt, *before* the queue
+/// lock is taken, so a stalled admission never blocks co-admitted
+/// requests. Sleeps when the 1-based admission counter matches an
+/// `admit_stall` spec; each spec fires at most once.
+pub fn on_admit() {
+    let Some(st) = state() else { return };
+    let n = st.admits.fetch_add(1, Ordering::Relaxed) + 1;
+    for (i, spec) in st.plan.specs.iter().enumerate() {
+        if let FaultSpec::AdmitStall { request, delay_us } = spec {
+            if *request == n && st.fired[i].swap(1, Ordering::Relaxed) == 0 {
+                INJECTED.fetch_add(1, Ordering::Relaxed);
+                std::thread::sleep(Duration::from_micros(*delay_us));
+            }
+        }
+    }
+}
+
 /// Record that `name` failed a GEMM call even after the same-backend
 /// retry (the reference fallback completed the call). The engine drains
 /// these into `BackendRegistry` health state to drive quarantine.
@@ -309,6 +418,23 @@ mod tests {
     }
 
     #[test]
+    fn parses_server_and_admission_kinds() {
+        let plan = FaultPlan::parse(
+            "slow_client@conn=1,delay_us=200; disconnect@conn=2,after_bytes=10; \
+             admit_stall@request=3,delay_us=500",
+        )
+        .unwrap();
+        assert_eq!(
+            plan.specs,
+            vec![
+                FaultSpec::SlowClient { conn: 1, delay_us: 200 },
+                FaultSpec::Disconnect { conn: 2, after_bytes: 10 },
+                FaultSpec::AdmitStall { request: 3, delay_us: 500 },
+            ]
+        );
+    }
+
+    #[test]
     fn empty_and_separator_only_inputs_are_unarmed() {
         assert!(FaultPlan::parse("").unwrap().specs.is_empty());
         assert!(FaultPlan::parse(" ; ;; ").unwrap().specs.is_empty());
@@ -326,6 +452,12 @@ mod tests {
             "kernel_fail@backend=amx,call=1,count=0",
             "kernel_fail@call=1",                    // missing backend
             "slow_shard@shard=0",                    // missing delay_us
+            "slow_client@conn=0,delay_us=1",         // conn is 1-based
+            "slow_client@delay_us=1",                // missing conn
+            "disconnect@conn=0,after_bytes=1",       // conn is 1-based
+            "disconnect@conn=1",                     // missing after_bytes
+            "admit_stall@request=0,delay_us=1",      // request is 1-based
+            "admit_stall@request=1,zzz=2,delay_us=1", // unknown key
             "meteor_strike@shard=0",                 // unknown kind
         ] {
             assert!(FaultPlan::parse(bad).is_err(), "`{bad}` should fail to parse");
@@ -373,6 +505,52 @@ mod tests {
         on_shard_job(1, 97);
         on_shard_job(0, 96);
         assert_eq!(injected_count(), 2);
+        clear();
+    }
+
+    #[test]
+    fn connection_ids_are_one_based_and_zero_when_unarmed() {
+        let _g = serial();
+        clear();
+        assert_eq!(on_client_connect(), 0);
+        install(FaultPlan::parse("slow_client@conn=999979,delay_us=1").unwrap());
+        assert_eq!(on_client_connect(), 1);
+        assert_eq!(on_client_connect(), 2);
+        // Only the named connection is slowed.
+        on_client_line(1);
+        assert_eq!(injected_count(), 0);
+        on_client_line(999_979);
+        on_client_line(999_979);
+        assert_eq!(injected_count(), 2);
+        clear();
+    }
+
+    #[test]
+    fn disconnect_truncates_the_crossing_write_once() {
+        let _g = serial();
+        install(FaultPlan::parse("disconnect@conn=999977,after_bytes=10").unwrap());
+        // Other connections and writes under the budget pass untouched.
+        assert_eq!(on_client_write(1, 0, 100), None);
+        assert_eq!(on_client_write(999_977, 0, 10), None);
+        // The write that crosses byte 10 is truncated to the prefix…
+        assert_eq!(on_client_write(999_977, 6, 8), Some(4));
+        // …and the spec is spent.
+        assert_eq!(on_client_write(999_977, 6, 8), None);
+        assert_eq!(injected_count(), 1);
+        clear();
+    }
+
+    #[test]
+    fn admit_stall_fires_on_the_nth_admission_only() {
+        let _g = serial();
+        install(FaultPlan::parse("admit_stall@request=3,delay_us=1").unwrap());
+        on_admit();
+        on_admit();
+        assert_eq!(injected_count(), 0);
+        on_admit();
+        assert_eq!(injected_count(), 1);
+        on_admit();
+        assert_eq!(injected_count(), 1);
         clear();
     }
 

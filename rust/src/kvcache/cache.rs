@@ -15,7 +15,10 @@ use crate::sparse::prune::magnitude_prune;
 use crate::util::bf16::round_f32;
 
 /// Per-(layer, kv-head) cache: sparse static segment + dense tail.
-#[derive(Clone, Debug)]
+///
+/// `PartialEq` is bit-exact over both segments — the equality the
+/// checkpoint round-trip tests assert.
+#[derive(Clone, Debug, PartialEq)]
 pub struct HeadCache {
     /// Kᵀ of the prefilled context: `head_dim × n_static` (inner dim ×
     /// "neurons"), so QKᵀ maps onto the sparse GEMM directly.
@@ -97,7 +100,7 @@ impl HeadCache {
 }
 
 /// Whole-model cache: `layers × kv_heads` head caches.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct KvCache {
     pub heads: Vec<Vec<HeadCache>>, // [layer][kv_head]
     pub kv_heads: usize,

@@ -34,7 +34,7 @@ fn main() {
         Some("info") => cmd_info(&args),
         _ => {
             eprintln!(
-                "sparamx {} — usage:\n  sparamx serve    [--artifacts DIR] [--port P] [--sparsity S] [--backend {b}] [--engine {e}] [--shards {s}] [--max-batch-fuse {f}] [--latency-budget-ms MS] [--faults SPEC]\n  sparamx generate [--artifacts DIR] [--max-tokens N] [--backend {b}] [--engine {e}] [--shards {s}] [--max-batch-fuse {f}] [--faults SPEC] PROMPT...\n  sparamx eval     [--artifacts DIR] [--sparsity S] [--k-sparsity S] [--v-sparsity S] [--int8-kv] [--backend {b}]\n  sparamx info     [--artifacts DIR] [--cores N] [--model NAME] [--sparsity S] [--shards {s}] [--max-batch-fuse {f}]",
+                "sparamx {} — usage:\n  sparamx serve    [--artifacts DIR] [--port P] [--sparsity S] [--backend {b}] [--engine {e}] [--shards {s}] [--max-batch-fuse {f}] [--latency-budget-ms MS] [--faults SPEC] [--checkpoint PATH] [--checkpoint-every-steps N]\n  sparamx generate [--artifacts DIR] [--max-tokens N] [--backend {b}] [--engine {e}] [--shards {s}] [--max-batch-fuse {f}] [--faults SPEC] PROMPT...\n  sparamx eval     [--artifacts DIR] [--sparsity S] [--k-sparsity S] [--v-sparsity S] [--int8-kv] [--backend {b}]\n  sparamx info     [--artifacts DIR] [--cores N] [--model NAME] [--sparsity S] [--shards {s}] [--max-batch-fuse {f}]",
                 sparamx::VERSION,
                 b = BackendChoice::HELP,
                 e = EngineChoice::HELP,
@@ -72,6 +72,10 @@ fn config_from(args: &Args) -> RuntimeConfig {
     cfg.latency_budget_ms = args.get_parse("latency-budget-ms", cfg.latency_budget_ms);
     if args.options.contains_key("faults") {
         cfg.faults = args.faults();
+    }
+    cfg.checkpoint = args.get("checkpoint", &cfg.checkpoint);
+    if args.options.contains_key("checkpoint-every-steps") {
+        cfg.checkpoint_every_steps = args.checkpoint_every_steps();
     }
     cfg.validate().expect("config");
     cfg
@@ -125,6 +129,22 @@ fn cmd_serve(args: &Args) -> i32 {
         per_token_s: engine.predicted_step_s(),
     });
     let queue = Arc::new(AdmissionQueue::with_budget(cfg.queue_capacity, budget));
+    // crash consistency: re-seat any in-flight slots from the snapshot
+    // (bit-exact resume; the plan is recompiled against *this* host's
+    // registry, never deserialized). The pre-crash client connections
+    // are gone, so each restored answer drains on a detached thread.
+    for (id, rx) in engine.restore_from_file(&cfg.checkpoint) {
+        std::thread::spawn(move || {
+            if let Ok(resp) = rx.recv() {
+                let note = resp
+                    .partial_reason
+                    .as_deref()
+                    .map(|r| format!(" (partial: {r})"))
+                    .unwrap_or_default();
+                eprintln!("restored request {id}: {} tokens{note}", resp.tokens.len());
+            }
+        });
+    }
     let listener =
         std::net::TcpListener::bind(("127.0.0.1", cfg.port)).expect("bind port");
     println!(

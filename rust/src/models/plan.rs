@@ -615,6 +615,27 @@ impl DecodePlan {
         per_layer + self.lm_head.selection.predicted_s
     }
 
+    /// Predicted seconds for one fused multi-slot decode step: same sum
+    /// as [`DecodePlan::predicted_step_s`] but over the fused-regime
+    /// selections, which were priced at `fused_batch` rows. The engine's
+    /// deadline sweep prices the *upcoming* step with whichever of the
+    /// two matches the regime it is about to run.
+    pub fn predicted_fused_step_s(&self) -> f64 {
+        let per_layer: f64 = self
+            .layers
+            .iter()
+            .map(|l| {
+                [
+                    &l.wq, &l.wk, &l.wv, &l.wo, &l.wgate, &l.wup, &l.wdown,
+                ]
+                .iter()
+                .map(|p| p.fused.predicted_s)
+                .sum::<f64>()
+            })
+            .sum();
+        per_layer + self.lm_head.fused.predicted_s
+    }
+
     /// Human-readable plan summary for banners/logs.
     pub fn describe(&self) -> String {
         let head = &self.lm_head;
@@ -1202,6 +1223,41 @@ mod tests {
         let got = plan.predicted_step_s();
         assert!(got > 0.0, "predicted step time must be positive");
         assert!((got - by_hand).abs() < 1e-15, "{got} vs {by_hand}");
+    }
+
+    #[test]
+    fn predicted_fused_step_sums_fused_selections() {
+        let reg = BackendRegistry::with_caps(CpuCaps::all());
+        let model = toy_model();
+        let batches = RegimeBatches {
+            decode_fused: 8,
+            ..RegimeBatches::default()
+        };
+        let plan =
+            DecodePlan::compile_with(&reg, BackendChoice::Auto, &model, 0.5, batches);
+        let by_hand: f64 = plan
+            .layers
+            .iter()
+            .flat_map(|l| {
+                [
+                    l.wq.fused.predicted_s,
+                    l.wk.fused.predicted_s,
+                    l.wv.fused.predicted_s,
+                    l.wo.fused.predicted_s,
+                    l.wgate.fused.predicted_s,
+                    l.wup.fused.predicted_s,
+                    l.wdown.fused.predicted_s,
+                ]
+            })
+            .sum::<f64>()
+            + plan.lm_head.fused.predicted_s;
+        let got = plan.predicted_fused_step_s();
+        assert!(got > 0.0);
+        assert!((got - by_hand).abs() < 1e-15, "{got} vs {by_hand}");
+        assert!(
+            got >= plan.predicted_step_s(),
+            "an 8-row fused step is never priced below a batch-1 step"
+        );
     }
 
     #[test]

@@ -95,7 +95,10 @@ impl TileOrder {
 }
 
 /// A weight matrix in the SparAMX bitmap + values format.
-#[derive(Clone, Debug)]
+///
+/// `PartialEq` compares every stored field bit-for-bit — what the
+/// checkpoint/restore tests use to assert snapshot round-trips are exact.
+#[derive(Clone, Debug, PartialEq)]
 pub struct SparseTensor<T: Element = Bf16> {
     /// Logical (unpadded) inner dimension.
     pub rows: usize,

@@ -138,6 +138,24 @@ impl Args {
         String::new()
     }
 
+    /// The `--checkpoint PATH` crash-consistency directive: non-empty
+    /// enables periodic slot snapshots to PATH plus restore-on-startup
+    /// from the same path. Empty (the default) disables both.
+    pub fn checkpoint(&self) -> String {
+        self.get("checkpoint", "")
+    }
+
+    /// The `--checkpoint-every-steps N` snapshot cadence (default 16
+    /// productive decode steps). Panics on 0 or a malformed value — a
+    /// zero cadence is a config error, not "every step".
+    pub fn checkpoint_every_steps(&self) -> u64 {
+        let n = self.get_parse::<u64>("checkpoint-every-steps", 16);
+        if n == 0 {
+            panic!("--checkpoint-every-steps=0: must be >= 1");
+        }
+        n
+    }
+
     /// Comma-separated list option, e.g. `--cores 8,16,32`.
     pub fn get_list<T: std::str::FromStr>(&self, key: &str, default: &[T]) -> Vec<T>
     where
@@ -270,6 +288,21 @@ mod tests {
     #[should_panic(expected = "--faults=")]
     fn faults_flag_rejects_bad_grammar() {
         let _ = parse("serve --faults explode_now").faults();
+    }
+
+    #[test]
+    fn checkpoint_flags_parse_with_defaults() {
+        assert!(parse("serve").checkpoint().is_empty());
+        assert_eq!(parse("serve").checkpoint_every_steps(), 16);
+        let a = parse("serve --checkpoint /tmp/s.spxc --checkpoint-every-steps 4");
+        assert_eq!(a.checkpoint(), "/tmp/s.spxc");
+        assert_eq!(a.checkpoint_every_steps(), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "must be >= 1")]
+    fn checkpoint_cadence_rejects_zero() {
+        let _ = parse("serve --checkpoint-every-steps 0").checkpoint_every_steps();
     }
 
     #[test]

@@ -1,0 +1,341 @@
+//! Crash-consistency suite: slot checkpoint/restore round trips
+//! (ISSUE 10 acceptance).
+//!
+//! What must hold:
+//! * a run that checkpoints every N steps and is then "restarted" (a
+//!   fresh engine restoring the snapshot file) finishes every in-flight
+//!   request **bit-exact** with zero token loss;
+//! * the same holds when the restoring process sees a *different*
+//!   `SPARAMX_CAPS` capability set — restored plans are compiled on the
+//!   current machine's registry, never deserialized;
+//! * a torn or corrupt snapshot is detected by checksum and skipped
+//!   (`restore_rejected`), never trusted;
+//! * a snapshot whose slot geometry does not fit the restoring engine
+//!   is rejected per slot.
+//!
+//! The caps test mutates process-global env vars and fault state is
+//! process-global, so every test serializes on one mutex.
+
+use sparamx::backend::BackendChoice;
+use sparamx::cfg::{EngineChoice, RuntimeConfig};
+use sparamx::coordinator::batcher::AdmissionQueue;
+use sparamx::coordinator::engine::Engine;
+use sparamx::coordinator::request::{Request, Response};
+use sparamx::fault;
+use sparamx::models::tinyforward::{LayerW, TinyModel};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex, MutexGuard};
+use std::time::Instant;
+
+/// Serializes every test in this binary: the caps test mutates the
+/// process-global `SPARAMX_CAPS` env var, and even an unarmed engine
+/// run drains the global fault records.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn m(v: &AtomicU64) -> u64 {
+    v.load(Ordering::Relaxed)
+}
+
+/// Unique-per-test snapshot path under the system temp dir.
+fn snap_path(tag: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("sparamx_ckpt_{}_{tag}.spxc", std::process::id()))
+        .to_string_lossy()
+        .into_owned()
+}
+
+/// Restore an env var to its pre-test value on drop (panic-safe).
+struct EnvGuard {
+    key: &'static str,
+    saved: Option<String>,
+}
+
+impl EnvGuard {
+    fn set(key: &'static str, val: &str) -> EnvGuard {
+        let saved = std::env::var(key).ok();
+        std::env::set_var(key, val);
+        EnvGuard { key, saved }
+    }
+}
+
+impl Drop for EnvGuard {
+    fn drop(&mut self) {
+        match &self.saved {
+            Some(v) => std::env::set_var(self.key, v),
+            None => std::env::remove_var(self.key),
+        }
+    }
+}
+
+/// Deterministic synthetic tiny model (same family as the build-time
+/// checkpoint: 2 layers, GQA, byte-level vocab).
+fn toy_model(seed: u64) -> TinyModel {
+    let mut g = sparamx::util::XorShift::new(seed);
+    let (h, inter, heads, kvh, hd, vocab) = (16, 24, 4, 2, 4, 256);
+    let mut mk = |n: usize| g.normal_vec(n, 0.3);
+    TinyModel {
+        hidden: h,
+        inter,
+        heads,
+        kv_heads: kvh,
+        head_dim: hd,
+        vocab,
+        emb: mk(vocab * h),
+        layers: (0..2)
+            .map(|_| LayerW {
+                ln1: vec![1.0; h],
+                wq: mk(h * heads * hd),
+                wk: mk(h * kvh * hd),
+                wv: mk(h * kvh * hd),
+                wo: mk(heads * hd * h),
+                ln2: vec![1.0; h],
+                wgate: mk(h * inter),
+                wup: mk(h * inter),
+                wdown: mk(inter * h),
+            })
+            .collect(),
+        ln_f: vec![1.0; h],
+        lm_head: mk(h * vocab),
+    }
+}
+
+fn native_cfg() -> RuntimeConfig {
+    RuntimeConfig {
+        weight_sparsity: 0.0,
+        k_sparsity: 0.0,
+        v_sparsity: 0.0,
+        max_batch: 4,
+        max_new_tokens: 10,
+        max_ctx: 64,
+        engine: EngineChoice::Auto,
+        ..Default::default()
+    }
+}
+
+/// Admit `prompts` (`cfg.max_new_tokens` new tokens each), serve to
+/// drain, and return the engine plus one response per prompt.
+fn serve_prompts(
+    model: TinyModel,
+    cfg: RuntimeConfig,
+    prompts: &[&[u8]],
+) -> (Engine, Vec<Response>) {
+    let max_new_tokens = cfg.max_new_tokens;
+    let mut engine = Engine::from_tiny_model(model, cfg).expect("engine");
+    let queue = Arc::new(AdmissionQueue::new(16));
+    let mut rxs = Vec::new();
+    for (i, p) in prompts.iter().enumerate() {
+        let (tx, rx) = mpsc::channel();
+        queue
+            .admit(Request {
+                id: i as u64,
+                prompt: p.to_vec(),
+                max_new_tokens,
+                arrived: Instant::now(),
+                respond: tx,
+                deadline_ms: None,
+                cancel: Arc::new(AtomicBool::new(false)),
+            })
+            .expect("admit");
+        rxs.push(rx);
+    }
+    queue.close();
+    engine.run(&queue).expect("engine drains");
+    let resps = rxs
+        .into_iter()
+        .map(|rx| rx.recv().expect("every request answered"))
+        .collect();
+    (engine, resps)
+}
+
+/// Restore from `path` into a fresh engine, drain it against a closed
+/// queue, and return the engine plus the restored responses.
+fn restore_and_drain(model: TinyModel, cfg: RuntimeConfig, path: &str) -> (Engine, Vec<Response>) {
+    let mut engine = Engine::from_tiny_model(model, cfg).expect("engine");
+    let restored = engine.restore_from_file(path);
+    let queue = Arc::new(AdmissionQueue::new(4));
+    queue.close();
+    engine.run(&queue).expect("engine drains");
+    let resps = restored
+        .into_iter()
+        .map(|(id, rx)| {
+            let resp = rx.recv().expect("restored slot answers exactly once");
+            assert_eq!(resp.id, id, "restored response keeps its request id");
+            assert!(rx.try_recv().is_err(), "slot {id} answered more than once");
+            resp
+        })
+        .collect();
+    (engine, resps)
+}
+
+// ---------------------------------------------------------------------
+// Bit-exact restart round trip
+// ---------------------------------------------------------------------
+
+#[test]
+fn restart_resumes_in_flight_request_bit_exact() {
+    let _g = serial();
+    fault::clear();
+    let path = snap_path("resume");
+    let _ = std::fs::remove_file(&path);
+    let cfg = native_cfg();
+    let prompts: &[&[u8]] = &[b"the cat sees "];
+
+    // uninterrupted baseline
+    let (_e0, clean) = serve_prompts(toy_model(70), cfg.clone(), prompts);
+    assert_eq!(clean[0].tokens.len(), 10);
+
+    // writer: same run, checkpointing every 4 productive steps — the
+    // final snapshot on disk is the post-step-8 state (8 of 10 tokens)
+    let mut wcfg = cfg.clone();
+    wcfg.checkpoint = path.clone();
+    wcfg.checkpoint_every_steps = 4;
+    let (wengine, wresp) = serve_prompts(toy_model(70), wcfg, prompts);
+    assert_eq!(wresp[0].tokens, clean[0].tokens, "checkpointing must not perturb decode");
+    assert_eq!(m(&wengine.metrics.checkpoints_written), 2, "steps 4 and 8");
+    assert!(std::path::Path::new(&path).exists());
+
+    // "restart": a fresh engine restores the snapshot and finishes the
+    // request — bit-exact, zero token loss, answered exactly once
+    let (rengine, resps) = restore_and_drain(toy_model(70), cfg, &path);
+    assert_eq!(m(&rengine.metrics.slots_restored), 1);
+    assert_eq!(m(&rengine.metrics.restore_rejected), 0);
+    assert_eq!(resps.len(), 1);
+    assert_eq!(
+        resps[0].tokens, clean[0].tokens,
+        "resumed decode must be bit-exact with the uninterrupted run"
+    );
+    assert!(resps[0].partial_reason.is_none());
+    assert_eq!(rengine.active_slots(), 0);
+    assert_eq!(rengine.kv_resident_bytes(), 0, "restored slot frees its KV on exit");
+    let _ = std::fs::remove_file(&path);
+}
+
+// ---------------------------------------------------------------------
+// Cross-capability restore (different SPARAMX_CAPS per "machine")
+// ---------------------------------------------------------------------
+
+#[test]
+fn restore_is_bit_exact_across_differing_caps() {
+    let _g = serial();
+    fault::clear();
+    let path = snap_path("caps");
+    let _ = std::fs::remove_file(&path);
+    // pin the serving kernel class so the writer and the restorer decode
+    // through the same kernel even though their registries differ
+    let mut cfg = native_cfg();
+    cfg.backend = BackendChoice::Amx;
+    let prompts: &[&[u8]] = &[b"a dog runs "];
+
+    // "machine A": full capability set
+    let caps = EnvGuard::set(sparamx::backend::caps::CAPS_ENV, "all");
+    let (_e0, clean) = serve_prompts(toy_model(71), cfg.clone(), prompts);
+    assert_eq!(clean[0].tokens.len(), 10);
+    let mut wcfg = cfg.clone();
+    wcfg.checkpoint = path.clone();
+    wcfg.checkpoint_every_steps = 4;
+    let (wengine, _wresp) = serve_prompts(toy_model(71), wcfg, prompts);
+    assert!(m(&wengine.metrics.checkpoints_written) >= 1);
+    let writer_backends: Vec<String> = wengine
+        .registry()
+        .expect("native engine exposes its registry")
+        .available()
+        .iter()
+        .map(|b| b.name().to_string())
+        .collect();
+
+    // "machine B": AMX-only caps — a genuinely different registry; the
+    // restored plan is compiled here, never read from the snapshot
+    std::env::set_var(sparamx::backend::caps::CAPS_ENV, "amx");
+    let (rengine, resps) = restore_and_drain(toy_model(71), cfg, &path);
+    let restore_backends: Vec<String> = rengine
+        .registry()
+        .expect("native engine exposes its registry")
+        .available()
+        .iter()
+        .map(|b| b.name().to_string())
+        .collect();
+    assert_ne!(
+        writer_backends, restore_backends,
+        "the two machines' registries must actually differ"
+    );
+    assert_eq!(m(&rengine.metrics.slots_restored), 1);
+    assert_eq!(
+        resps[0].tokens, clean[0].tokens,
+        "cross-caps resume must be bit-exact (same pinned kernel class)"
+    );
+    assert!(resps[0].partial_reason.is_none());
+    drop(caps);
+    let _ = std::fs::remove_file(&path);
+}
+
+// ---------------------------------------------------------------------
+// Torn / corrupt / incompatible snapshots
+// ---------------------------------------------------------------------
+
+#[test]
+fn corrupt_or_torn_snapshot_is_rejected_not_trusted() {
+    let _g = serial();
+    fault::clear();
+    let path = snap_path("corrupt");
+    let _ = std::fs::remove_file(&path);
+    let cfg = native_cfg();
+    let mut wcfg = cfg.clone();
+    wcfg.checkpoint = path.clone();
+    wcfg.checkpoint_every_steps = 4;
+    let (_w, _r) = serve_prompts(toy_model(72), wcfg.clone(), &[b"the queen is "]);
+    let pristine = std::fs::read(&path).expect("snapshot written");
+
+    // bit flip in the payload → checksum mismatch → rejected
+    let mut bytes = pristine.clone();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x40;
+    std::fs::write(&path, &bytes).unwrap();
+    let (engine, resps) = restore_and_drain(toy_model(72), cfg.clone(), &path);
+    assert!(resps.is_empty(), "a corrupt snapshot must restore nothing");
+    assert_eq!(m(&engine.metrics.restore_rejected), 1);
+    assert_eq!(m(&engine.metrics.slots_restored), 0);
+    assert_eq!(engine.active_slots(), 0);
+
+    // torn write (truncated file) → rejected
+    std::fs::write(&path, &pristine[..pristine.len() - 5]).unwrap();
+    let (engine, resps) = restore_and_drain(toy_model(72), cfg.clone(), &path);
+    assert!(resps.is_empty(), "a torn snapshot must restore nothing");
+    assert_eq!(m(&engine.metrics.restore_rejected), 1);
+
+    // geometry mismatch: a valid snapshot whose cached positions exceed
+    // the restoring engine's context window is rejected per slot
+    std::fs::write(&path, &pristine).unwrap();
+    let mut small = cfg.clone();
+    small.max_ctx = 8; // snapshot cache_len is ~20 here
+    let (engine, resps) = restore_and_drain(toy_model(72), small, &path);
+    assert!(resps.is_empty(), "an oversized slot must not be restored");
+    assert_eq!(m(&engine.metrics.restore_rejected), 1);
+    assert_eq!(engine.kv_resident_bytes(), 0);
+
+    // the pristine file still restores cleanly (the checks above were
+    // about the data, not the reader)
+    let (engine, resps) = restore_and_drain(toy_model(72), cfg, &path);
+    assert_eq!(resps.len(), 1);
+    assert_eq!(m(&engine.metrics.restore_rejected), 0);
+    let _ = std::fs::remove_file(&path);
+}
+
+// ---------------------------------------------------------------------
+// Missing file is a clean cold start
+// ---------------------------------------------------------------------
+
+#[test]
+fn missing_snapshot_is_a_clean_cold_start() {
+    let _g = serial();
+    fault::clear();
+    let path = snap_path("absent");
+    let _ = std::fs::remove_file(&path);
+    let (engine, resps) = restore_and_drain(toy_model(73), native_cfg(), &path);
+    assert!(resps.is_empty());
+    assert_eq!(m(&engine.metrics.restore_rejected), 0, "absence is not corruption");
+    assert_eq!(m(&engine.metrics.slots_restored), 0);
+}

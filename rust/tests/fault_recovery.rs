@@ -298,6 +298,79 @@ fn repeated_kernel_failures_quarantine_and_replan_without_token_loss() {
     fault::clear();
 }
 
+/// PR 10 probation: after the double-window recipe sidelines the hot
+/// backend, continued fault-free serving on the *same* engine routes a
+/// shadow probe GEMM to it every few steps (mirrored, compared, never
+/// served). Three consecutive clean probes re-admit the backend with
+/// exactly one release recompile — and none of it disturbs serving.
+#[test]
+fn quarantined_backend_is_readmitted_after_clean_probation() {
+    let _g = serial();
+    fault::clear();
+    let cfg = native_cfg();
+    let name = selected_backend_name(&cfg);
+    if name == "ref" {
+        eprintln!("skipping: reference backend is never quarantined");
+        return;
+    }
+    fault::install(
+        format!(
+            "kernel_fail@backend={name},call=2,count=2;\
+             kernel_fail@backend={name},call=6,count=2"
+        )
+        .parse()
+        .unwrap(),
+    );
+    let prompts: &[&[u8]] = &[b"the cat ", b"a dog ", b"the queen "];
+    let (mut engine, _resps) = serve_prompts(toy_model(96), cfg, prompts, None, false);
+    {
+        let registry = engine.registry().expect("native engine exposes its registry");
+        assert!(registry.is_quarantined(&name), "setup: {name} must be quarantined");
+    }
+    assert_eq!(m(&engine.metrics.plan_recompiles), 1, "setup: degraded re-plan");
+    fault::clear(); // probation itself runs fault-free
+
+    // Keep serving on the same engine: probe traffic rides the step
+    // loop, so three light rounds of traffic give probation more than
+    // enough ticks to re-admit the backend.
+    for round in 0..3u64 {
+        let queue = Arc::new(AdmissionQueue::new(16));
+        let mut rxs = Vec::new();
+        for i in 0..2u64 {
+            let (tx, rx) = mpsc::channel();
+            queue
+                .admit(Request {
+                    id: 100 + round * 10 + i,
+                    prompt: b"the cat sees ".to_vec(),
+                    max_new_tokens: 8,
+                    arrived: Instant::now(),
+                    respond: tx,
+                    deadline_ms: None,
+                    cancel: Arc::new(AtomicBool::new(false)),
+                })
+                .expect("admit");
+            rxs.push(rx);
+        }
+        queue.close();
+        engine.run(&queue).expect("engine");
+        for rx in rxs {
+            let r = rx.recv().expect("answered");
+            assert_eq!(r.tokens.len(), 8, "probation must not disturb serving");
+            assert!(r.partial_reason.is_none());
+        }
+    }
+
+    let registry = engine.registry().expect("native engine exposes its registry");
+    assert!(
+        !registry.is_quarantined(&name),
+        "{name} must be re-admitted after three clean probation probes"
+    );
+    assert_eq!(m(&engine.metrics.quarantine_releases), 1);
+    assert!(m(&engine.metrics.probe_calls) >= 3, "at least three shadow probes ran");
+    assert_eq!(m(&engine.metrics.plan_recompiles), 2, "exactly one recompile on release");
+    assert_eq!(engine.kv_resident_bytes(), 0);
+}
+
 // ---------------------------------------------------------------------
 // Deadlines and cancellation
 // ---------------------------------------------------------------------

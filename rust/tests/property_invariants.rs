@@ -9,6 +9,8 @@
 //!  P5  magnitude pruning: exact count, keeps max, subset monotonicity
 //!  P6  batcher: FIFO, no loss, no duplication under concurrency
 //!  P7  attention: softmax-weighted output stays in the convex hull of V
+//!  P8  engine: random admit/cancel/deadline/fault/checkpoint-restore
+//!      schedules — every slot answers exactly once and frees its KV
 
 use sparamx::amx::kernels::{DenseWeights, GemmCounters};
 use sparamx::backend::{Backend, RefBackend};
@@ -180,6 +182,129 @@ fn p6_batcher_no_loss_no_dup_under_concurrency() {
         }
     }
     assert_eq!(seen.len() as u64, producers * per, "requests lost");
+}
+
+#[test]
+fn p8_random_schedules_answer_every_slot_exactly_once() {
+    use sparamx::cfg::{EngineChoice, RuntimeConfig};
+    use sparamx::coordinator::engine::Engine;
+    use sparamx::models::tinyforward::{LayerW, TinyModel};
+    use std::sync::atomic::AtomicBool;
+    use std::sync::{mpsc, Arc};
+    use std::time::Instant;
+
+    fn toy(seed: u64) -> TinyModel {
+        let mut g = XorShift::new(seed);
+        let (h, inter, heads, kvh, hd, vocab) = (16, 24, 4, 2, 4, 256);
+        let mut mk = |n: usize| g.normal_vec(n, 0.3);
+        TinyModel {
+            hidden: h,
+            inter,
+            heads,
+            kv_heads: kvh,
+            head_dim: hd,
+            vocab,
+            emb: mk(vocab * h),
+            layers: (0..2)
+                .map(|_| LayerW {
+                    ln1: vec![1.0; h],
+                    wq: mk(h * heads * hd),
+                    wk: mk(h * kvh * hd),
+                    wv: mk(h * kvh * hd),
+                    wo: mk(heads * hd * h),
+                    ln2: vec![1.0; h],
+                    wgate: mk(h * inter),
+                    wup: mk(h * inter),
+                    wdown: mk(inter * h),
+                })
+                .collect(),
+            ln_f: vec![1.0; h],
+            lm_head: mk(h * vocab),
+        }
+    }
+
+    let mut g = XorShift::new(1008);
+    for case in 0..6u64 {
+        sparamx::fault::clear();
+        // only the admission seam: kernel faults are process-global and
+        // would perturb the kernel property tests running concurrently
+        if g.below(2) == 0 {
+            let req = 1 + g.below(4);
+            sparamx::fault::install(
+                format!("admit_stall@request={req},delay_us=500").parse().unwrap(),
+            );
+        }
+        let path = std::env::temp_dir()
+            .join(format!("sparamx_p8_{}_{case}.spxc", std::process::id()));
+        let cfg = RuntimeConfig {
+            weight_sparsity: 0.0,
+            k_sparsity: 0.0,
+            v_sparsity: 0.0,
+            max_batch: 2 + g.below(3),
+            max_new_tokens: 4,
+            max_ctx: 48,
+            engine: EngineChoice::Auto,
+            checkpoint: path.to_string_lossy().into_owned(),
+            checkpoint_every_steps: 1 + g.below(4) as u64,
+            ..Default::default()
+        };
+        let mut engine = Engine::from_tiny_model(toy(1100 + case), cfg.clone()).expect("engine");
+        let queue = Arc::new(AdmissionQueue::new(64));
+        let n = 3 + g.below(5);
+        let mut rxs = Vec::new();
+        for i in 0..n {
+            let (tx, rx) = mpsc::channel();
+            let deadline_ms = match g.below(4) {
+                0 => Some(0),
+                1 => Some(60_000),
+                _ => None,
+            };
+            // non-empty: the native prefill needs at least one byte
+            let len = 1 + g.below(12);
+            let prompt: Vec<u8> = (0..len).map(|_| b'a' + g.below(26) as u8).collect();
+            queue
+                .admit(Request {
+                    id: i as u64,
+                    prompt,
+                    max_new_tokens: 4,
+                    arrived: Instant::now(),
+                    respond: tx,
+                    deadline_ms,
+                    cancel: Arc::new(AtomicBool::new(g.below(4) == 0)),
+                })
+                .expect("capacity is ample");
+            rxs.push(rx);
+        }
+        queue.close();
+        engine.run(&queue).expect("engine drains");
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let r = rx
+                .recv()
+                .unwrap_or_else(|_| panic!("case {case}: slot {i} never answered"));
+            assert_eq!(r.id, i as u64, "case {case}");
+            assert!(rx.try_recv().is_err(), "case {case}: slot {i} answered twice");
+        }
+        assert_eq!(engine.active_slots(), 0, "case {case}");
+        assert_eq!(engine.kv_resident_bytes(), 0, "case {case}: KV leak");
+
+        // restore leg: whatever the last checkpoint froze mid-flight
+        // must drain on a fresh engine, again answering exactly once
+        let mut fresh = Engine::from_tiny_model(toy(1100 + case), cfg.clone()).expect("engine");
+        let receivers = fresh.restore_from_file(&cfg.checkpoint);
+        let empty = Arc::new(AdmissionQueue::new(1));
+        empty.close();
+        fresh.run(&empty).expect("restored engine drains");
+        for (id, rx) in receivers {
+            let r = rx
+                .recv()
+                .unwrap_or_else(|_| panic!("case {case}: restored {id} unanswered"));
+            assert_eq!(r.id, id, "case {case}");
+            assert!(rx.try_recv().is_err(), "case {case}: restored {id} answered twice");
+        }
+        assert_eq!(fresh.kv_resident_bytes(), 0, "case {case}: restored KV leak");
+        sparamx::fault::clear();
+        let _ = std::fs::remove_file(&cfg.checkpoint);
+    }
 }
 
 #[test]
